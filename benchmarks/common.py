@@ -1,0 +1,43 @@
+"""Shared benchmark fixtures: dataset, ground truth, timing, CSV rows."""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.synthetic import embedding_dataset
+from repro.index import metrics as MET
+
+D = 96
+N = 20_000
+NQ = 200
+
+
+@functools.lru_cache(maxsize=None)
+def dataset(d: int = D, n: int = N, nq: int = NQ):
+    key = jax.random.PRNGKey(1234)
+    kx, kq = jax.random.split(key)
+    X = embedding_dataset(kx, n, d)
+    Qm = embedding_dataset(kq, nq, d)
+    gt = MET.exact_topk(Qm, X, k=10)[1]
+    return X, Qm, gt
+
+
+def timed(fn, *args, repeats: int = 3, **kw):
+    """(result, us_per_call) with one warmup."""
+    out = jax.block_until_ready(fn(*args, **kw))
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = jax.block_until_ready(fn(*args, **kw))
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6
+
+
+def row(name: str, us: float, derived) -> str:
+    return f"{name},{us:.1f},{derived}"
+
+
+def recall10(ids, gt, R: int = 10) -> float:
+    return float(MET.recall_at(ids[:, :R], gt))

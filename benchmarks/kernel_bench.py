@@ -1,0 +1,58 @@
+"""Scoring-path microbenchmarks (CPU wall-clock; TPU numbers come from
+the roofline analysis — kernels only interpret on CPU).
+
+Contrasts the ASH matmul-style scoring against PQ's gather-style ADC —
+the Table 2/3 comparison transplanted to this backend — plus the packed
+-code memory footprint that drives the TPU HBM roofline term.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import D, dataset, row, timed
+from repro.baselines import pq
+from repro.core import ASHConfig, encode, prepare_queries, train
+from repro.core import scoring as S
+from repro.kernels import ops
+
+
+def scoring_paths():
+    X, Qm, _ = dataset()
+    rows = []
+    cfg = ASHConfig(b=2, d=D, n_landmarks=16)
+    model, _ = train(jax.random.PRNGKey(0), X, cfg)
+    pay = encode(model, X)
+    prep = prepare_queries(model, Qm)
+
+    _, us = timed(S.score_dot, model, prep, pay, repeats=3)
+    n_scores = Qm.shape[0] * X.shape[0]
+    rows.append(row("kernel/ash_score_jnp", us,
+                    f"ns_per_dot={1e3 * us / n_scores:.3f}"))
+
+    _, us = timed(
+        lambda: ops.ash_score(model, prep, pay, use_pallas=False),
+        repeats=3,
+    )
+    rows.append(row("kernel/ash_score_ref", us,
+                    f"ns_per_dot={1e3 * us / n_scores:.3f}"))
+
+    st = pq.train(jax.random.PRNGKey(0), X, M=12, b=8, kmeans_iters=10)
+    enc = pq.encode(st, X)
+    _, us = timed(pq.score, st, enc, Qm, repeats=3)
+    rows.append(row("kernel/pq_adc_gather", us,
+                    f"ns_per_dot={1e3 * us / n_scores:.3f}"))
+
+    # payload footprint: packed codes vs fp32 vectors
+    fp32 = X.size * 4
+    packed = (
+        pay.codes.size * 4 + pay.scale.size * 2 + pay.offset.size * 2
+        + pay.cluster.size * 1
+    )
+    rows.append(row("kernel/payload_bytes", 0.0,
+                    f"fp32={fp32};ash={packed};"
+                    f"compression={fp32 / packed:.1f}x"))
+    return rows
+
+
+ALL = [scoring_paths]

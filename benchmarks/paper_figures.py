@@ -1,0 +1,232 @@
+"""One function per paper table/figure (Figs. 1-9, Tables 6-7).
+
+Each returns CSV rows ``name,us_per_call,derived`` where derived carries
+the figure's metric (recall, loss, bias slope, ...).  Sizes are scaled
+to this CPU container; the paper's qualitative orderings are asserted in
+tests/test_paper_claims.py.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import D, dataset, recall10, row, timed
+from repro.baselines import eden, leanvec, lopq, pq, rabitq
+from repro.core import (
+    ASHConfig, encode, prepare_queries, random_model, score_dot, train,
+)
+from repro.core import learning as L
+from repro.core import scoring as S
+from repro.core.ash import reconstruction_error
+from repro.index import flat, ivf
+from repro.index import metrics as MET
+
+
+def _search_recall(model, X, Qm, gt, R=10):
+    pay = encode(model, X)
+    prep = prepare_queries(model, Qm)
+    sc = score_dot(model, prep, pay)
+    ids = jax.lax.top_k(sc, R)[1]
+    return recall10(ids, gt, R)
+
+
+def fig1_learned_vs_random():
+    """Learned W vs JL-random W across (B, b) — recall@10."""
+    X, Qm, gt = dataset()
+    rows = []
+    for B in (D, D // 2):
+        for b in (1, 2, 4):
+            d = B // b
+            if d < 8 or d > D:
+                continue
+            cfg = ASHConfig(b=b, d=d, n_landmarks=1)
+            t0 = time.perf_counter()
+            m_l, _ = train(jax.random.PRNGKey(0), X, cfg)
+            tr_us = (time.perf_counter() - t0) * 1e6
+            m_r = random_model(jax.random.PRNGKey(0), D, cfg,
+                               X_for_landmarks=X)
+            r_l = _search_recall(m_l, X, Qm, gt)
+            r_r = _search_recall(m_r, X, Qm, gt)
+            rows.append(row(
+                f"fig1/B{B}_b{b}_learned", tr_us, f"recall@10={r_l:.4f}"
+            ))
+            rows.append(row(
+                f"fig1/B{B}_b{b}_random", 0.0, f"recall@10={r_r:.4f}"
+            ))
+    return rows
+
+
+def fig2_convergence():
+    """ITQ iteration count + final loss vs the RaBitQ bound (Eq. 33)."""
+    X, _, _ = dataset()
+    t0 = time.perf_counter()
+    model, hist = train(jax.random.PRNGKey(0), X,
+                        ASHConfig(b=1, d=D, n_landmarks=1))
+    us = (time.perf_counter() - t0) * 1e6
+    bound = float(rabitq.expected_dot_1bit(D))
+    # loss is -E[cosSim]; learned should beat the random-rotation bound
+    final = -hist[-1]
+    return [
+        row("fig2/itq_iters", us, f"iters={len(hist)}"),
+        row("fig2/final_cos", 0.0,
+            f"learned={final:.4f};rabitq_bound={bound:.4f};"
+            f"beats_bound={final > bound}"),
+    ]
+
+
+def fig3_landmarks():
+    X, Qm, gt = dataset()
+    rows = []
+    for C in (1, 16, 64):
+        cfg = ASHConfig(b=2, d=D // 2, n_landmarks=C)
+        (model, _), us = timed(
+            lambda: train(jax.random.PRNGKey(0), X, cfg), repeats=1
+        )
+        r = _search_recall(model, X, Qm, gt)
+        rows.append(row(f"fig3/C{C}", us, f"recall@10={r:.4f}"))
+    return rows
+
+
+def fig4_bias():
+    X, Qm, gt = dataset()
+    rows = []
+    for b in (1, 2, 4):
+        cfg = ASHConfig(b=b, d=D, n_landmarks=1, store_fp16=False)
+        model, _ = train(jax.random.PRNGKey(0), X, cfg)
+        pay = encode(model, X)
+        m2, us = timed(
+            lambda: S.fit_bias(model, pay, X, Qm, sample=100), repeats=1
+        )
+        rows.append(row(
+            f"fig4/b{b}", us,
+            f"rho={float(m2.bias_rho):.4f};beta={float(m2.bias_beta):.4f}"
+        ))
+    return rows
+
+
+def tab6_query_precision():
+    """bf16 query downcast: recall delta (paper: ~1e-5 for fp16)."""
+    X, Qm, gt = dataset()
+    rows = []
+    for b in (1, 2):
+        cfg = ASHConfig(b=b, d=D, n_landmarks=16)
+        model, _ = train(jax.random.PRNGKey(0), X, cfg)
+        pay = encode(model, X)
+        prep = prepare_queries(model, Qm)
+        ids32 = jax.lax.top_k(score_dot(model, prep, pay), 10)[1]
+        prep_lo = jax.tree_util.tree_map(
+            lambda a: a.astype(jnp.bfloat16).astype(jnp.float32), prep
+        )
+        (sc_lo), us = timed(score_dot, model, prep_lo, pay, repeats=1)
+        ids_lo = jax.lax.top_k(sc_lo, 10)[1]
+        d32 = recall10(ids32, gt)
+        dlo = recall10(ids_lo, gt)
+        rows.append(row(
+            f"tab6/b{b}", us,
+            f"recall_fp32={d32:.4f};recall_bf16={dlo:.4f};"
+            f"delta={abs(d32 - dlo):.5f}"
+        ))
+    return rows
+
+
+def fig5678_baselines():
+    """Iso-bit accuracy: ASH vs PQ/LOPQ/EDEN/TQ/LeanVec/RaBitQ."""
+    X, Qm, gt = dataset()
+    rows = []
+    true = Qm @ X.T
+    gt10 = gt
+
+    def recall_of(scores):
+        ids = jax.lax.top_k(scores, 10)[1]
+        return recall10(ids, gt10)
+
+    # budget ~ 2 bits/dim (B = 2D = 192 code bits)
+    for b_, d_, tag in ((2, D, "ash_b2_dD"), (4, D // 2, "ash_b4_dD2")):
+        cfg = ASHConfig(b=b_, d=d_, n_landmarks=16)
+        (model, _), us = timed(
+            lambda: train(jax.random.PRNGKey(0), X, cfg), repeats=1
+        )
+        pay = encode(model, X)
+        prep = prepare_queries(model, Qm)
+        sc, sus = timed(score_dot, model, prep, pay, repeats=2)
+        rows.append(row(f"fig5678/{tag}", sus,
+                        f"recall@10={recall_of(sc):.4f};train_us={us:.0f}"))
+
+    st = pq.train(jax.random.PRNGKey(0), X, M=24, b=8, kmeans_iters=15)
+    enc = pq.encode(st, X)
+    sc, sus = timed(pq.score, st, enc, Qm, repeats=2)
+    rows.append(row("fig5678/pq_M24x8", sus,
+                    f"recall@10={recall_of(sc):.4f}"))
+
+    st = lopq.train(jax.random.PRNGKey(0), X, M=24, b=8, C=4,
+                    local_iters=2, kmeans_iters=10)
+    enc = lopq.encode(st, X)
+    sc, sus = timed(lopq.score, st, enc, Qm, repeats=1)
+    rows.append(row("fig5678/lopq_M24x8_C4", sus,
+                    f"recall@10={recall_of(sc):.4f}"))
+
+    for variant in ("eden", "turboquant"):
+        st = eden.train(jax.random.PRNGKey(0), X, b=2, variant=variant)
+        enc = eden.encode(st, X)
+        sc, sus = timed(eden.score, st, enc, Qm, repeats=2)
+        rows.append(row(f"fig5678/{variant}_b2", sus,
+                        f"recall@10={recall_of(sc):.4f}"))
+
+    st = leanvec.train(jax.random.PRNGKey(0), X, d=D // 2, b=4)
+    enc = leanvec.encode(st, X)
+    sc, sus = timed(leanvec.score, st, enc, Qm, repeats=2)
+    rows.append(row("fig5678/leanvec_d48_b4", sus,
+                    f"recall@10={recall_of(sc):.4f}"))
+
+    m = rabitq.train(jax.random.PRNGKey(0), X, b=2)
+    enc = rabitq.encode(m, X)
+    sc, sus = timed(rabitq.score, m, enc, Qm, repeats=2)
+    rows.append(row("fig5678/rabitq_b2", sus,
+                    f"recall@10={recall_of(sc):.4f}"))
+    return rows
+
+
+def fig9_pareto():
+    """IVF QPS-vs-recall sweep (CPU proxy of the paper's Fig. 9)."""
+    X, Qm, gt = dataset()
+    rows = []
+    for b, dd in ((2, D // 2), (4, D // 2)):
+        cfg = ASHConfig(b=b, d=dd, n_landmarks=64)
+        index = ivf.build(jax.random.PRNGKey(0), X, cfg)
+        for nprobe in (2, 8, 32):
+            (sc, ids), us = timed(
+                ivf.search, index, Qm, 10, nprobe, repeats=2
+            )
+            qps = 1e6 * Qm.shape[0] / us
+            rows.append(row(
+                f"fig9/ash_b{b}_d{dd}_np{nprobe}", us / Qm.shape[0],
+                f"recall@10={recall10(ids, gt):.4f};qps={qps:.0f}"
+            ))
+    return rows
+
+
+def tab7_timing():
+    """Training + encoding wall-time across (b, d) — Table 7."""
+    X, _, _ = dataset()
+    rows = []
+    for b in (1, 2, 4):
+        for dd in (D // 2, D):
+            cfg = ASHConfig(b=b, d=dd, n_landmarks=32)
+            t0 = time.perf_counter()
+            model, hist = train(jax.random.PRNGKey(0), X, cfg)
+            tr = time.perf_counter() - t0
+            _, enc_us = timed(encode, model, X, repeats=1)
+            rows.append(row(
+                f"tab7/b{b}_d{dd}", enc_us,
+                f"train_s={tr:.2f};encode_s={enc_us/1e6:.2f};"
+                f"iters={len(hist)}"
+            ))
+    return rows
+
+
+ALL = [
+    fig1_learned_vs_random, fig2_convergence, fig3_landmarks, fig4_bias,
+    tab6_query_precision, fig5678_baselines, fig9_pareto, tab7_timing,
+]

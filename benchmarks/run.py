@@ -1,0 +1,33 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus section markers).
+
+  PYTHONPATH=src python -m benchmarks.run            # full suite
+  PYTHONPATH=src python -m benchmarks.run fig9       # substring filter
+"""
+import sys
+import time
+
+
+def main() -> None:
+    sys.path.insert(0, "src")
+    filt = sys.argv[1] if len(sys.argv) > 1 else ""
+    from benchmarks import kernel_bench, paper_figures
+
+    fns = paper_figures.ALL + kernel_bench.ALL
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for fn in fns:
+        if filt and filt not in fn.__name__:
+            continue
+        print(f"# --- {fn.__name__} ---", flush=True)
+        try:
+            for r in fn():
+                print(r, flush=True)
+        except Exception as e:  # keep the harness running
+            print(f"{fn.__name__},0,ERROR:{e!r}", flush=True)
+    print(f"# total {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""SASRec next-item retrieval over an ASH-compressed catalog — the
+paper's technique integrated into a recsys serving path (DESIGN.md §3).
+
+  PYTHONPATH=src python examples/compressed_retrieval.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.index import metrics as MET
+from repro.models import sasrec as SR
+from repro.serving import retrieval as RET
+
+
+def main():
+    key = jax.random.PRNGKey(3)
+    cfg = SR.SASRecConfig(n_items=100_000, embed_dim=48, seq_len=20,
+                          n_neg=64)
+    params = SR.init_params(key, cfg)
+    # stand-in for a TRAINED catalog: item embeddings with the low-rank,
+    # clustered structure real recommenders learn (random-init gaussian
+    # embeddings have no structure for any compressor to exploit)
+    from repro.data.synthetic import embedding_dataset
+
+    params["item_emb"] = embedding_dataset(
+        jax.random.PRNGKey(9), cfg.n_items, cfg.embed_dim
+    ) * 0.2
+
+    # Compress the 100k-item catalog with learned ASH (4 bits, d/2):
+    t0 = time.time()
+    model, payload = RET.build_candidate_index(
+        jax.random.PRNGKey(1), params["item_emb"], bits=4, reduce=2,
+        n_landmarks=32,
+    )
+    fp32_bytes = params["item_emb"].size * 4
+    ash_bytes = payload.codes.size * 4 + payload.scale.size * 2 \
+        + payload.offset.size * 2 + payload.cluster.size
+    print(f"catalog compressed {fp32_bytes/ash_bytes:.1f}x "
+          f"in {time.time()-t0:.1f}s")
+
+    # Serve: user sequences -> user state -> ASH MIPS over the catalog
+    seq = jax.random.randint(jax.random.PRNGKey(2), (64, 20), 1,
+                             cfg.n_items)
+    t0 = time.perf_counter()
+    scores, ids = jax.block_until_ready(
+        RET.sasrec_retrieve(params, seq, model, payload, cfg, k=10)
+    )
+    dt = time.perf_counter() - t0
+    # recall vs exact full-precision MIPS
+    exact = SR.retrieval_score(params, seq, jnp.arange(cfg.n_items), cfg)
+    gt = jax.lax.top_k(exact, 10)[1]
+    rec = float(MET.recall_at(ids, gt))
+    print(f"64 users x 100k items in {dt*1e3:.0f}ms "
+          f"-> 10-recall@10 = {rec:.4f}")
+
+
+if __name__ == "__main__":
+    main()

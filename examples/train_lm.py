@@ -1,0 +1,22 @@
+"""Train a reduced llama3.2-3b-family LM for a few hundred steps with
+checkpoint/restart fault tolerance (kill it mid-run and re-launch: it
+resumes exactly).
+
+  PYTHONPATH=src python examples/train_lm.py
+"""
+import sys
+
+from repro.launch import train as TL
+
+
+def main():
+    return TL.main([
+        "--arch", "llama3.2-3b", "--reduced",
+        "--steps", "200", "--batch", "16", "--seq", "64",
+        "--ckpt-dir", "/tmp/repro_lm_ckpt", "--ckpt-every", "50",
+        "--log-every", "20",
+    ])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

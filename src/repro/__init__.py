@@ -1,0 +1,6 @@
+"""repro: production-grade JAX framework reproducing ASH
+(Asymmetric Scalar Hashing, Tepper & Willke 2026) with a multi-pod
+distributed runtime, assigned-architecture model zoo, and Pallas TPU
+kernels for the scoring hot path."""
+
+__version__ = "0.1.0"

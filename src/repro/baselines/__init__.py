@@ -1,0 +1,12 @@
+"""Baseline quantizers the paper compares against (Sections 4-5).
+
+All baselines share the same functional API:
+
+    state            = <method>.train(key, X, **cfg)
+    encoded          = <method>.encode(state, X)
+    scores (m, n)    = <method>.score(state, encoded, Q)
+    state.bits_per_vector  -> payload size for iso-compression sweeps
+"""
+from repro.baselines import pq, lopq, eden, leanvec, rabitq
+
+__all__ = ["pq", "lopq", "eden", "leanvec", "rabitq"]

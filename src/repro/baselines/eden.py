@@ -1,0 +1,111 @@
+"""EDEN [Vargaftik et al. 2022] and TurboQuant [Zandieh et al. 2025].
+
+Both: random rotation R, then per-dimension b-bit Lloyd-Max scalar
+quantization (Eq. 30 of the ASH paper).
+  * EDEN scale: s = ||x||_2 / ||R^T w_LM(assign(Rx))||_2  (stored fp).
+  * TurboQuant (MSE variant): s = 1, Lloyd-Max grid calibrated to the
+    coordinate distribution (coordinates of Rx are ~ N(0, ||x||^2/D); a
+    single global std is calibrated from data, since TQ stores no
+    per-vector scale — noted deviation, see DESIGN.md).
+
+The Lloyd-Max grid for N(0,1) is computed once by 1-D k-means over a
+large deterministic Gaussian sample.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import pytree_dataclass
+
+_EPS = 1e-12
+
+
+@functools.lru_cache(maxsize=None)
+def lloyd_max_grid_np(b: int, n_samples: int = 200_000, iters: int = 60):
+    """2^b-level Lloyd-Max quantizer grid for N(0,1), as a numpy array."""
+    import numpy as np
+
+    rng = np.random.RandomState(0)
+    x = np.sort(rng.randn(n_samples).astype(np.float32))
+    # quantile init
+    qs = (np.arange(2**b) + 0.5) / (2**b)
+    grid = np.quantile(x, qs).astype(np.float32)
+    for _ in range(iters):
+        mids = (grid[1:] + grid[:-1]) / 2
+        idx = np.searchsorted(mids, x)
+        sums = np.bincount(idx, weights=x, minlength=2**b)
+        cnts = np.bincount(idx, minlength=2**b)
+        grid = np.where(cnts > 0, sums / np.maximum(cnts, 1), grid).astype(
+            np.float32
+        )
+    return grid
+
+
+@pytree_dataclass(meta_fields=("b", "variant"))
+class EDENState:
+    b: int
+    variant: str  # "eden" | "turboquant"
+    rotation: jax.Array  # (D, D)
+    grid: jax.Array  # (2^b,) Lloyd-Max levels (possibly rescaled)
+
+    @property
+    def bits_per_vector(self) -> int:
+        D = self.rotation.shape[0]
+        return D * self.b + (16 if self.variant == "eden" else 0)
+
+
+def train(
+    key: jax.Array, X: jax.Array, b: int, variant: str = "eden"
+) -> EDENState:
+    X32 = X.astype(jnp.float32)
+    D = X32.shape[1]
+    g = jax.random.normal(key, (D, D), dtype=jnp.float32)
+    qmat, _ = jnp.linalg.qr(g)
+    grid = jnp.asarray(lloyd_max_grid_np(b))
+    if variant == "turboquant":
+        # calibrate the global coordinate std (TQ stores no per-vector s)
+        sample = X32[: min(1024, X32.shape[0])] @ qmat
+        grid = grid * jnp.std(sample)
+    return EDENState(b=b, variant=variant, rotation=qmat, grid=grid)
+
+
+@jax.jit
+def _nearest_level(grid: jax.Array, y: jax.Array) -> jax.Array:
+    mids = (grid[1:] + grid[:-1]) / 2.0
+    return jnp.searchsorted(mids, y).astype(jnp.int32)
+
+
+def encode(state: EDENState, X: jax.Array):
+    """-> (codes (n, D) int32, scale (n,) fp32)."""
+    X32 = X.astype(jnp.float32)
+    Y = X32 @ state.rotation  # (n, D)
+    if state.variant == "eden":
+        norms = jnp.linalg.norm(Y, axis=-1, keepdims=True)
+        Yn = Y / jnp.maximum(norms, _EPS) * jnp.sqrt(
+            jnp.float32(Y.shape[1])
+        )  # unit-variance coords
+        codes = _nearest_level(state.grid, Yn)
+        recon = state.grid[codes]
+        rnorm = jnp.linalg.norm(recon, axis=-1)
+        s = norms[:, 0] / jnp.maximum(rnorm, _EPS)
+        return codes, s
+    else:
+        codes = _nearest_level(state.grid, Y)
+        return codes, jnp.ones((X32.shape[0],), jnp.float32)
+
+
+def decode(state: EDENState, encoded) -> jax.Array:
+    codes, s = encoded
+    return (s[:, None] * state.grid[codes]) @ state.rotation.T
+
+
+@jax.jit
+def score(state: EDENState, encoded, Qm: jax.Array) -> jax.Array:
+    """<q, quant(x)> = s * <Rq, grid[codes]>  (m, n)."""
+    codes, s = encoded
+    Q32 = Qm.astype(jnp.float32)
+    Qrot = Q32 @ state.rotation  # (m, D)
+    return (Qrot @ state.grid[codes].T) * s[None, :]

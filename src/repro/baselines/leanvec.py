@@ -1,0 +1,73 @@
+"""LeanVec (in-distribution) [Tepper et al., TMLR 2024].
+
+SVD/PCA dimensionality reduction to d, then LVQ [Aguerrebere et al. 2023]
+per-vector min-max scalar quantization of the reduced vectors.  The
+query is projected too; scoring is <P q, LVQ(P x)>.  Quantization is a
+post-processing step (the PCA is NOT refined by the quantizer) — the
+drawback Section 4 of the ASH paper highlights.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import learning as L
+from repro.core.types import pytree_dataclass
+
+_EPS = 1e-12
+
+
+@pytree_dataclass(meta_fields=("b", "d"))
+class LeanVecState:
+    b: int
+    d: int
+    P: jax.Array  # (d, D) top-d right singular vectors
+    mean: jax.Array  # (D,) centering
+
+    @property
+    def bits_per_vector(self) -> int:
+        return self.d * self.b + 2 * 16  # codes + (min, delta) fp16 pair
+
+
+def train(key: jax.Array, X: jax.Array, d: int, b: int = 4) -> LeanVecState:
+    X32 = X.astype(jnp.float32)
+    mean = jnp.mean(X32, axis=0)
+    P = L.pca_topd(X32 - mean, d)
+    return LeanVecState(b=b, d=d, P=P, mean=mean)
+
+
+@jax.jit
+def encode(state: LeanVecState, X: jax.Array):
+    """LVQ: per-vector [min, max] range, uniform levels.
+
+    -> (codes (n, d) int32, vmin (n,), delta (n,))."""
+    U = (X.astype(jnp.float32) - state.mean) @ state.P.T  # (n, d)
+    vmin = jnp.min(U, axis=-1)
+    vmax = jnp.max(U, axis=-1)
+    levels = 2**state.b - 1
+    delta = (vmax - vmin) / levels
+    codes = jnp.clip(
+        jnp.round((U - vmin[:, None]) / jnp.maximum(delta, _EPS)[:, None]),
+        0,
+        levels,
+    ).astype(jnp.int32)
+    return codes, vmin, delta
+
+
+def decode_reduced(state: LeanVecState, encoded) -> jax.Array:
+    codes, vmin, delta = encoded
+    return vmin[:, None] + codes.astype(jnp.float32) * delta[:, None]
+
+
+@jax.jit
+def score(state: LeanVecState, encoded, Qm: jax.Array) -> jax.Array:
+    """<q - mean, recon> + <q, mean-part> approximation of <q, x>.
+
+    LeanVec scores in the reduced space; we add back the mean term so the
+    estimate targets <q, x> like the other baselines."""
+    Q32 = Qm.astype(jnp.float32)
+    Urecon = decode_reduced(state, encoded)  # (n, d)
+    qproj = (Q32 - 0.0) @ state.P.T  # project query (in-distribution)
+    red = qproj @ Urecon.T  # (m, n)
+    mean_term = Q32 @ state.mean  # (m,)
+    return red + mean_term[:, None]

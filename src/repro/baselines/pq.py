@@ -1,0 +1,146 @@
+"""Product Quantization [Jégou et al., TPAMI 2011] + OPQ rotation option.
+
+PQ splits D dims into M segments, k-means with 2^b centroids per segment;
+asymmetric ADC scoring via per-segment lookup tables (Eq. 29 of the ASH
+paper).  OPQ [Ge et al. 2014] learns a global rotation by alternating PQ
+training with an orthogonal Procrustes step.
+
+On TPU the ADC table lookup lowers to a gather HLO — the memory-bound
+access pattern the ASH paper contrasts with its matmul-friendly codes
+(paper Table 3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import learning as L
+from repro.core.types import pytree_dataclass
+
+_EPS = 1e-12
+
+
+@pytree_dataclass(meta_fields=("M", "b"))
+class PQState:
+    M: int  # number of segments
+    b: int  # bits per segment (2^b centroids)
+    codebooks: jax.Array  # (M, 2^b, D/M)
+    rotation: Optional[jax.Array]  # (D, D) or None (OPQ)
+
+    @property
+    def bits_per_vector(self) -> int:
+        return self.M * self.b
+
+
+def _split(X: jax.Array, M: int) -> jax.Array:
+    n, D = X.shape
+    return X.reshape(n, M, D // M)
+
+
+def _train_codebooks(key, X, M, b, iters=25):
+    seg = _split(X, M)  # (n, M, ds)
+    keys = jax.random.split(key, M)
+
+    def train_one(k, Xm):
+        c, _ = L.kmeans(k, Xm, 2**b, iters=iters)
+        return c
+
+    return jax.vmap(train_one)(keys, seg.transpose(1, 0, 2))  # (M, 2^b, ds)
+
+
+def train(
+    key: jax.Array,
+    X: jax.Array,
+    M: int,
+    b: int = 8,
+    *,
+    opq_iters: int = 0,
+    kmeans_iters: int = 25,
+) -> PQState:
+    """Train PQ (opq_iters == 0) or OPQ (alternating rotation)."""
+    X32 = X.astype(jnp.float32)
+    D = X32.shape[1]
+    assert D % M == 0, f"D={D} not divisible by M={M}"
+    if opq_iters == 0:
+        cb = _train_codebooks(key, X32, M, b, iters=kmeans_iters)
+        return PQState(M=M, b=b, codebooks=cb, rotation=None)
+
+    R = jnp.eye(D, dtype=jnp.float32)
+    cb = None
+    for it in range(opq_iters):
+        k_it = jax.random.fold_in(key, it)
+        XR = X32 @ R
+        cb = _train_codebooks(key, XR, M, b, iters=kmeans_iters)
+        codes = _assign(cb, XR, M)
+        recon = _decode_rotated(cb, codes)
+        # Procrustes: max Tr(R^T X^T recon) -> R = U V^T of X^T recon
+        u, _, vt = jnp.linalg.svd(X32.T @ recon, full_matrices=False)
+        R = u @ vt
+    return PQState(M=M, b=b, codebooks=cb, rotation=R)
+
+
+@jax.jit
+def _assign(codebooks: jax.Array, X: jax.Array, M: int = None) -> jax.Array:
+    M_ = codebooks.shape[0]
+    seg = _split(X, M_).transpose(1, 0, 2)  # (M, n, ds)
+
+    def one(cb_m, X_m):
+        d2 = (
+            jnp.sum(X_m * X_m, -1)[:, None]
+            - 2 * X_m @ cb_m.T
+            + jnp.sum(cb_m * cb_m, -1)[None, :]
+        )
+        return jnp.argmin(d2, axis=-1)
+
+    return jax.vmap(one)(codebooks, seg).T.astype(jnp.int32)  # (n, M)
+
+
+def encode(state: PQState, X: jax.Array) -> jax.Array:
+    """-> (n, M) int32 centroid indices."""
+    X32 = X.astype(jnp.float32)
+    if state.rotation is not None:
+        X32 = X32 @ state.rotation
+    return _assign(state.codebooks, X32)
+
+
+def _decode_rotated(codebooks, codes):
+    # (n, M, ds) gathered -> (n, D) in (possibly rotated) space
+    gathered = jnp.take_along_axis(
+        codebooks[None], codes[:, :, None, None], axis=2
+    )[:, :, 0, :]
+    n = codes.shape[0]
+    return gathered.reshape(n, -1)
+
+
+def decode(state: PQState, codes: jax.Array) -> jax.Array:
+    recon = _decode_rotated(state.codebooks, codes)
+    if state.rotation is not None:
+        recon = recon @ state.rotation.T
+    return recon
+
+
+@jax.jit
+def score(state: PQState, codes: jax.Array, Qm: jax.Array) -> jax.Array:
+    """ADC: <q, quant(x)> via per-segment LUTs (m, n).
+
+    LUT T[m_seg] = q^(seg) @ codebook_seg^T; the per-vector sum of M
+    gathers — PQ's hot loop (gather-bound on TPU).
+    """
+    Q32 = Qm.astype(jnp.float32)
+    if state.rotation is not None:
+        Q32 = Q32 @ state.rotation
+    M = state.M
+    qseg = _split(Q32, M).transpose(1, 0, 2)  # (M, m, ds)
+    # (M, m, 2^b) tables
+    T = jnp.einsum("mqd,mcd->mqc", qseg, state.codebooks)
+    # gather per (query, vector, segment): T[s, q, codes[v, s]]
+    # -> (m, n) = sum_s T[s, :, codes[:, s]]
+    gathered = jnp.take_along_axis(
+        T[:, :, None, :],  # (M, m, 1, 2^b)
+        codes.T[:, None, :, None],  # (M, 1, n, 1)
+        axis=3,
+    )[..., 0]
+    return jnp.sum(gathered, axis=0)

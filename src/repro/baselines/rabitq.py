@@ -1,0 +1,58 @@
+"""RaBitQ [Gao & Long 2024] / extended RaBitQ [Gao et al. 2025].
+
+Per Section 2 of the ASH paper these are exact special cases of the ASH
+model: D == d, C == 1, W = random orthogonal rotation; b == 1 (RaBitQ) or
+b > 1 (extended).  We therefore implement them as thin wrappers over the
+ASH encoder with a data-agnostic model — which doubles as the JL-random-W
+ablation of Figure 1 when d < D.
+
+Also provides ``expected_dot_1bit(D)``: the closed-form expectation
+E_R[<x, quant_1(Rx)>] of Eq. (33), used by benchmarks/fig2.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import gammaln
+
+from repro.core import ash as A
+from repro.core.types import ASHConfig, ASHModel
+
+
+def train(
+    key: jax.Array,
+    X: jax.Array,
+    b: int = 1,
+    d: int = 0,
+    center: bool = True,
+) -> ASHModel:
+    """RaBitQ state == data-agnostic ASH model (random W, C=1)."""
+    D = X.shape[1]
+    cfg = ASHConfig(b=b, d=(d or D), n_landmarks=1, store_fp16=True)
+    return A.random_model(
+        key, D, cfg, X_for_landmarks=(X if center else None)
+    )
+
+
+encode = A.encode  # identical payload
+
+
+def score(model: ASHModel, payload, Qm: jax.Array) -> jax.Array:
+    from repro.core import scoring as S
+
+    prep = S.prepare_queries(model, Qm)
+    return S.score_dot(model, prep, payload)
+
+
+def expected_dot_1bit(D: int) -> jnp.ndarray:
+    """Eq. (33): E_R[<x, quant_1(Rx)>] = 2 sqrt(D/pi) G(D/2) / ((D-1) G((D-1)/2)).
+
+    ~0.798 for D ~ 1000."""
+    Df = jnp.float32(D)
+    log_ratio = gammaln(Df / 2.0) - gammaln((Df - 1.0) / 2.0)
+    return (
+        2.0
+        * jnp.sqrt(Df / jnp.pi)
+        * jnp.exp(log_ratio)
+        / (Df - 1.0)
+    )

@@ -1,0 +1,21 @@
+"""autoint [arXiv:1810.11921]: self-attentive feature interaction."""
+import jax.numpy as jnp
+from repro.configs.base import Arch, recsys_cells
+from repro.models.recsys import RecSysConfig
+from repro.train.optim import OptConfig
+from repro.train.trainer import TrainConfig
+
+CFG = RecSysConfig(
+    name="autoint", kind="autoint", n_dense=0, n_sparse=39,
+    embed_dim=16, vocab_per_field=1_048_576, n_attn_layers=3,
+    n_attn_heads=2, d_attn=32,
+)
+
+ARCH = Arch(
+    arch_id="autoint",
+    family="recsys",
+    cfg=CFG,
+    cells=recsys_cells(),
+    train_cfg=TrainConfig(opt=OptConfig(name="adamw", lr=1e-3)),
+    notes="3-layer 2-head self-attention over 39 field embeddings.",
+)

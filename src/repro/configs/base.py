@@ -1,0 +1,565 @@
+"""Arch/Cell registry machinery.
+
+Every assigned architecture is an ``Arch`` with its own shape cells.  A
+cell knows how to produce (step_fn, abstract args with shardings
+attached) for a given mesh + sharding policy — the dry-run lowers and
+compiles exactly that.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import sharding as SH
+from repro.launch.sharding import ShardingPolicy
+from repro.train import optim as O
+from repro.train.trainer import TrainConfig, TrainState, init_state, make_train_step
+
+
+def pad_to(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    name: str
+    kind: str  # train | prefill | decode | serve | retrieval
+    shape: dict
+    skip: Optional[str] = None  # reason this cell is officially skipped
+
+
+@dataclasses.dataclass
+class Arch:
+    arch_id: str
+    family: str  # transformer | nequip | recsys | sasrec
+    cfg: Any
+    cells: dict
+    train_cfg: TrainConfig
+    notes: str = ""
+    # per-arch ShardingPolicy field overrides (size-dependent layout
+    # tradeoffs, §Perf): e.g. {"pin_ffn_hidden": False}
+    policy_overrides: dict = dataclasses.field(default_factory=dict)
+
+    # ------------------------------------------------------------------
+    def cell(self, name: str) -> Cell:
+        return self.cells[name]
+
+    def abstract_params(self):
+        from repro import models
+
+        fam = getattr(models, self.family)
+        return jax.eval_shape(
+            lambda: fam.init_params(jax.random.PRNGKey(0), self.cfg)
+        )
+
+    def abstract_state(self):
+        params = self.abstract_params()
+        return jax.eval_shape(
+            lambda p: init_state(jax.random.PRNGKey(0), p, self.train_cfg),
+            params,
+        )
+
+    def param_rules(self, mesh, pol: ShardingPolicy):
+        if self.family == "transformer":
+            return SH.transformer_param_rules(mesh, pol)
+        if self.family == "nequip":
+            return SH.nequip_param_rules(mesh, pol)
+        return SH.recsys_param_rules(mesh, pol)
+
+    def loss_fn(self, constrain):
+        from repro import models
+
+        fam = getattr(models, self.family)
+        return functools.partial(
+            fam.loss_fn, cfg=self.cfg, constrain=constrain
+        )
+
+    # ------------------------------------------------------------------
+    def make_cell_program(self, cell_name: str, mesh, pol: ShardingPolicy):
+        """Returns (fn, args) where args are ShapeDtypeStructs with
+        NamedShardings attached; jit(fn).lower(*args) is the dry-run."""
+        cell = self.cells[cell_name]
+        if self.policy_overrides:
+            pol = dataclasses.replace(pol, **self.policy_overrides)
+        constrain = SH.make_constrain(
+            mesh, pol, param_rules=self.param_rules(mesh, pol)
+        )
+        builder = _CELL_BUILDERS[(self.family, cell.kind)]
+        return builder(self, cell, mesh, pol, constrain)
+
+
+# ---------------------------------------------------------------------------
+# Shared helpers
+# ---------------------------------------------------------------------------
+
+
+def _sharded_state(arch: Arch, mesh, pol):
+    state_sds = arch.abstract_state()
+    prules = arch.param_rules(mesh, pol)
+
+    # params / mu / nu / residual share param sharding; scalars replicated
+    def spec_for(path, leaf):
+        p = _strip_state_prefix(SH._path_str(path))
+        if p is None or not leaf.shape:
+            return P()
+        try:
+            spec = prules(p, tuple(leaf.shape))
+            return SH.fit_spec(spec, len(leaf.shape))
+        except Exception:  # rule indexed a dim the reduced shape lacks
+            return P()
+
+    specs = jax.tree_util.tree_map_with_path(spec_for, state_sds)
+    return SH.with_shardings(state_sds, specs, mesh), specs
+
+
+def _strip_state_prefix(path: str):
+    """Map TrainState leaf paths onto parameter paths so optimizer
+    moments inherit the parameter sharding (critical: mismatched moment
+    sharding would reshard every step)."""
+    for prefix in ("params/", "opt_state/mu/", "opt_state/nu/",
+                   "opt_state/vr/", "opt_state/vc/",
+                   "opt_state/v/", "ef_state/residual/"):
+        if path.startswith(prefix):
+            return path[len(prefix):]
+    return None
+
+
+def _batch_sds(shapes: dict, mesh, pol, rules=None):
+    if rules is None:
+        rules = SH.batch_rules_leading_dp(mesh, pol)
+    sds = {
+        k: jax.ShapeDtypeStruct(shape, dtype)
+        for k, (shape, dtype) in shapes.items()
+    }
+    specs = {k: rules(k, tuple(v.shape)) for k, v in sds.items()}
+    return SH.with_shardings(sds, specs, mesh)
+
+
+# ---------------------------------------------------------------------------
+# Transformer cells
+# ---------------------------------------------------------------------------
+
+
+def _with_cfg(arch: Arch, cfg):
+    import copy
+
+    a = copy.copy(arch)
+    a.cfg = cfg
+    return a
+
+
+def make_constrain_grads(arch: Arch, mesh, pol):
+    """Pin gradient trees to the parameter sharding."""
+    from jax.sharding import NamedSharding
+
+    prules = arch.param_rules(mesh, pol)
+
+    def constrain_grads(grads):
+        def f(path, leaf):
+            try:
+                spec = SH.fit_spec(
+                    prules(SH._path_str(path), tuple(leaf.shape)),
+                    len(leaf.shape),
+                )
+                return jax.lax.with_sharding_constraint(
+                    leaf, NamedSharding(mesh, spec)
+                )
+            except Exception:
+                return leaf
+
+        return jax.tree_util.tree_map_with_path(f, grads)
+
+    return constrain_grads
+
+
+def _tfm_train(arch: Arch, cell: Cell, mesh, pol, constrain):
+    B, S = cell.shape["global_batch"], cell.shape["seq_len"]
+    state, _ = _sharded_state(arch, mesh, pol)
+    batch = _batch_sds(
+        {
+            "tokens": ((B, S), jnp.int32),
+            "labels": ((B, S), jnp.int32),
+        },
+        mesh, pol,
+    )
+    step = make_train_step(
+        arch.loss_fn(constrain), arch.train_cfg,
+        constrain_grads=make_constrain_grads(arch, mesh, pol),
+    )
+    step._donate_argnums = (0,)  # TrainState updated in place
+    return step, (state, batch)
+
+
+def _tfm_prefill(arch: Arch, cell: Cell, mesh, pol, constrain):
+    from repro.models import transformer as T
+
+    B, S = cell.shape["global_batch"], cell.shape["seq_len"]
+    params_sds = arch.abstract_params()
+    prules = arch.param_rules(mesh, pol)
+    specs = SH.specs_by_rules(params_sds, prules)
+    params = SH.with_shardings(params_sds, specs, mesh)
+    batch = _batch_sds({"tokens": ((B, S), jnp.int32)}, mesh, pol)
+
+    def serve_step(params, tokens):
+        return T.prefill(params, tokens, arch.cfg, constrain)
+
+    return serve_step, (params, batch["tokens"])
+
+
+def _tfm_decode(arch: Arch, cell: Cell, mesh, pol, constrain):
+    from repro.models import transformer as T
+
+    B, S = cell.shape["global_batch"], cell.shape["seq_len"]
+    if cell.shape.get("kv_quant_bits"):
+        # ASH-compressed KV cache variant (paper technique applied to
+        # serving; extra cell, see EXPERIMENTS.md §Perf)
+        arch = _with_cfg(arch, dataclasses.replace(
+            arch.cfg,
+            kv_quant_bits=cell.shape["kv_quant_bits"],
+            kv_quant_dim=cell.shape.get("kv_quant_dim", 0),
+        ))
+    params_sds = arch.abstract_params()
+    prules = arch.param_rules(mesh, pol)
+    specs = SH.specs_by_rules(params_sds, prules)
+    params = SH.with_shardings(params_sds, specs, mesh)
+
+    cache_sds = jax.eval_shape(lambda: T.init_cache(arch.cfg, B, S))
+    crules = SH.kv_cache_rules(mesh, pol)
+    cache_specs = SH.specs_by_rules(cache_sds, crules)
+    cache = SH.with_shardings(cache_sds, cache_specs, mesh)
+
+    tokens = _batch_sds({"tokens": ((B,), jnp.int32)}, mesh, pol)["tokens"]
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def serve_step(params, cache, tokens, cache_len):
+        return T.decode_step(
+            params, cache, tokens, cache_len, arch.cfg, constrain
+        )
+
+    serve_step._donate_argnums = (1,)  # cache updated in place
+    return serve_step, (params, cache, tokens, pos)
+
+
+# ---------------------------------------------------------------------------
+# NequIP cells (all train steps over graph batches)
+# ---------------------------------------------------------------------------
+
+
+def _nequip_train(arch: Arch, cell: Cell, mesh, pol, constrain):
+    s = cell.shape
+    overrides = {}
+    if s.get("d_feat"):
+        # feature-graph cells: the embedding consumes d_feat-dim inputs
+        overrides["d_feat_in"] = s["d_feat"]
+    if s.get("edge_chunks"):
+        overrides["edge_chunks"] = s["edge_chunks"]
+    if overrides:
+        arch = _with_cfg(
+            arch, dataclasses.replace(arch.cfg, **overrides)
+        )
+    N = pad_to(s["n_nodes"], 512)
+    E = pad_to(s["n_edges"], 512)
+    n_graphs = s.get("n_graphs", 1)
+    shapes = {
+        "positions": ((N, 3), jnp.float32),
+        "edge_src": ((E,), jnp.int32),
+        "edge_dst": ((E,), jnp.int32),
+        "edge_mask": ((E,), jnp.bool_),
+        "node_mask": ((N,), jnp.bool_),
+    }
+    if s.get("d_feat"):
+        # feature-graph cells train node-property regression (1st-order)
+        shapes["node_feats"] = ((N, s["d_feat"]), jnp.float32)
+        shapes["node_targets"] = ((N,), jnp.float32)
+    else:
+        # molecular cells train energy + forces (2nd-order AD)
+        shapes["species"] = ((N,), jnp.int32)
+        shapes["energy"] = ((n_graphs,), jnp.float32)
+        shapes["forces"] = ((N, 3), jnp.float32)
+    if n_graphs > 1:
+        shapes["graph_ids"] = ((N,), jnp.int32)
+    state, _ = _sharded_state(arch, mesh, pol)
+    batch = _batch_sds(shapes, mesh, pol)
+    base_loss = arch.loss_fn(constrain)
+    if n_graphs > 1:
+        # n_graphs is STATIC (segment_sum num_segments): close over it
+        loss = lambda p, b: base_loss(p, dict(b, n_graphs=n_graphs))
+    else:
+        loss = base_loss
+    step = make_train_step(
+        loss, arch.train_cfg,
+        constrain_grads=make_constrain_grads(arch, mesh, pol),
+    )
+    step._donate_argnums = (0,)
+    return step, (state, batch)
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+
+def _recsys_batch_shapes(arch: Arch, B: int):
+    cfg = arch.cfg
+    shapes = {
+        "sparse": ((B, cfg.n_sparse), jnp.int32),
+        "labels": ((B,), jnp.float32),
+    }
+    if cfg.n_dense:
+        shapes["dense"] = ((B, cfg.n_dense), jnp.float32)
+    return shapes
+
+
+def _recsys_train(arch: Arch, cell: Cell, mesh, pol, constrain):
+    B = cell.shape["batch"]
+    state, _ = _sharded_state(arch, mesh, pol)
+    batch = _batch_sds(_recsys_batch_shapes(arch, B), mesh, pol)
+    step = make_train_step(
+        arch.loss_fn(constrain), arch.train_cfg,
+        constrain_grads=make_constrain_grads(arch, mesh, pol),
+    )
+    step._donate_argnums = (0,)  # TrainState updated in place
+    return step, (state, batch)
+
+
+def _recsys_serve(arch: Arch, cell: Cell, mesh, pol, constrain):
+    from repro.models import recsys as R
+
+    B = cell.shape["batch"]
+    params_sds = arch.abstract_params()
+    specs = SH.specs_by_rules(params_sds, arch.param_rules(mesh, pol))
+    params = SH.with_shardings(params_sds, specs, mesh)
+    shapes = _recsys_batch_shapes(arch, B)
+    shapes.pop("labels")
+    batch = _batch_sds(shapes, mesh, pol)
+
+    def serve_step(params, batch):
+        return R.forward(params, batch, arch.cfg, constrain)
+
+    return serve_step, (params, batch)
+
+
+def _recsys_retrieval(arch: Arch, cell: Cell, mesh, pol, constrain):
+    from repro.models import recsys as R
+
+    n_cand = cell.shape["n_candidates"]
+    params_sds = arch.abstract_params()
+    specs = SH.specs_by_rules(params_sds, arch.param_rules(mesh, pol))
+    params = SH.with_shardings(params_sds, specs, mesh)
+    user_shapes = _recsys_batch_shapes(arch, 1)
+    user_shapes.pop("labels")
+    user = _batch_sds(user_shapes, mesh, pol)
+    cand = _batch_sds(
+        {"cand_ids": ((n_cand,), jnp.int32)}, mesh, pol
+    )["cand_ids"]
+
+    def serve_step(params, user, cand_ids):
+        return R.retrieval_score(params, user, cand_ids, arch.cfg)
+
+    return serve_step, (params, user, cand)
+
+
+# ---------------------------------------------------------------------------
+# SASRec cells
+# ---------------------------------------------------------------------------
+
+
+def _sasrec_batch_shapes(arch: Arch, B: int):
+    cfg = arch.cfg
+    return {
+        "seq": ((B, cfg.seq_len), jnp.int32),
+        "labels": ((B, cfg.seq_len), jnp.int32),
+        "negatives": ((cfg.n_neg,), jnp.int32),
+    }
+
+
+def _sasrec_train(arch: Arch, cell: Cell, mesh, pol, constrain):
+    B = cell.shape["batch"]
+    state, _ = _sharded_state(arch, mesh, pol)
+    batch = _batch_sds(_sasrec_batch_shapes(arch, B), mesh, pol)
+    step = make_train_step(
+        arch.loss_fn(constrain), arch.train_cfg,
+        constrain_grads=make_constrain_grads(arch, mesh, pol),
+    )
+    step._donate_argnums = (0,)  # TrainState updated in place
+    return step, (state, batch)
+
+
+def _sasrec_serve(arch: Arch, cell: Cell, mesh, pol, constrain):
+    from repro.models import sasrec as SR
+
+    B = cell.shape["batch"]
+    params_sds = arch.abstract_params()
+    specs = SH.specs_by_rules(params_sds, arch.param_rules(mesh, pol))
+    params = SH.with_shardings(params_sds, specs, mesh)
+    seq = _batch_sds(
+        {"seq": ((B, arch.cfg.seq_len), jnp.int32)}, mesh, pol
+    )["seq"]
+
+    def serve_step(params, seq):
+        # online inference: user state + full-catalog MIPS scores
+        u = SR.user_state(params, seq, arch.cfg)
+        return u @ params["item_emb"].astype(jnp.float32).T
+
+    return serve_step, (params, seq)
+
+
+def _sasrec_retrieval(arch: Arch, cell: Cell, mesh, pol, constrain):
+    from repro.models import sasrec as SR
+
+    n_cand = cell.shape["n_candidates"]
+    B = cell.shape.get("batch", 1)
+    params_sds = arch.abstract_params()
+    specs = SH.specs_by_rules(params_sds, arch.param_rules(mesh, pol))
+    params = SH.with_shardings(params_sds, specs, mesh)
+    seq = _batch_sds(
+        {"seq": ((B, arch.cfg.seq_len), jnp.int32)}, mesh, pol
+    )["seq"]
+
+    if cell.shape.get("ash_bits"):
+        # The paper's technique AS the optimization (§Perf hillclimb):
+        # candidates are ASH-encoded offline; the serve step reads
+        # packed uint32 codes + fp16 headers instead of the fp32 table.
+        from jax.sharding import NamedSharding
+        from repro.core import quantization as Q
+
+        b = cell.shape["ash_bits"]
+        e = arch.cfg.embed_dim
+        d_code = e // cell.shape.get("ash_reduce", 1)
+        Wd = Q.packed_width(d_code, b)
+        row = SH.batch_rules_leading_dp(mesh, pol)
+
+        def sds(shape, dtype, spec):
+            return jax.ShapeDtypeStruct(
+                shape, dtype, sharding=NamedSharding(mesh, spec)
+            )
+
+        ash_state = {
+            "codes": sds((n_cand, Wd), jnp.uint32,
+                         row("codes", (n_cand, Wd))),
+            "scale": sds((n_cand,), jnp.bfloat16,
+                         row("scale", (n_cand,))),
+            "offset": sds((n_cand,), jnp.bfloat16,
+                          row("offset", (n_cand,))),
+            "W": sds((d_code, e), jnp.float32, SH.P()),
+            "mu": sds((e,), jnp.float32, SH.P()),
+        }
+
+        def serve_step(params, ash, seq):
+            u = SR.user_state(params, seq, arch.cfg)  # (B, e)
+            q_proj = (u @ ash["W"].T).astype(jnp.bfloat16)  # (B, d)
+            V = Q.unpack_codes(ash["codes"], d_code, b).astype(
+                jnp.bfloat16
+            )
+            dot = jnp.einsum(
+                "bd,nd->bn", q_proj, V,
+                preferred_element_type=jnp.float32,
+            )
+            bias = (u @ ash["mu"]).astype(jnp.float32)  # (B,)
+            return (
+                dot * ash["scale"].astype(jnp.float32)[None, :]
+                + bias[:, None]
+                + ash["offset"].astype(jnp.float32)[None, :]
+            )
+
+        return serve_step, (params, ash_state, seq)
+
+    cand = _batch_sds(
+        {"cand_ids": ((n_cand,), jnp.int32)}, mesh, pol
+    )["cand_ids"]
+
+    def serve_step(params, seq, cand_ids):
+        return SR.retrieval_score(params, seq, cand_ids, arch.cfg)
+
+    return serve_step, (params, seq, cand)
+
+
+_CELL_BUILDERS = {
+    ("transformer", "train"): _tfm_train,
+    ("transformer", "prefill"): _tfm_prefill,
+    ("transformer", "decode"): _tfm_decode,
+    ("nequip", "train"): _nequip_train,
+    ("recsys", "train"): _recsys_train,
+    ("recsys", "serve"): _recsys_serve,
+    ("recsys", "retrieval"): _recsys_retrieval,
+    ("sasrec", "train"): _sasrec_train,
+    ("sasrec", "serve"): _sasrec_serve,
+    ("sasrec", "retrieval"): _sasrec_retrieval,
+}
+
+
+# ---------------------------------------------------------------------------
+# Standard shape-cell sets
+# ---------------------------------------------------------------------------
+
+
+def lm_cells(full_attention: bool = True) -> dict:
+    cells = {
+        "train_4k": Cell("train_4k", "train",
+                         {"seq_len": 4096, "global_batch": 256}),
+        "prefill_32k": Cell("prefill_32k", "prefill",
+                            {"seq_len": 32768, "global_batch": 32}),
+        "decode_32k": Cell("decode_32k", "decode",
+                           {"seq_len": 32768, "global_batch": 128}),
+        "long_500k": Cell(
+            "long_500k", "decode",
+            {"seq_len": 524288, "global_batch": 1},
+            skip=(
+                "pure full-attention arch: long_500k officially skipped "
+                "per brief (runnable via --include-skipped using the "
+                "ASH-compressed KV cache)" if full_attention else None
+            ),
+        ),
+        # EXTRA (beyond the 40 assigned cells): decode with the paper's
+        # technique applied to the KV cache — 8x cache compression at
+        # b=4 with d_code = d_head/2.
+        "decode_32k_ashkv": Cell(
+            "decode_32k_ashkv", "decode",
+            {"seq_len": 32768, "global_batch": 128,
+             "kv_quant_bits": 4, "kv_quant_dim": 0},
+            skip="extra cell (beyond-paper ASH-KV serving variant)",
+        ),
+    }
+    return cells
+
+
+def recsys_cells() -> dict:
+    return {
+        "train_batch": Cell("train_batch", "train", {"batch": 65536}),
+        "serve_p99": Cell("serve_p99", "serve", {"batch": 512}),
+        "serve_bulk": Cell("serve_bulk", "serve", {"batch": 262144}),
+        "retrieval_cand": Cell(
+            "retrieval_cand", "retrieval",
+            {"batch": 1, "n_candidates": 1_000_000},
+        ),
+    }
+
+
+def gnn_cells() -> dict:
+    return {
+        "full_graph_sm": Cell(
+            "full_graph_sm", "train",
+            {"n_nodes": 2708, "n_edges": 10556, "d_feat": 1433},
+        ),
+        "minibatch_lg": Cell(
+            "minibatch_lg", "train",
+            # padded sampled-subgraph sizes for batch_nodes=1024,
+            # fanout 15-10 (see data.graphs.neighbor_sample)
+            {"n_nodes": 1024 * 16 * 11, "n_edges": 1024 * 150 * 26,
+             "d_feat": 602, "edge_chunks": 8},
+        ),
+        "ogb_products": Cell(
+            "ogb_products", "train",
+            {"n_nodes": 2_449_029, "n_edges": 61_859_140, "d_feat": 100,
+             "edge_chunks": 16},
+        ),
+        "molecule": Cell(
+            "molecule", "train",
+            {"n_nodes": 30 * 128, "n_edges": 64 * 128, "n_graphs": 128},
+        ),
+    }

@@ -1,0 +1,21 @@
+"""dcn-v2 [arXiv:2008.13535]: deep & cross network v2."""
+import jax.numpy as jnp
+from repro.configs.base import Arch, recsys_cells
+from repro.models.recsys import RecSysConfig
+from repro.train.optim import OptConfig
+from repro.train.trainer import TrainConfig
+
+CFG = RecSysConfig(
+    name="dcn-v2", kind="dcn_v2", n_dense=13, n_sparse=26,
+    embed_dim=16, vocab_per_field=1_048_576, n_cross_layers=3,
+    mlp_dims=(1024, 1024, 512),
+)
+
+ARCH = Arch(
+    arch_id="dcn-v2",
+    family="recsys",
+    cfg=CFG,
+    cells=recsys_cells(),
+    train_cfg=TrainConfig(opt=OptConfig(name="adamw", lr=1e-3)),
+    notes="26 x 1M-row embedding tables row-sharded over all axes.",
+)

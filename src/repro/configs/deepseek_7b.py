@@ -1,0 +1,24 @@
+"""deepseek-7b [arXiv:2401.02954]: dense llama-arch, MHA (GQA kv=32)."""
+import jax.numpy as jnp
+from repro.configs.base import Arch, lm_cells
+from repro.models.transformer import TransformerConfig
+from repro.train.optim import OptConfig
+from repro.train.trainer import TrainConfig
+
+CFG = TransformerConfig(
+    name="deepseek-7b", n_layers=30, d_model=4096, n_heads=32,
+    n_kv_heads=32, d_ff=11008, vocab=102400, qkv_bias=False,
+    dtype=jnp.bfloat16, param_dtype=jnp.bfloat16, remat=True,
+    q_chunk=2048,
+)
+
+ARCH = Arch(
+    arch_id="deepseek-7b",
+    family="transformer",
+    cfg=CFG,
+    cells=lm_cells(full_attention=True),
+    train_cfg=TrainConfig(
+        opt=OptConfig(name="adamw", lr=3e-4), microbatches=4,
+    ),
+    notes="llama-arch dense 7B; MHA (kv == heads).",
+)

@@ -1,0 +1,20 @@
+"""fm [Rendle ICDM'10]: factorization machine, O(nk) sum-square trick."""
+import jax.numpy as jnp
+from repro.configs.base import Arch, recsys_cells
+from repro.models.recsys import RecSysConfig
+from repro.train.optim import OptConfig
+from repro.train.trainer import TrainConfig
+
+CFG = RecSysConfig(
+    name="fm", kind="fm", n_dense=0, n_sparse=39, embed_dim=10,
+    vocab_per_field=1_048_576,
+)
+
+ARCH = Arch(
+    arch_id="fm",
+    family="recsys",
+    cfg=CFG,
+    cells=recsys_cells(),
+    train_cfg=TrainConfig(opt=OptConfig(name="adamw", lr=1e-3)),
+    notes="pairwise interactions via 0.5((sum v)^2 - sum v^2).",
+)

@@ -1,0 +1,35 @@
+"""granite-moe-3b-a800m [hf:ibm-granite]: MoE 40 experts top-8."""
+import jax.numpy as jnp
+from repro.configs.base import Arch, lm_cells
+from repro.models.moe import MoEConfig
+from repro.models.transformer import TransformerConfig
+from repro.train.optim import OptConfig
+from repro.train.trainer import TrainConfig
+
+CFG = TransformerConfig(
+    name="granite-moe-3b-a800m", n_layers=32, d_model=1536, n_heads=24,
+    n_kv_heads=8, d_ff=512, vocab=49155, qkv_bias=False,
+    moe=MoEConfig(n_experts=40, top_k=8, d_ff=512, group_size=4096),
+    dtype=jnp.bfloat16, param_dtype=jnp.bfloat16, remat=True,
+    q_chunk=2048,
+)
+
+ARCH = Arch(
+    policy_overrides={
+        # <10B models: replicating FFN/attention weights is cheaper than
+        # gathering activations (measured; EXPERIMENTS.md §Perf iter 3)
+        "pin_ffn_hidden": False, "pin_attn_boundary": False,
+    },
+    arch_id="granite-moe-3b-a800m",
+    family="transformer",
+    cfg=CFG,
+    cells=lm_cells(full_attention=True),
+    train_cfg=TrainConfig(
+        opt=OptConfig(name="adamw", lr=3e-4), microbatches=4,
+    ),
+    notes=(
+        "40 experts top-8; E=40 not divisible by model=16 so experts "
+        "shard over pod and expert-FFN width over data (see sharding "
+        "rules). vocab 49155 is odd -> embed/lm_head replicated."
+    ),
+)

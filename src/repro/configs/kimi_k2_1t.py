@@ -1,0 +1,36 @@
+"""kimi-k2-1t-a32b [arXiv:2501.kimi2]: trillion-param MoE, 384e top-8."""
+import jax.numpy as jnp
+from repro.configs.base import Arch, lm_cells
+from repro.models.moe import MoEConfig
+from repro.models.transformer import TransformerConfig
+from repro.train.optim import OptConfig
+from repro.train.trainer import TrainConfig
+
+CFG = TransformerConfig(
+    name="kimi-k2-1t-a32b", n_layers=61, d_model=7168, n_heads=64,
+    n_kv_heads=8, d_ff=2048, vocab=163840, qkv_bias=False,
+    moe=MoEConfig(n_experts=384, top_k=8, d_ff=2048, group_size=4096),
+    dtype=jnp.bfloat16, param_dtype=jnp.bfloat16, remat=True,
+    q_chunk=2048,
+)
+
+ARCH = Arch(
+    arch_id="kimi-k2-1t-a32b",
+    family="transformer",
+    cfg=CFG,
+    cells=lm_cells(full_attention=True),
+    train_cfg=TrainConfig(
+        # 1T params on 512 x 16GB chips: Adafactor (factored 2nd moment,
+        # no momentum), bf16 gradient accumulators, 16 microbatches.
+        opt=OptConfig(
+            name="adafactor", lr=1e-4, b1=0.0,
+            moment_dtype=jnp.bfloat16,
+        ),
+        microbatches=16,
+        grad_accum_dtype=jnp.bfloat16,
+    ),
+    notes=(
+        "1T-param MoE: experts sharded E/model x Fe/data x D/pod; "
+        "memory budget discussed in EXPERIMENTS.md §Dry-run."
+    ),
+)

@@ -1,0 +1,30 @@
+"""llama3.2-3b [hf:meta-llama/Llama-3.2-3B]: small llama3, GQA kv=8."""
+import jax.numpy as jnp
+from repro.configs.base import Arch, lm_cells
+from repro.models.transformer import TransformerConfig
+from repro.train.optim import OptConfig
+from repro.train.trainer import TrainConfig
+
+CFG = TransformerConfig(
+    name="llama3.2-3b", n_layers=28, d_model=3072, n_heads=24,
+    n_kv_heads=8, d_ff=8192, vocab=128256, qkv_bias=False,
+    rope_theta=500000.0,
+    dtype=jnp.bfloat16, param_dtype=jnp.bfloat16, remat=True,
+    q_chunk=2048,
+)
+
+ARCH = Arch(
+    policy_overrides={
+        # <10B models: replicating FFN/attention weights is cheaper than
+        # gathering activations (measured; EXPERIMENTS.md §Perf iter 3)
+        "pin_ffn_hidden": False, "pin_attn_boundary": False,
+    },
+    arch_id="llama3.2-3b",
+    family="transformer",
+    cfg=CFG,
+    cells=lm_cells(full_attention=True),
+    train_cfg=TrainConfig(
+        opt=OptConfig(name="adamw", lr=3e-4), microbatches=2,
+    ),
+    notes="small llama3; d_head=128.",
+)

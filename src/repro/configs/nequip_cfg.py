@@ -1,0 +1,26 @@
+"""nequip [arXiv:2101.03164]: O(3)-equivariant interatomic potential."""
+import jax.numpy as jnp
+from repro.configs.base import Arch, gnn_cells
+from repro.models.nequip import NequIPConfig
+from repro.train.optim import OptConfig
+from repro.train.trainer import TrainConfig
+
+CFG = NequIPConfig(
+    name="nequip", n_layers=5, channels=32, l_max=2, n_rbf=8,
+    cutoff=5.0, n_species=16,
+)
+
+ARCH = Arch(
+    arch_id="nequip",
+    family="nequip",
+    cfg=CFG,
+    cells=gnn_cells(),
+    train_cfg=TrainConfig(opt=OptConfig(name="adamw", lr=1e-3)),
+    notes=(
+        "E(3)-equivariant tensor products via numerically-exact Gaunt "
+        "couplings; message passing = segment_sum over edge lists. "
+        "ASH inapplicable (DESIGN.md §4). Graph shapes padded to x512 "
+        "multiples with masks; d_feat shapes feed node_feats, molecule "
+        "uses species embeddings."
+    ),
+)

@@ -1,0 +1,26 @@
+"""qwen2-72b [arXiv:2407.10671]: dense, GQA kv=8, QKV bias."""
+import jax.numpy as jnp
+from repro.configs.base import Arch, lm_cells
+from repro.models.transformer import TransformerConfig
+from repro.train.optim import OptConfig
+from repro.train.trainer import TrainConfig
+
+CFG = TransformerConfig(
+    name="qwen2-72b", n_layers=80, d_model=8192, n_heads=64,
+    n_kv_heads=8, d_ff=29568, vocab=152064, qkv_bias=True,
+    dtype=jnp.bfloat16, param_dtype=jnp.bfloat16, remat=True,
+    q_chunk=2048,
+)
+
+ARCH = Arch(
+    arch_id="qwen2-72b",
+    family="transformer",
+    cfg=CFG,
+    cells=lm_cells(full_attention=True),
+    train_cfg=TrainConfig(
+        opt=OptConfig(name="adamw", lr=2e-4, moment_dtype=jnp.bfloat16),
+        microbatches=8,
+        grad_accum_dtype=jnp.float32,
+    ),
+    notes="72B dense: FSDP + TP; bf16 Adam moments to fit v5e HBM.",
+)

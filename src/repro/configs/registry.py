@@ -1,0 +1,30 @@
+"""All assigned architectures, importable by id (``--arch <id>``)."""
+from repro.configs import (
+    autoint, dcn_v2, deepseek_7b, fm, granite_moe_3b, kimi_k2_1t,
+    llama32_3b, nequip_cfg, qwen2_72b, sasrec_cfg,
+)
+
+ARCHS = {
+    a.ARCH.arch_id: a.ARCH
+    for a in (
+        deepseek_7b, qwen2_72b, llama32_3b, granite_moe_3b, kimi_k2_1t,
+        nequip_cfg, sasrec_cfg, dcn_v2, fm, autoint,
+    )
+}
+
+
+def get(arch_id: str):
+    if arch_id not in ARCHS:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; available: {sorted(ARCHS)}"
+        )
+    return ARCHS[arch_id]
+
+
+def all_cells(include_skipped: bool = False):
+    """Yield (arch, cell) for the official dry-run matrix."""
+    for arch in ARCHS.values():
+        for cell in arch.cells.values():
+            if cell.skip and not include_skipped:
+                continue
+            yield arch, cell

@@ -1,0 +1,23 @@
+"""ASH core: the paper's contribution as a composable JAX module."""
+from repro.core.types import ASHConfig, ASHModel, ASHPayload, QueryPrep
+from repro.core import quantization
+from repro.core import learning
+from repro.core import ash
+from repro.core import scoring
+from repro.core.ash import train, encode, decode, random_model
+from repro.core.scoring import (
+    prepare_queries,
+    score_dot,
+    score_dot_1bit,
+    score_l2,
+    score_cosine,
+    score_symmetric_dot,
+)
+
+__all__ = [
+    "ASHConfig", "ASHModel", "ASHPayload", "QueryPrep",
+    "quantization", "learning", "ash", "scoring",
+    "train", "encode", "decode", "random_model",
+    "prepare_queries", "score_dot", "score_dot_1bit",
+    "score_l2", "score_cosine", "score_symmetric_dot",
+]

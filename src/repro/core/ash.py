@@ -1,0 +1,182 @@
+"""ASH encoder/decoder and end-to-end training (Sections 2-3).
+
+Encoder  g(x):  c* = nearest landmark; x~ = (x-mu*)/||x-mu*||;
+                v = quant_b(W x~);  payload = (codes, SCALE, OFFSET, c*).
+Decoder  f(v):  x^ = ||x-mu*|| * ||v||^-1 W^T v + mu*.
+
+The SCALE/OFFSET headers are exactly Eq. (20):
+  SCALE  = ||v||^-1 ||x - mu*||
+  OFFSET = <x, mu*> - SCALE * <W mu*, v> - ||mu*||^2
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import learning as L
+from repro.core import quantization as Q
+from repro.core.types import ASHConfig, ASHModel, ASHPayload
+
+_EPS = 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Training (Section 3)
+# ---------------------------------------------------------------------------
+
+
+def train(
+    key: jax.Array,
+    X: jax.Array,
+    config: ASHConfig,
+    *,
+    train_sample: Optional[int] = None,
+    max_iters: int = 25,
+    use_newton_schulz: bool = False,
+    kmeans_iters: int = 25,
+) -> tuple[ASHModel, list[float]]:
+    """Learn landmarks + W = R P from data.
+
+    Follows the paper: train on a subsample of ~10*D vectors (10x
+    oversampling of the covariance), PCA init for P, random-rotation init
+    for R, <= 25 alternation iterations with early stopping.
+    """
+    n, D = X.shape
+    d = config.d if config.d > 0 else D
+    assert d <= D, f"target dim {d} exceeds input dim {D}"
+    config = ASHConfig(
+        b=config.b, d=d, n_landmarks=config.n_landmarks,
+        store_fp16=config.store_fp16,
+    )
+    k_sub, k_km, k_rot = jax.random.split(key, 3)
+
+    if train_sample is None:
+        train_sample = min(n, 10 * D)
+    if train_sample < n:
+        idx = jax.random.choice(
+            k_sub, n, shape=(train_sample,), replace=False
+        )
+        Xt = X[idx]
+    else:
+        Xt = X
+
+    X32 = Xt.astype(jnp.float32)
+    centroids, assign = L.kmeans(
+        k_km, X32, config.n_landmarks, iters=kmeans_iters
+    )
+    x_tilde, _, _ = L.normalized_residuals(X32, centroids, assign)
+    P = L.pca_topd(x_tilde, d)  # (d, D)
+    Z = x_tilde @ P.T  # (n_t, d)
+    R, history = L.learn_rotation(
+        k_rot, Z, config.b,
+        max_iters=max_iters, use_newton_schulz=use_newton_schulz,
+    )
+    W = (R @ P).astype(jnp.float32)  # (d, D), row-orthonormal
+    model = ASHModel(
+        config=config,
+        W=W,
+        landmarks=centroids,
+        W_landmarks=centroids @ W.T,
+        landmark_sq_norms=jnp.sum(centroids * centroids, axis=-1),
+        bias_rho=jnp.float32(1.0),
+        bias_beta=jnp.float32(0.0),
+    )
+    return model, history
+
+
+def random_model(
+    key: jax.Array, D: int, config: ASHConfig, X_for_landmarks=None
+) -> ASHModel:
+    """Data-agnostic ASH: W = random row-orthonormal (JL baseline; also the
+    RaBitQ regime when d == D and C == 1)."""
+    d = config.d if config.d > 0 else D
+    config = ASHConfig(
+        b=config.b, d=d, n_landmarks=config.n_landmarks,
+        store_fp16=config.store_fp16,
+    )
+    k_w, k_km = jax.random.split(key)
+    g = jax.random.normal(k_w, (D, D), dtype=jnp.float32)
+    qmat, _ = jnp.linalg.qr(g)
+    W = qmat[:, :d].T  # (d, D) rows orthonormal
+    if X_for_landmarks is not None and config.n_landmarks > 1:
+        centroids, _ = L.kmeans(
+            k_km, X_for_landmarks.astype(jnp.float32), config.n_landmarks
+        )
+    elif X_for_landmarks is not None:
+        centroids = jnp.mean(
+            X_for_landmarks.astype(jnp.float32), axis=0, keepdims=True
+        )
+    else:
+        centroids = jnp.zeros((config.n_landmarks, D), jnp.float32)
+    return ASHModel(
+        config=config,
+        W=W,
+        landmarks=centroids,
+        W_landmarks=centroids @ W.T,
+        landmark_sq_norms=jnp.sum(centroids * centroids, axis=-1),
+        bias_rho=jnp.float32(1.0),
+        bias_beta=jnp.float32(0.0),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Encode / decode
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("exact",))
+def encode(model: ASHModel, X: jax.Array, exact: bool = True) -> ASHPayload:
+    """Encode database vectors into the ASH payload (Table 1)."""
+    cfg = model.config
+    X32 = X.astype(jnp.float32)
+    x_tilde, res_norm, assign = L.normalized_residuals(X32, model.landmarks)
+    U = x_tilde @ model.W.T  # (n, d)
+    V = Q.quant(U, cfg.b, exact=exact)  # (n, d) int32 grid values
+    vnorm = jnp.maximum(Q.code_norms(V), _EPS)
+    scale = res_norm / vnorm
+    ip_x_mu = jnp.sum(X32 * model.landmarks[assign], axis=-1)
+    ip_Wmu_v = jnp.sum(
+        model.W_landmarks[assign] * V.astype(jnp.float32), axis=-1
+    )
+    offset = (
+        ip_x_mu - scale * ip_Wmu_v - model.landmark_sq_norms[assign]
+    )
+    hdr_dtype = jnp.bfloat16 if cfg.store_fp16 else jnp.float32
+    return ASHPayload(
+        b=cfg.b,
+        d=cfg.d,
+        codes=Q.pack_codes(V, cfg.b),
+        scale=scale.astype(hdr_dtype),
+        offset=offset.astype(hdr_dtype),
+        cluster=assign,
+    )
+
+
+@jax.jit
+def decode(model: ASHModel, payload: ASHPayload) -> jax.Array:
+    """Reconstruct x^ = ||x-mu*|| ||v||^-1 W^T v + mu* from the payload.
+
+    ||x-mu*|| is recovered as SCALE * ||v||; this is the full (lossy)
+    inverse of encode.
+    """
+    V = Q.unpack_codes(payload.codes, payload.d, payload.b).astype(
+        jnp.float32
+    )
+    x_tilde_hat = (V / jnp.maximum(Q.code_norms(V), _EPS)[:, None]) @ model.W
+    res_norm = payload.scale.astype(jnp.float32) * Q.code_norms(V)
+    return res_norm[:, None] * x_tilde_hat + model.landmarks[payload.cluster]
+
+
+def reconstruction_error(model: ASHModel, X: jax.Array) -> jax.Array:
+    """Mean squared reconstruction error of the *normalized residuals*
+    (Eq. 5/14) — the quantity the learning minimizes."""
+    X32 = X.astype(jnp.float32)
+    x_tilde, _, _ = L.normalized_residuals(X32, model.landmarks)
+    U = x_tilde @ model.W.T
+    V = Q.quant(U, model.config.b).astype(jnp.float32)
+    vnorm = jnp.maximum(Q.code_norms(V), _EPS)
+    x_hat = (V / vnorm[:, None]) @ model.W
+    return jnp.mean(jnp.sum((x_tilde - x_hat) ** 2, axis=-1))

@@ -1,0 +1,235 @@
+"""Learning the ASH parameters (Section 3 of the paper).
+
+W = R @ P:
+  * P (d, D): top-d eigenvectors of sum_i x~_i x~_i^T (PCA on normalized
+    residuals).
+  * R in SO(d): refined by ITQ-style alternation —
+      1. v_i <- quant_b(R P x~_i)
+      2. R <- argmax_{R in SO(d)} Tr(R M),  M = P (sum_i ||v_i||^-1 x~_i v_i^T)
+    Step 2 is an orthogonal Procrustes problem: M = U S V^T  =>  R = V U^T.
+    (Derivation: Tr(RM) = Tr(R U S V^T) is maximized over the orthogonal
+    group when V^T R U = I.)  The Newton-Schulz polar iteration is an
+    SVD-free alternative (the polar factor of M^T equals V U^T).
+
+Landmarks: k-means (kmeans++ seeding + Lloyd), Section 2 / Eq. (13).
+
+Early stopping follows the paper's Section 5 experimental setup: at most
+25 iterations, patience 3, absolute loss-improvement threshold 1e-4 and
+relative threshold 2.5e-3.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantization as Q
+
+_EPS = 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Orthogonal linear algebra
+# ---------------------------------------------------------------------------
+
+
+def random_rotation(key: jax.Array, d: int) -> jax.Array:
+    """R(0): orthogonal polar factor of a standard normal matrix."""
+    g = jax.random.normal(key, (d, d), dtype=jnp.float32)
+    u, _, vt = jnp.linalg.svd(g, full_matrices=False)
+    return u @ vt
+
+
+def procrustes_svd(M: jax.Array) -> jax.Array:
+    """argmax_{R orthogonal} Tr(R M) = V U^T for M = U S V^T."""
+    u, _, vt = jnp.linalg.svd(M, full_matrices=False)
+    return vt.T @ u.T
+
+
+def newton_schulz(M: jax.Array, steps: int = 12) -> jax.Array:
+    """Polar factor of M^T via the quintic Newton-Schulz iteration.
+
+    Returns the same maximizer as procrustes_svd (up to convergence
+    tolerance) without an SVD — the TPU/GPU-friendly path popularized by
+    Muon [Jordan et al., 2024], cited by the paper as an alternative.
+    """
+    X = M.T  # polar(M^T) = U' V'^T with M^T = U' S V'^T == (V U^T) of M
+    X = X / (jnp.linalg.norm(X) + _EPS)
+    a, b, c = 3.4445, -4.7750, 2.0315  # Muon's quintic coefficients
+
+    def body(_, X):
+        A = X @ X.T
+        B = b * A + c * (A @ A)
+        return a * X + B @ X
+
+    return jax.lax.fori_loop(0, steps, body, X)
+
+
+def pca_topd(X: jax.Array, d: int) -> jax.Array:
+    """Top-d principal directions (rows) of X (n, D): P in St(d, D)."""
+    cov = (X.T @ X).astype(jnp.float32)
+    eigvals, eigvecs = jnp.linalg.eigh(cov)  # ascending
+    P = eigvecs[:, ::-1][:, :d].T  # (d, D)
+    return P
+
+
+# ---------------------------------------------------------------------------
+# k-means landmarks
+# ---------------------------------------------------------------------------
+
+
+def _kmeanspp_init(key: jax.Array, X: jax.Array, C: int) -> jax.Array:
+    """kmeans++ seeding (D^2 sampling)."""
+    n = X.shape[0]
+    k0, key = jax.random.split(key)
+    first = jax.random.randint(k0, (), 0, n)
+    centroids0 = jnp.zeros((C, X.shape[1]), X.dtype).at[0].set(X[first])
+    d2_0 = jnp.sum((X - X[first]) ** 2, axis=-1)
+
+    def body(carry, ki):
+        centroids, d2 = carry
+        i, k = ki
+        p = d2 / jnp.maximum(jnp.sum(d2), _EPS)
+        idx = jax.random.choice(k, n, p=p)
+        c_new = X[idx]
+        centroids = jax.lax.dynamic_update_index_in_dim(
+            centroids, c_new, i, axis=0
+        )
+        d2 = jnp.minimum(d2, jnp.sum((X - c_new) ** 2, axis=-1))
+        return (centroids, d2), None
+
+    keys = jax.random.split(key, C - 1) if C > 1 else jnp.zeros((0, 2), jnp.uint32)
+    idxs = jnp.arange(1, C)
+    (centroids, _), _ = jax.lax.scan(body, (centroids0, d2_0), (idxs, keys))
+    return centroids
+
+
+def assign_clusters(X: jax.Array, centroids: jax.Array) -> jax.Array:
+    """Nearest centroid per row (Eq. 13)."""
+    # ||x - mu||^2 = ||x||^2 - 2 <x, mu> + ||mu||^2 ; ||x||^2 constant in mu
+    d2 = (
+        -2.0 * X @ centroids.T
+        + jnp.sum(centroids * centroids, axis=-1)[None, :]
+    )
+    return jnp.argmin(d2, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("C", "iters"))
+def kmeans(
+    key: jax.Array, X: jax.Array, C: int, iters: int = 25
+) -> tuple[jax.Array, jax.Array]:
+    """Lloyd's k-means. Returns (centroids (C, D), assignment (n,))."""
+    if C == 1:
+        mu = jnp.mean(X, axis=0, keepdims=True)
+        return mu, jnp.zeros((X.shape[0],), jnp.int32)
+
+    centroids = _kmeanspp_init(key, X, C)
+
+    def body(_, centroids):
+        assign = assign_clusters(X, centroids)
+        sums = jax.ops.segment_sum(X, assign, num_segments=C)
+        counts = jax.ops.segment_sum(
+            jnp.ones((X.shape[0],), X.dtype), assign, num_segments=C
+        )
+        new = sums / jnp.maximum(counts[:, None], 1.0)
+        # keep old centroid for empty clusters
+        return jnp.where(counts[:, None] > 0, new, centroids)
+
+    centroids = jax.lax.fori_loop(0, iters, body, centroids)
+    return centroids, assign_clusters(X, centroids)
+
+
+# ---------------------------------------------------------------------------
+# Residual normalization (Eq. 12)
+# ---------------------------------------------------------------------------
+
+
+def normalized_residuals(
+    X: jax.Array, centroids: jax.Array, assign: Optional[jax.Array] = None
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """x~_i = (x_i - mu*_i) / ||x_i - mu*_i||.
+
+    Returns (x_tilde (n,D), residual_norm (n,), assign (n,)).
+    """
+    if assign is None:
+        assign = assign_clusters(X, centroids)
+    resid = X - centroids[assign]
+    norms = jnp.linalg.norm(resid, axis=-1)
+    x_tilde = resid / jnp.maximum(norms, _EPS)[:, None]
+    return x_tilde, norms, assign
+
+
+# ---------------------------------------------------------------------------
+# ITQ-style alternation (Section 3)
+# ---------------------------------------------------------------------------
+
+
+class ITQState(NamedTuple):
+    R: jax.Array  # (d, d)
+    loss: jax.Array  # scalar: negated objective of Eq. (24), normalized
+
+
+@functools.partial(jax.jit, static_argnames=("b", "use_newton_schulz"))
+def itq_step(
+    R: jax.Array,
+    Z: jax.Array,  # (n, d) = x~ @ P^T, precomputed once
+    *,
+    b: int,
+    use_newton_schulz: bool = False,
+) -> ITQState:
+    """One alternation step. Z = P x~ stacked row-wise.
+
+    v_i = quant_b(R z_i);  M = sum_i ||v_i||^-1 z_i v_i^T  (d, d)
+    (M here is the paper's P (sum ||v||^-1 x~ v^T) since Z = X~ P^T.)
+    """
+    U = Z @ R.T  # (n, d) = (R P x~)^T rows
+    V = Q.quant(U, b).astype(jnp.float32)
+    vnorm = jnp.maximum(jnp.linalg.norm(V, axis=-1), _EPS)
+    Vn = V / vnorm[:, None]
+    M = Z.T @ Vn  # (d, d)
+    R_new = newton_schulz(M) if use_newton_schulz else procrustes_svd(M)
+    # Objective (Eq. 24): sum_i ||v_i||^-1 <P x~_i, R^T v_i> = Tr(R M).
+    # Normalized per sample; loss = -objective (so smaller is better).
+    obj = jnp.trace(R_new @ M) / Z.shape[0]
+    return ITQState(R=R_new, loss=-obj)
+
+
+def learn_rotation(
+    key: jax.Array,
+    Z: jax.Array,
+    b: int,
+    *,
+    max_iters: int = 25,
+    patience: int = 3,
+    abs_tol: float = 1e-4,
+    rel_tol: float = 2.5e-3,
+    use_newton_schulz: bool = False,
+) -> tuple[jax.Array, list[float]]:
+    """Full alternation with the paper's early-stopping rule.
+
+    Host-side loop (training is offline and tiny: d x d SVDs); each step
+    is jitted.  Returns (R, loss_history).
+    """
+    d = Z.shape[1]
+    R = random_rotation(key, d)
+    history: list[float] = []
+    best = float("inf")
+    bad = 0
+    for _ in range(max_iters):
+        state = itq_step(R, Z, b=b, use_newton_schulz=use_newton_schulz)
+        R = state.R
+        loss = float(state.loss)
+        history.append(loss)
+        if best == float("inf"):
+            improved = True
+        else:
+            improved = (best - loss) > max(abs_tol, rel_tol * abs(best))
+        if improved:
+            best, bad = loss, 0
+        else:
+            bad += 1
+            if bad >= patience:
+                break
+    return R, history

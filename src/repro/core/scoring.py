@@ -1,0 +1,228 @@
+"""Similarity computations from ASH payloads.
+
+Implements the asymmetric dot product (Eq. 20), the 1-bit masked-add
+specialization (Eq. 22), Euclidean distance and cosine similarity
+(Appendix A), and the symmetric case (Appendix B).  These are the pure-jnp
+reference paths; the Pallas fused kernels in ``repro.kernels`` are bit-for
+-bit validated against them.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantization as Q
+from repro.core.types import ASHModel, ASHPayload, QueryPrep
+
+_EPS = 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Per-query precompute (QUERY-COMPUTE of Eq. 20)
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def prepare_queries(model: ASHModel, q: jax.Array) -> QueryPrep:
+    """One-time per-query work: q_breve = W q, <q, mu_c>, ||q||^2."""
+    q32 = q.astype(jnp.float32)
+    return QueryPrep(
+        q=q32,
+        q_proj=q32 @ model.W.T,
+        ip_q_landmarks=q32 @ model.landmarks.T,
+        q_sq_norm=jnp.sum(q32 * q32, axis=-1),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Recoverable Table-1 quantities
+# ---------------------------------------------------------------------------
+
+
+def recovered_terms(model: ASHModel, payload: ASHPayload):
+    """Recover (V float, ||v||, ||x-mu*||, <x, mu*>) from the payload."""
+    V = Q.unpack_codes(payload.codes, payload.d, payload.b).astype(
+        jnp.float32
+    )
+    vnorm = Q.code_norms(V)
+    scale = payload.scale.astype(jnp.float32)
+    offset = payload.offset.astype(jnp.float32)
+    res_norm = scale * vnorm
+    ip_Wmu_v = jnp.sum(model.W_landmarks[payload.cluster] * V, axis=-1)
+    ip_x_mu = (
+        offset + scale * ip_Wmu_v
+        + model.landmark_sq_norms[payload.cluster]
+    )
+    return V, vnorm, res_norm, ip_x_mu
+
+
+# ---------------------------------------------------------------------------
+# Asymmetric scoring (Eq. 20)
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def score_dot(
+    model: ASHModel, prep: QueryPrep, payload: ASHPayload
+) -> jax.Array:
+    """<q, x_i> approximation, Eq. (20), for a batch of queries against
+    all payload rows.  Returns (n_queries, n_db)."""
+    V = Q.unpack_codes(payload.codes, payload.d, payload.b).astype(
+        jnp.float32
+    )
+    dot = prep.q_proj @ V.T  # (m, n) — DOT-PROD term (MXU on TPU)
+    scale = payload.scale.astype(jnp.float32)[None, :]
+    offset = payload.offset.astype(jnp.float32)[None, :]
+    query_compute = prep.ip_q_landmarks[..., payload.cluster]  # (m, n)
+    return scale * dot + query_compute + offset
+
+
+@jax.jit
+def score_dot_1bit(
+    model: ASHModel, prep: QueryPrep, payload: ASHPayload
+) -> jax.Array:
+    """1-bit masked-add formulation, Eq. (22). Numerically identical to
+    score_dot for b == 1 (tested); mirrors the masked-load kernel."""
+    assert payload.b == 1
+    d = payload.d
+    V = Q.unpack_codes(payload.codes, d, 1)
+    Bmat = ((V + 1) // 2).astype(jnp.float32)  # bin() in {0,1}
+    res_norm = payload.scale.astype(jnp.float32) * jnp.sqrt(
+        jnp.float32(d)
+    )  # ||v|| = sqrt(d) for b=1
+    inv_sqrt_d = 1.0 / jnp.sqrt(jnp.float32(d))
+    masked_add = prep.q_proj @ Bmat.T  # (m, n): sum of q_j where bit set
+    sum_q = jnp.sum(prep.q_proj, axis=-1, keepdims=True)  # <q, 1>
+    scale = 2.0 * inv_sqrt_d * res_norm[None, :]
+    query_compute = (
+        -inv_sqrt_d * res_norm[None, :] * sum_q
+        + prep.ip_q_landmarks[..., payload.cluster]
+    )
+    ip_Wmu_2b1 = jnp.sum(
+        model.W_landmarks[payload.cluster]
+        * (2.0 * Bmat - 1.0),
+        axis=-1,
+    )
+    offset_terms = (
+        # <x, mu*> recovered
+        payload.offset.astype(jnp.float32)
+        + payload.scale.astype(jnp.float32)
+        * jnp.sqrt(jnp.float32(d))
+        * inv_sqrt_d
+        * ip_Wmu_2b1
+        + model.landmark_sq_norms[payload.cluster]
+        # minus d^-1/2 ||x-mu|| <W mu, 2b-1> - ||mu||^2  (Eq. 22 OFFSET)
+        - inv_sqrt_d * res_norm * ip_Wmu_2b1
+        - model.landmark_sq_norms[payload.cluster]
+    )
+    return scale * masked_add + query_compute + offset_terms[None, :]
+
+
+@jax.jit
+def score_l2(
+    model: ASHModel, prep: QueryPrep, payload: ASHPayload
+) -> jax.Array:
+    """||q - x_i||^2 approximation (Appendix A), (m, n)."""
+    _, _, res_norm, ip_x_mu = recovered_terms(model, payload)
+    ip_qx = score_dot(model, prep, payload)
+    mu_sq = model.landmark_sq_norms[payload.cluster]  # (n,)
+    ip_q_mu = prep.ip_q_landmarks[..., payload.cluster]  # (m, n)
+    q_sq_mu = (
+        prep.q_sq_norm[..., None] - 2.0 * ip_q_mu + mu_sq[None, :]
+    )  # ||q - mu*||^2
+    return (
+        q_sq_mu
+        + (res_norm**2)[None, :]
+        - 2.0 * (ip_qx - ip_x_mu[None, :] - ip_q_mu + mu_sq[None, :])
+    )
+
+
+@jax.jit
+def score_cosine(
+    model: ASHModel, prep: QueryPrep, payload: ASHPayload
+) -> jax.Array:
+    """cosSim(q, x_i) using the norm estimate of Eq. (A.5), (m, n)."""
+    V, vnorm, res_norm, _ = recovered_terms(model, payload)
+    ip_qx = score_dot(model, prep, payload)
+    ip_Wmu_v = jnp.sum(model.W_landmarks[payload.cluster] * V, axis=-1)
+    x_sq = (
+        res_norm**2
+        + 2.0 * (res_norm / jnp.maximum(vnorm, _EPS)) * ip_Wmu_v
+        + model.landmark_sq_norms[payload.cluster]
+    )
+    x_norm = jnp.sqrt(jnp.maximum(x_sq, _EPS))
+    q_norm = jnp.sqrt(jnp.maximum(prep.q_sq_norm, _EPS))
+    return ip_qx / (q_norm[..., None] * x_norm[None, :])
+
+
+# ---------------------------------------------------------------------------
+# Symmetric scoring (Appendix B) — for graph-index construction
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def score_symmetric_dot(
+    model: ASHModel, pa: ASHPayload, pb: ASHPayload
+) -> jax.Array:
+    """<x, y> for two encoded sets (C == 1 assumed per Appendix B).
+
+    (n_a, n_b) matrix; Eq. (B.2) with cosSim(quant(Wx~), quant(Wy~))."""
+    Va, va_n, ra_n, ip_a_mu = recovered_terms(model, pa)
+    Vb, vb_n, rb_n, ip_b_mu = recovered_terms(model, pb)
+    cos = (Va @ Vb.T) / jnp.maximum(
+        va_n[:, None] * vb_n[None, :], _EPS
+    )
+    mu_sq = model.landmark_sq_norms[0]
+    return (
+        ra_n[:, None] * rb_n[None, :] * cos
+        + ip_a_mu[:, None]
+        + ip_b_mu[None, :]
+        - mu_sq
+    )
+
+
+# ---------------------------------------------------------------------------
+# Bias correction (Eq. 34)
+# ---------------------------------------------------------------------------
+
+
+def fit_bias(
+    model: ASHModel,
+    payload: ASHPayload,
+    X: jax.Array,
+    queries: jax.Array,
+    sample: int = 100,
+) -> ASHModel:
+    """Least-squares (rho, beta) so that rho*<q,x> + beta ~ <q, x^>.
+
+    Per the paper, a ~100-sample regression; the correction divides the
+    estimate by rho (and subtracts beta) for L2-faithful scores.
+    """
+    qs = queries[:sample].astype(jnp.float32)
+    xs = X[:sample].astype(jnp.float32)
+    sub = jax.tree_util.tree_map(
+        lambda a: a[:sample] if a.ndim >= 1 and a.shape[0] == payload.n else a,
+        payload,
+    )
+    prep = prepare_queries(model, qs)
+    est = score_dot(model, prep, sub).reshape(-1)
+    true = (qs @ xs.T).reshape(-1)
+    A = jnp.stack([true, jnp.ones_like(true)], axis=1)
+    coef, *_ = jnp.linalg.lstsq(A, est, rcond=None)
+    rho, beta = coef[0], coef[1]
+    return ASHModel(
+        config=model.config,
+        W=model.W,
+        landmarks=model.landmarks,
+        W_landmarks=model.W_landmarks,
+        landmark_sq_norms=model.landmark_sq_norms,
+        bias_rho=rho,
+        bias_beta=beta,
+    )
+
+
+def debias(model: ASHModel, scores: jax.Array) -> jax.Array:
+    """Apply the inverse linear correction to estimated dot products."""
+    return (scores - model.bias_beta) / jnp.maximum(model.bias_rho, _EPS)

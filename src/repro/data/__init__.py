@@ -1,0 +1,5 @@
+"""Synthetic data pipelines (embedding sets, token/click/sequence
+streams, graphs + neighbor sampler)."""
+from repro.data import synthetic, graphs
+
+__all__ = ["synthetic", "graphs"]

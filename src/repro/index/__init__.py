@@ -1,0 +1,6 @@
+"""ANN index structures over ASH payloads."""
+from repro.index import flat, ivf, metrics, distributed
+from repro.index.metrics import exact_topk, recall_at, recall_curve
+
+__all__ = ["flat", "ivf", "metrics", "distributed",
+           "exact_topk", "recall_at", "recall_curve"]

@@ -1,0 +1,106 @@
+"""Distributed (sharded) ASH search over a device mesh.
+
+The database payload is sharded row-wise across every mesh axis; queries
+are replicated.  Each shard computes local asymmetric scores + a local
+top-k, converts local row ids to global ids, all-gathers the k-per-shard
+candidates, and re-top-k's — the classic scatter-gather ANN serving
+pattern, here expressed with shard_map + jax.lax collectives so XLA can
+overlap the local scan with the gather.
+
+This module is mesh-shape agnostic: it works on the single-host CPU test
+mesh and on the (pod, data, model) = (2, 16, 16) production mesh of
+launch/mesh.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import scoring as S
+from repro.core.types import ASHModel, ASHPayload
+
+
+def shard_payload(
+    mesh: Mesh, payload: ASHPayload, axes: tuple[str, ...]
+) -> ASHPayload:
+    """Place payload row-sharded over the given mesh axes (replicated on
+    the rest).  Rows must divide the product of axis sizes."""
+    spec = P(axes)
+    put = lambda a: jax.device_put(a, NamedSharding(mesh, spec))
+    return ASHPayload(
+        b=payload.b,
+        d=payload.d,
+        codes=put(payload.codes),
+        scale=put(payload.scale),
+        offset=put(payload.offset),
+        cluster=put(payload.cluster),
+    )
+
+
+def pad_to_multiple(payload: ASHPayload, multiple: int) -> ASHPayload:
+    """Pad rows with sentinel entries (scale=0, offset=-inf) so sharding
+    divides evenly; sentinels never win a top-k."""
+    n = payload.n
+    pad = (-n) % multiple
+    if pad == 0:
+        return payload
+    return ASHPayload(
+        b=payload.b,
+        d=payload.d,
+        codes=jnp.pad(payload.codes, ((0, pad), (0, 0))),
+        scale=jnp.pad(payload.scale, (0, pad)),
+        offset=jnp.pad(
+            payload.offset, (0, pad), constant_values=jnp.finfo(
+                payload.offset.dtype
+            ).min
+        ),
+        cluster=jnp.pad(payload.cluster, (0, pad)),
+    )
+
+
+def make_sharded_search(
+    mesh: Mesh,
+    model: ASHModel,
+    axes: tuple[str, ...],
+    k: int = 10,
+):
+    """Build a jitted (payload, queries) -> (scores, global_ids) searcher.
+
+    ``axes``: mesh axes the database rows are sharded over (e.g.
+    ("pod", "data", "model") shards over all 512 devices).
+    """
+    n_shards = 1
+    for a in axes:
+        n_shards *= mesh.shape[a]
+
+    def local_then_merge(payload: ASHPayload, queries: jax.Array):
+        # ---- local scan (per shard) ----
+        prep = S.prepare_queries(model, queries)
+        local_scores = S.score_dot(model, prep, payload)  # (m, n_local)
+        ls, li = jax.lax.top_k(local_scores, k)  # (m, k)
+        n_local = payload.codes.shape[0]
+        # global row ids: shard linear index * n_local + local id
+        shard_lin = jnp.int32(0)
+        mul = 1
+        for a in reversed(axes):
+            shard_lin = shard_lin + jax.lax.axis_index(a) * mul
+            mul *= mesh.shape[a]
+        gi = li + shard_lin * n_local
+        # ---- merge: gather k-per-shard along every sharded axis ----
+        for a in axes:
+            ls = jax.lax.all_gather(ls, a, axis=1, tiled=True)
+            gi = jax.lax.all_gather(gi, a, axis=1, tiled=True)
+        fs, fi = jax.lax.top_k(ls, k)
+        return fs, jnp.take_along_axis(gi, fi, axis=1)
+
+    fn = jax.shard_map(
+        local_then_merge,
+        mesh=mesh,
+        in_specs=(P(axes), P()),  # pytree prefix: all payload leaves row-sharded
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+    return jax.jit(fn)

@@ -1,0 +1,71 @@
+"""Flat (exhaustive-scan) ASH index with optional exact re-ranking."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ash as A
+from repro.core import scoring as S
+from repro.core.types import ASHConfig, ASHModel, ASHPayload, pytree_dataclass
+
+
+@pytree_dataclass(meta_fields=("metric",))
+class FlatIndex:
+    metric: str  # "dot" | "l2" | "cos"
+    model: ASHModel
+    payload: ASHPayload
+    # Optional raw vectors for exact re-ranking of a shortlist (kept in
+    # bf16 to bound memory; None for pure-compressed deployments).
+    raw: Optional[jax.Array]
+
+
+def build(
+    key: jax.Array,
+    X: jax.Array,
+    config: ASHConfig,
+    *,
+    metric: str = "dot",
+    learned: bool = True,
+    keep_raw: bool = False,
+    **train_kw,
+) -> FlatIndex:
+    if learned:
+        model, _ = A.train(key, X, config, **train_kw)
+    else:
+        model = A.random_model(key, X.shape[1], config, X_for_landmarks=X)
+    payload = A.encode(model, X)
+    raw = X.astype(jnp.bfloat16) if keep_raw else None
+    return FlatIndex(metric=metric, model=model, payload=payload, raw=raw)
+
+
+def _scores(index: FlatIndex, prep) -> jax.Array:
+    if index.metric == "dot":
+        return S.score_dot(index.model, prep, index.payload)
+    if index.metric == "l2":
+        return -S.score_l2(index.model, prep, index.payload)
+    if index.metric == "cos":
+        return S.score_cosine(index.model, prep, index.payload)
+    raise ValueError(index.metric)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "rerank"))
+def search(
+    index: FlatIndex, queries: jax.Array, k: int = 10, rerank: int = 0
+) -> tuple[jax.Array, jax.Array]:
+    """Top-k search. Returns (scores, indices), each (m, k).
+
+    rerank > 0: retrieve a shortlist of that size by ASH scores and
+    re-rank it with exact (bf16) dot products (requires raw vectors).
+    """
+    prep = S.prepare_queries(index.model, queries)
+    approx = _scores(index, prep)
+    if rerank and index.raw is not None:
+        short_s, short_i = jax.lax.top_k(approx, max(rerank, k))
+        cand = index.raw[short_i].astype(jnp.float32)  # (m, R, D)
+        exact = jnp.einsum("md,mrd->mr", prep.q, cand)
+        rs, ri = jax.lax.top_k(exact, k)
+        return rs, jnp.take_along_axis(short_i, ri, axis=1)
+    return jax.lax.top_k(approx, k)

@@ -1,0 +1,144 @@
+"""Inverted-file (IVF) ASH index.
+
+The ASH landmarks ARE the IVF centroids (Section 2 of the paper): the
+coarse quantizer used for residual centering doubles as the routing
+structure, so OFFSET/SCALE come for free per list.
+
+JAX needs static shapes, so inverted lists are stored padded to the
+longest list; search gathers ``nprobe`` padded lists per query, scores
+them with the asymmetric estimator, masks padding, and top-k's.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ash as A
+from repro.core import scoring as S
+from repro.core.types import ASHConfig, ASHModel, ASHPayload, pytree_dataclass
+
+NEG_INF = -jnp.inf
+
+
+@pytree_dataclass(meta_fields=("metric", "max_list_len"))
+class IVFIndex:
+    metric: str
+    max_list_len: int
+    model: ASHModel  # landmarks == IVF centroids (nlist, D)
+    payload: ASHPayload  # rows sorted by list
+    ids: jax.Array  # (n,) original ids, sorted by list
+    invlists: jax.Array  # (nlist, max_list_len) int32 row indices, -1 pad
+    raw: Optional[jax.Array]  # optional bf16 vectors (sorted) for rerank
+
+
+def build(
+    key: jax.Array,
+    X: jax.Array,
+    config: ASHConfig,
+    *,
+    metric: str = "dot",
+    keep_raw: bool = False,
+    train_sample: Optional[int] = None,
+    **train_kw,
+) -> IVFIndex:
+    """nlist = config.n_landmarks."""
+    model, _ = A.train(key, X, config, train_sample=train_sample, **train_kw)
+    payload = A.encode(model, X)
+    import numpy as np
+
+    cluster = np.asarray(payload.cluster)
+    n = cluster.shape[0]
+    nlist = model.landmarks.shape[0]
+    order = np.argsort(cluster, kind="stable")
+    sorted_cluster = cluster[order]
+    counts = np.bincount(sorted_cluster, minlength=nlist)
+    max_len = int(counts.max())
+    invlists = np.full((nlist, max_len), -1, dtype=np.int32)
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    for c in range(nlist):
+        invlists[c, : counts[c]] = np.arange(
+            starts[c], starts[c] + counts[c], dtype=np.int32
+        )
+
+    perm = jnp.asarray(order)
+    payload_sorted = jax.tree_util.tree_map(
+        lambda a: a[perm] if hasattr(a, "shape") and a.ndim >= 1
+        and a.shape[0] == n else a,
+        payload,
+    )
+    raw = X.astype(jnp.bfloat16)[perm] if keep_raw else None
+    return IVFIndex(
+        metric=metric,
+        max_list_len=max_len,
+        model=model,
+        payload=payload_sorted,
+        ids=perm.astype(jnp.int32),
+        invlists=jnp.asarray(invlists),
+        raw=raw,
+    )
+
+
+def _gather_payload(payload: ASHPayload, rows: jax.Array) -> ASHPayload:
+    """Gather payload rows (any leading batch shape); -1 rows read row 0
+    (masked later)."""
+    safe = jnp.maximum(rows, 0)
+    return ASHPayload(
+        b=payload.b,
+        d=payload.d,
+        codes=payload.codes[safe],
+        scale=payload.scale[safe],
+        offset=payload.offset[safe],
+        cluster=payload.cluster[safe],
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k", "nprobe", "rerank"))
+def search(
+    index: IVFIndex,
+    queries: jax.Array,
+    k: int = 10,
+    nprobe: int = 8,
+    rerank: int = 0,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (scores (m,k), original ids (m,k))."""
+    m = queries.shape[0]
+    prep = S.prepare_queries(index.model, queries)
+    # coarse routing: nearest centroids by L2 (== max <q,mu> - ||mu||^2/2)
+    coarse = (
+        prep.ip_q_landmarks
+        - 0.5 * index.model.landmark_sq_norms[None, :]
+    )
+    _, probe = jax.lax.top_k(coarse, nprobe)  # (m, nprobe)
+    cand_rows = index.invlists[probe].reshape(m, -1)  # (m, nprobe*L)
+    valid = cand_rows >= 0
+
+    def score_one(prep_q, rows_q, valid_q):
+        sub = _gather_payload(index.payload, rows_q)
+        one = jax.tree_util.tree_map(
+            lambda a: a[None] if hasattr(a, "ndim") else a, prep_q
+        )
+        if index.metric == "dot":
+            sc = S.score_dot(index.model, one, sub)[0]
+        elif index.metric == "l2":
+            sc = -S.score_l2(index.model, one, sub)[0]
+        else:
+            sc = S.score_cosine(index.model, one, sub)[0]
+        return jnp.where(valid_q, sc, NEG_INF)
+
+    scores = jax.vmap(score_one)(prep, cand_rows, valid)  # (m, nprobe*L)
+    if rerank and index.raw is not None:
+        R = max(rerank, k)
+        ss, si = jax.lax.top_k(scores, R)
+        rows = jnp.take_along_axis(cand_rows, si, axis=1)
+        cand = index.raw[jnp.maximum(rows, 0)].astype(jnp.float32)
+        exact = jnp.einsum("md,mrd->mr", prep.q, cand)
+        exact = jnp.where(ss > NEG_INF, exact, NEG_INF)
+        rs, ri = jax.lax.top_k(exact, k)
+        rows_k = jnp.take_along_axis(rows, ri, axis=1)
+        return rs, index.ids[jnp.maximum(rows_k, 0)]
+    ts, ti = jax.lax.top_k(scores, k)
+    rows_k = jnp.take_along_axis(cand_rows, ti, axis=1)
+    return ts, index.ids[jnp.maximum(rows_k, 0)]

@@ -1,0 +1,61 @@
+"""Ground truth + recall metrics for ANN evaluation."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric", "block"))
+def exact_topk(
+    Qm: jax.Array,
+    X: jax.Array,
+    k: int = 10,
+    metric: str = "dot",
+    block: int = 0,
+) -> tuple[jax.Array, jax.Array]:
+    """Brute-force exact top-k. Returns (scores, indices) each (m, k).
+
+    metric: "dot" (MIPS), "l2" (returns -distance so that larger=better),
+    "cos".
+    """
+    Q32 = Qm.astype(jnp.float32)
+    X32 = X.astype(jnp.float32)
+    if metric == "dot":
+        s = Q32 @ X32.T
+    elif metric == "l2":
+        s = -(
+            jnp.sum(Q32 * Q32, -1)[:, None]
+            - 2 * Q32 @ X32.T
+            + jnp.sum(X32 * X32, -1)[None, :]
+        )
+    elif metric == "cos":
+        s = (Q32 @ X32.T) / (
+            jnp.linalg.norm(Q32, axis=-1)[:, None]
+            * jnp.maximum(jnp.linalg.norm(X32, axis=-1), 1e-12)[None, :]
+        )
+    else:
+        raise ValueError(metric)
+    return jax.lax.top_k(s, k)
+
+
+def recall_at(
+    retrieved: jax.Array, ground_truth: jax.Array, k_gt: int = 10
+) -> jax.Array:
+    """k_gt-recall@R: |retrieved_R  ∩ gt_{k_gt}| / k_gt, averaged over queries.
+
+    retrieved: (m, R) indices; ground_truth: (m, >=k_gt) indices.
+    """
+    gt = ground_truth[:, :k_gt]
+    hit = (retrieved[:, :, None] == gt[:, None, :]).any(axis=1)
+    return jnp.mean(jnp.sum(hit, axis=-1) / k_gt)
+
+
+def recall_curve(retrieved, ground_truth, Rs=(10, 20, 50, 100), k_gt=10):
+    """10-recall@R for several R (the paper's accuracy metric)."""
+    return {
+        R: float(recall_at(retrieved[:, :R], ground_truth, k_gt))
+        for R in Rs
+        if R <= retrieved.shape[1]
+    }

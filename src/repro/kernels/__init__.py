@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the ASH scoring hot paths.
+
+ash_score    — fused unpack + MXU matmul + Eq. (20) epilogue
+ash_kv_attn  — decode attention over an ASH-compressed KV cache
+ref          — pure-jnp oracles (bit-exact semantics)
+ops          — public jit'd wrappers with CPU-interpret fallback
+"""
+from repro.kernels import ref, ops
+from repro.kernels.ops import ash_score, ash_kv_attention
+
+__all__ = ["ref", "ops", "ash_score", "ash_kv_attention"]

@@ -1,0 +1,171 @@
+"""Fused ASH asymmetric-scoring Pallas TPU kernel.
+
+The TPU adaptation of the paper's AVX-512 Code 1 (see DESIGN.md §2):
+batched scoring of m queries against n packed ASH codes is a dense
+matmul, so the kernel
+
+  1. streams packed uint32 code words HBM -> VMEM one (n_blk, w_blk)
+     tile at a time (codes never exist unpacked in HBM: 32/b codes per
+     word, a 16x-32x traffic reduction vs fp32 vectors);
+  2. unpacks in-register (shift/mask -> odd-integer grid values, bf16);
+  3. feeds the MXU: acc += q_tile (m_blk, d_blk) @ codes_tile^T;
+  4. on the last reduction step applies the Eq. (20) epilogue
+     out = acc * SCALE + one_hot(cluster) lookup of <q, mu_c> + OFFSET,
+     with the landmark lookup itself expressed as an MXU-friendly
+     one-hot matmul (C <= 256).
+
+Grid: (n_blocks, m_blocks, d_blocks), d innermost for accumulation in a
+VMEM fp32 scratch tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import quantization as Q
+
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_N = 512
+DEFAULT_BLOCK_D = 512
+
+
+def _unpack_block(words: jax.Array, b: int, compute_dtype) -> jax.Array:
+    """(n_blk, w_blk) uint32 -> (n_blk, w_blk * 32//b) grid values."""
+    k = 32 // b
+    shifts = (jnp.arange(k, dtype=jnp.uint32) * b).astype(jnp.uint32)
+    mask = jnp.uint32(2**b - 1)
+    grouped = (words[:, :, None] >> shifts[None, None, :]) & mask
+    levels = grouped.reshape(words.shape[0], -1)
+    return (
+        2 * levels.astype(jnp.int32) - (2**b - 1)
+    ).astype(compute_dtype)
+
+
+def _kernel(
+    q_ref,  # (m_blk, d_blk)
+    codes_ref,  # (n_blk, w_blk) uint32
+    scale_ref,  # (1, n_blk)
+    offset_ref,  # (1, n_blk)
+    cluster_ref,  # (1, n_blk) int32
+    ipq_ref,  # (m_blk, C)
+    out_ref,  # (m_blk, n_blk)
+    acc_ref,  # scratch (m_blk, n_blk) fp32
+    *,
+    b: int,
+    n_d_blocks: int,
+    compute_dtype,
+):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    vals = _unpack_block(codes_ref[...], b, compute_dtype)  # (n_blk, d_blk)
+    q = q_ref[...].astype(compute_dtype)
+    acc_ref[...] += jax.lax.dot_general(
+        q,
+        vals,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k_idx == n_d_blocks - 1)
+    def _epilogue():
+        C = ipq_ref.shape[1]
+        cl = cluster_ref[0, :]  # (n_blk,)
+        onehot = (
+            cl[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, C), 1)
+        ).astype(jnp.float32)  # (n_blk, C)
+        bias = jax.lax.dot_general(
+            ipq_ref[...].astype(jnp.float32),
+            onehot,
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (m_blk, n_blk)
+        out_ref[...] = (
+            acc_ref[...] * scale_ref[0, :][None, :].astype(jnp.float32)
+            + bias
+            + offset_ref[0, :][None, :].astype(jnp.float32)
+        ).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "b", "block_m", "block_n", "block_d", "interpret", "compute_dtype"
+    ),
+)
+def ash_score_pallas(
+    codes: jax.Array,  # (n, Wd) uint32
+    q_proj: jax.Array,  # (m, d_pad)
+    scale: jax.Array,  # (n,)
+    offset: jax.Array,  # (n,)
+    cluster: jax.Array,  # (n,)
+    ip_q_landmarks: jax.Array,  # (m, C)
+    *,
+    b: int,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_d: int = DEFAULT_BLOCK_D,
+    interpret: bool = False,
+    compute_dtype=jnp.bfloat16,
+) -> jax.Array:
+    """(m, n) fp32 asymmetric scores; semantics == ref.ash_score_ref."""
+    n, Wd = codes.shape
+    m, d_pad = q_proj.shape
+    k = Q.codes_per_word(b)
+    assert Wd * k == d_pad, (Wd, k, d_pad)
+    C = ip_q_landmarks.shape[1]
+
+    block_m = min(block_m, _round_up(m, 8))
+    block_n = min(block_n, _round_up(n, 128))
+    block_d = min(block_d, d_pad)
+    assert block_d % k == 0
+    block_w = block_d // k
+
+    # Pad every operand to block multiples (scores for padded rows are
+    # sliced away; padded q columns are zero so they add nothing).
+    m_p = _round_up(m, block_m)
+    n_p = _round_up(n, block_n)
+    d_p = _round_up(d_pad, block_d)
+    w_p = d_p // k
+    codes = jnp.pad(codes, ((0, n_p - n), (0, w_p - Wd)))
+    q_proj = jnp.pad(q_proj, ((0, m_p - m), (0, d_p - d_pad)))
+    scale2 = jnp.pad(scale, (0, n_p - n)).reshape(1, n_p)
+    offset2 = jnp.pad(offset, (0, n_p - n)).reshape(1, n_p)
+    cluster2 = jnp.pad(cluster, (0, n_p - n)).reshape(1, n_p)
+    ipq = jnp.pad(ip_q_landmarks, ((0, m_p - m), (0, 0)))
+
+    grid = (n_p // block_n, m_p // block_m, d_p // block_d)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel,
+            b=b,
+            n_d_blocks=grid[2],
+            compute_dtype=compute_dtype,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_d), lambda i, j, k_: (j, k_)),
+            pl.BlockSpec((block_n, block_w), lambda i, j, k_: (i, k_)),
+            pl.BlockSpec((1, block_n), lambda i, j, k_: (0, i)),
+            pl.BlockSpec((1, block_n), lambda i, j, k_: (0, i)),
+            pl.BlockSpec((1, block_n), lambda i, j, k_: (0, i)),
+            pl.BlockSpec((block_m, C), lambda i, j, k_: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k_: (j, i)),
+        out_shape=jax.ShapeDtypeStruct((m_p, n_p), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(q_proj, codes, scale2, offset2, cluster2, ipq)
+    return out[:m, :n]
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult

@@ -1,0 +1,104 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``interpret`` defaults to auto: Python-interpret the kernel body on CPU
+(this container), compile on TPU.  Both paths are validated against the
+pure-jnp oracles in ``ref.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantization as Q
+from repro.core import scoring as S
+from repro.core.types import ASHModel, ASHPayload, QueryPrep
+from repro.kernels import ref
+from repro.kernels.ash_score import ash_score_pallas
+from repro.kernels.ash_kv_attn import ash_kv_attn_pallas
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def ash_score(
+    model: ASHModel,
+    prep: QueryPrep,
+    payload: ASHPayload,
+    *,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+    compute_dtype=jnp.float32,
+) -> jax.Array:
+    """Drop-in fused replacement for scoring.score_dot: (m, n) fp32.
+
+    use_pallas=None (auto): the fused kernel on TPU, the identical-
+    semantics jnp oracle on CPU (interpret mode is for validation, far
+    too slow for serving).
+    """
+    if use_pallas is None:
+        use_pallas = not _auto_interpret()
+    if interpret is None:
+        interpret = _auto_interpret()
+    d_pad = payload.codes.shape[1] * Q.codes_per_word(payload.b)
+    q_proj = prep.q_proj
+    if q_proj.shape[-1] < d_pad:
+        q_proj = jnp.pad(q_proj, ((0, 0), (0, d_pad - q_proj.shape[-1])))
+    args = (
+        payload.codes,
+        q_proj,
+        payload.scale.astype(jnp.float32),
+        payload.offset.astype(jnp.float32),
+        payload.cluster,
+        prep.ip_q_landmarks,
+    )
+    if not use_pallas:
+        return ref.ash_score_ref(*args, b=payload.b)
+    return ash_score_pallas(
+        *args, b=payload.b, interpret=interpret,
+        compute_dtype=compute_dtype,
+    )
+
+
+def ash_kv_attention(
+    q_k: jax.Array,  # (..., dk) projected queries (W_k q)
+    k_codes: jax.Array,  # (..., S, Wk)
+    k_scale: jax.Array,  # (..., S)
+    k_bias: jax.Array,  # (..., S)
+    v_codes: jax.Array,  # (..., S, Wv)
+    v_scale: jax.Array,  # (..., S)
+    mask: jax.Array,  # (..., S)
+    *,
+    b_k: int,
+    b_v: int,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Batched (vmapped over leading dims) ASH-KV decode attention.
+
+    Returns the reduced-space accumulation (..., dv); caller decodes with
+    W_v^T and adds mu_v.
+    """
+    if interpret is None:
+        interpret = _auto_interpret()
+
+    if not use_pallas:
+        def one(qk, kc, ks, kb, vc, vs, mk):
+            acc, _ = ref.ash_kv_attn_ref(
+                qk, kc, ks, kb, vc, vs, b_k, b_v, mask=mk
+            )
+            return acc
+    else:
+        def one(qk, kc, ks, kb, vc, vs, mk):
+            return ash_kv_attn_pallas(
+                qk, kc, ks, kb, vc, vs, mk,
+                b_k=b_k, b_v=b_v, interpret=interpret,
+            )
+
+    fn = one
+    batch_dims = q_k.ndim - 1
+    for _ in range(batch_dims):
+        fn = jax.vmap(fn)
+    return fn(q_k, k_codes, k_scale, k_bias, v_codes, v_scale, mask)

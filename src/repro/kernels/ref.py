@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These define bit-exact semantics; the kernels are validated against them
+(interpret mode on CPU, compiled on TPU) across shape/dtype/bit sweeps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantization as Q
+
+
+def ash_score_ref(
+    codes: jax.Array,  # (n, Wd) uint32 packed
+    q_proj: jax.Array,  # (m, d_pad) query projections (zero-padded cols)
+    scale: jax.Array,  # (n,)
+    offset: jax.Array,  # (n,)
+    cluster: jax.Array,  # (n,) int32
+    ip_q_landmarks: jax.Array,  # (m, C)
+    b: int,
+) -> jax.Array:
+    """Asymmetric ASH scores (Eq. 20): (m, n) fp32.
+
+    d is implied by the packed width: d_pad = Wd * (32 // b); q_proj must
+    be zero-padded to d_pad so padding lanes contribute nothing.
+    """
+    d_pad = codes.shape[1] * Q.codes_per_word(b)
+    V = Q.unpack_codes(codes, d_pad, b).astype(jnp.float32)
+    dot = q_proj.astype(jnp.float32) @ V.T  # (m, n)
+    bias = ip_q_landmarks.astype(jnp.float32)[:, cluster]  # (m, n)
+    return (
+        dot * scale.astype(jnp.float32)[None, :]
+        + bias
+        + offset.astype(jnp.float32)[None, :]
+    )
+
+
+def ash_kv_attn_ref(
+    q_k: jax.Array,  # (dk,) query projected into K-code space (W_k q)
+    k_codes: jax.Array,  # (S, Wk) packed K codes
+    k_scale: jax.Array,  # (S,)
+    k_bias: jax.Array,  # (S,) per-position logit bias:
+    #   <q, mu_k> + offset_k  (QUERY-COMPUTE + OFFSET folded outside)
+    v_codes: jax.Array,  # (S, Wv) packed V codes
+    v_scale: jax.Array,  # (S,) SCALE of the V encoder
+    b_k: int,
+    b_v: int,
+    mask: jax.Array | None = None,  # (S,) bool; False = ignore
+) -> tuple[jax.Array, jax.Array]:
+    """Single-query decode attention over an ASH-compressed KV cache.
+
+    logits_i = k_scale_i * <q_k, unpack(k_codes_i)> + k_bias_i
+    p = softmax(logits)
+    returns (acc (dv,), none_placeholder) where
+      acc = sum_i p_i * v_scale_i * unpack(v_codes_i)
+    The caller completes the output as W_v^T acc + mu_v (linear decode).
+    """
+    dk = k_codes.shape[1] * Q.codes_per_word(b_k)
+    dv = v_codes.shape[1] * Q.codes_per_word(b_v)
+    K = Q.unpack_codes(k_codes, dk, b_k).astype(jnp.float32)
+    V = Q.unpack_codes(v_codes, dv, b_v).astype(jnp.float32)
+    logits = (
+        K @ q_k.astype(jnp.float32)
+    ) * k_scale.astype(jnp.float32) + k_bias.astype(jnp.float32)
+    if mask is not None:
+        logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits)
+    acc = (p * v_scale.astype(jnp.float32)) @ V  # (dv,)
+    return acc, p

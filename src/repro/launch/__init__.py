@@ -1,0 +1,1 @@
+"""Launchers: mesh builders, dry-run, roofline analysis, train/serve."""

@@ -1,0 +1,162 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and report memory / cost / collective analysis.
+
+  PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch kimi-k2-1t-a32b \
+      --cell train_4k --multi-pod both --json out.json
+
+Single-pod mesh: (data=16, model=16) = 256 chips.
+Multi-pod mesh : (pod=2, data=16, model=16) = 512 chips.
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("DRYRUN_EXTRA_XLA_FLAGS", "")
+    + " --xla_force_host_platform_device_count=512"
+).strip()
+# ^^ MUST precede any jax import: jax locks the device count on first init.
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import registry
+from repro.launch import roofline as RL
+from repro.launch.mesh import make_production_mesh, mesh_size
+from repro.launch.sharding import ShardingPolicy
+
+
+def run_cell(arch, cell, *, multi_pod: bool, policy=None, verbose=True,
+             with_probes: bool = False):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    pol = policy or ShardingPolicy()
+    t0 = time.time()
+    fn, args = arch.make_cell_program(cell.name, mesh, pol)
+    # NamedShardings embed the mesh; no ambient mesh context needed.
+    donate = getattr(fn, "_donate_argnums", ())
+    lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()  # PER-DEVICE (see roofline.py)
+    text = compiled.as_text()
+    chips = mesh_size(mesh)
+    coll = RL.parse_collectives(text)
+    ghost = min(
+        RL.cpu_float_norm_ghost_bytes(text), mem.temp_size_in_bytes
+    )
+    result = {
+        "arch": arch.arch_id,
+        "cell": cell.name,
+        "kind": cell.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "argument_size_gib_per_dev": _gib(mem.argument_size_in_bytes),
+        "output_size_gib_per_dev": _gib(mem.output_size_in_bytes),
+        "temp_size_gib_per_dev": _gib(mem.temp_size_in_bytes),
+        "peak_gib_per_dev": _gib(
+            mem.argument_size_in_bytes + mem.temp_size_in_bytes
+        ),
+        "fits_16g_hbm": bool(
+            mem.argument_size_in_bytes + mem.temp_size_in_bytes
+            < 16 * 2**30
+        ),
+        # CPU-backend bf16->f32 normalization inflation (absent on TPU)
+        "cpu_f32_ghost_gib": _gib(ghost),
+        "peak_gib_per_dev_tpu_adj": _gib(
+            mem.argument_size_in_bytes + mem.temp_size_in_bytes - ghost
+        ),
+        "fits_16g_hbm_tpu_adj": bool(
+            mem.argument_size_in_bytes + mem.temp_size_in_bytes - ghost
+            < 16 * 2**30
+        ),
+        "collective_counts": coll.count_by_kind,
+        "async_collectives": coll.async_pairs,
+    }
+    if with_probes:
+        from repro.launch import analysis as AN
+
+        roof = AN.corrected_roofline(arch, cell, mesh, pol)
+        result.update({
+            "flops_per_dev": roof.flops,
+            "hbm_bytes_per_dev": roof.hbm_bytes,
+            "collective_bytes_per_dev": roof.collective_bytes,
+            **{k: (round(v, 6) if isinstance(v, float) else v)
+               for k, v in roof.row().items()
+               if k.startswith("t_") or k in (
+                   "bottleneck", "useful_flops_frac", "roofline_frac")},
+        })
+    if verbose:
+        print(json.dumps(result, indent=None, default=_jsonify))
+        print("--- memory_analysis:", mem)
+    return result
+
+
+def _gib(b):
+    return round(b / 2**30, 3)
+
+
+def _jsonify(x):
+    try:
+        return float(x)
+    except Exception:
+        return str(x)
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None, help="arch id (default: all)")
+    p.add_argument("--cell", default=None, help="cell name (default: all)")
+    p.add_argument("--multi-pod", choices=("single", "multi", "both"),
+                   default="both")
+    p.add_argument("--include-skipped", action="store_true")
+    p.add_argument("--json", default=None, help="append results to file")
+    p.add_argument("--seq-parallel", action="store_true")
+    p.add_argument("--no-fsdp", action="store_true")
+    p.add_argument("--with-probes", action="store_true",
+                   help="add loop-corrected roofline terms (slower)")
+    args = p.parse_args(argv)
+
+    pol = ShardingPolicy(
+        seq_parallel=args.seq_parallel, fsdp=not args.no_fsdp
+    )
+    pods = {"single": (False,), "multi": (True,), "both": (False, True)}[
+        args.multi_pod
+    ]
+    results, failures = [], []
+    for arch, cell in registry.all_cells(args.include_skipped):
+        if args.arch and arch.arch_id != args.arch:
+            continue
+        if args.cell and cell.name != args.cell:
+            continue
+        for mp in pods:
+            tag = f"{arch.arch_id}/{cell.name}/{'2x16x16' if mp else '16x16'}"
+            print(f"=== {tag} ===", flush=True)
+            try:
+                results.append(
+                    run_cell(arch, cell, multi_pod=mp, policy=pol,
+                             with_probes=args.with_probes and not mp)
+                )
+            except Exception as e:
+                traceback.print_exc()
+                failures.append((tag, repr(e)))
+    print(f"\n==== dry-run done: {len(results)} ok, "
+          f"{len(failures)} failed ====")
+    for tag, err in failures:
+        print(f"FAILED {tag}: {err[:200]}")
+    if args.json:
+        mode = "a" if os.path.exists(args.json) else "w"
+        with open(args.json, mode) as f:
+            for r in results:
+                f.write(json.dumps(r, default=_jsonify) + "\n")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

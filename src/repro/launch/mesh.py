@@ -1,0 +1,42 @@
+"""Production mesh builders.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+Multi-pod: (pod=2, data=16, model=16) = 512 chips; the "pod" axis
+carries hierarchical data parallelism (reduce-scatter intra-pod,
+all-reduce across the DCN/ICI pod link).
+
+Functions, not module-level constants: importing this module never
+touches jax device state (the dry-run sets XLA_FLAGS before any jax
+import; tests and benches see the single real CPU device).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(
+    shape: tuple = None, axes: tuple = ("data", "model")
+) -> Mesh:
+    """Degenerate mesh over however many devices exist (CPU tests)."""
+    n = jax.device_count()
+    if shape is None:
+        shape = (n,) + (1,) * (len(axes) - 1)
+    devs = np.array(jax.devices()).reshape(shape)
+    return Mesh(devs, axes)
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    """Data-parallel axes: every axis except the tensor-parallel one."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def mesh_size(mesh: Mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))

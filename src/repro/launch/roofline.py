@@ -1,0 +1,282 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), TPU v5e constants:
+  compute   = HLO_FLOPs_per_device  / 197e12 FLOP/s bf16
+  memory    = HLO_bytes_per_device  / 819e9  B/s HBM
+  collective= collective_bytes_per_device / 50e9 B/s ICI
+
+MEASURED SEMANTICS of the XLA analyses (verified empirically, see
+EXPERIMENTS.md §Dry-run): cost_analysis() and memory_analysis() on an
+SPMD-partitioned module report PER-DEVICE quantities, and while-loop
+(lax.scan) bodies are counted ONCE, not x trip-count.  All Roofline
+fields here are therefore per-device; scan undercounting is corrected by
+the loop-free probe programs in launch.analysis.
+
+cost_analysis() has no collective statistics, so collective bytes come
+from parsing the optimized HLO text and summing output-shape bytes of
+all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops (per-device shard shapes — consistent).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12  # bf16 per chip, TPU v5e
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link (~per-chip injection, 1 link)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'f32[128,256]' -> byte count; tuples handled by caller."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    count_by_kind: dict
+    async_pairs: int  # number of *-start ops (compute/comm overlap)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum output-shape bytes of every collective op in optimized HLO.
+
+    Counts each logical collective once (start/done pairs dedup'd), and
+    reports how many are async (-start form) — evidence XLA scheduled
+    them to overlap with compute.
+    """
+    bytes_by_kind: dict = {k: 0 for k in _COLLECTIVES}
+    count_by_kind: dict = {k: 0 for k in _COLLECTIVES}
+    async_pairs = 0
+    op_alt = "|".join(_COLLECTIVES)
+    pat = re.compile(
+        r"%?[\w.\-]+\s*=\s*(\S+)\s+(" + op_alt + r")(-start|-done)?\("
+    )
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # "%name = TYPE[dims] all-gather(...)" (or async -start/-done)
+        m = pat.match(ls)
+        if not m:
+            continue
+        shape_str, op, suffix = m.group(1), m.group(2), m.group(3)
+        if suffix == "-done":
+            continue  # counted at -start
+        if suffix == "-start":
+            async_pairs += 1
+        count_by_kind[op] += 1
+        bytes_by_kind[op] += _shape_bytes(shape_str)
+    return CollectiveStats(bytes_by_kind, count_by_kind, async_pairs)
+
+
+def cpu_float_norm_ghost_bytes(hlo_text: str, min_bytes: int = 2**26) -> int:
+    """Estimate CPU-pipeline-only f32 'ghost' buffers.
+
+    The CPU XLA backend has no native bf16 arithmetic: float
+    normalization upcasts bf16 loop carries/stacks to f32, materializing
+    full-size f32 copies of bf16 buffers (verified in the dry-run HLO:
+    ``f32[S] convert(bf16[S])`` feeding while-loop dus stacks).  The TPU
+    backend computes bf16 natively and does not allocate these.  We sum
+    distinct large f32 convert-results whose operand shape also exists
+    in bf16 — reported as a separate diagnostic so 'fits on 16 GB v5e'
+    can be judged net of the CPU-only inflation (see EXPERIMENTS.md).
+    """
+    bf16_shapes = set(re.findall(r"bf16\[([\d,]+)\]", hlo_text))
+    ghosts: dict = {}
+    for m in re.finditer(
+        r"%(\S+) = f32\[([\d,]+)\]\S* (?:convert|fusion)\(", hlo_text
+    ):
+        name, dims = m.group(1), m.group(2)
+        if dims not in bf16_shapes:
+            continue
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        if 4 * n >= min_bytes:
+            # one ghost per distinct shape per producer kind — convert
+            # chains alias, so count each shape once
+            ghosts[dims] = 4 * n
+    return sum(ghosts.values())
+
+
+@dataclasses.dataclass
+class Roofline:
+    """All quantities PER DEVICE. model_flops = useful (6ND-convention)
+    flops for the whole step divided by chip count."""
+
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    n_chips: int
+    model_flops: Optional[float] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        ts = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(ts, key=ts.get)
+
+    @property
+    def useful_flops_frac(self) -> Optional[float]:
+        if self.model_flops is None or self.flops == 0:
+            return None
+        return self.model_flops / self.flops
+
+    @property
+    def roofline_frac(self) -> float:
+        """Fraction of peak implied by the dominant term for USEFUL model
+        flops: (useful-flops time at peak) / (dominant bound time) — the
+        'MFU the roofline allows', the §Perf score."""
+        bound = max(self.t_compute, self.t_memory, self.t_collective)
+        if bound == 0:
+            return 0.0
+        useful = (self.model_flops if self.model_flops is not None
+                  else self.flops) / PEAK_FLOPS
+        return useful / bound
+
+    def row(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.collective_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_frac": self.useful_flops_frac,
+            "roofline_frac": self.roofline_frac,
+        }
+
+
+def from_compiled(compiled, n_chips: int, model_flops=None,
+                  hlo_text: Optional[str] = None) -> Roofline:
+    """model_flops argument: GLOBAL useful flops (divided here)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = parse_collectives(text)
+    return Roofline(
+        flops=flops,
+        hbm_bytes=hbm,
+        collective_bytes=float(coll.total_bytes),
+        n_chips=n_chips,
+        model_flops=(model_flops / n_chips
+                     if model_flops is not None else None),
+    )
+
+
+def model_flops_for(arch, cell) -> Optional[float]:
+    """MODEL_FLOPS: 6*N*D for dense LM train, 6*N_active*D for MoE;
+    2*N*D for LM forward-only; analytic estimates for others."""
+    if arch.family == "transformer":
+        tokens = cell.shape["global_batch"] * (
+            cell.shape["seq_len"] if cell.kind != "decode" else 1
+        )
+        n_params = (
+            arch.cfg.active_param_count()
+            if arch.cfg.moe else arch.cfg.param_count()
+        )
+        if cell.kind == "train":
+            return 6.0 * n_params * tokens
+        if cell.kind == "prefill":
+            return 2.0 * n_params * tokens
+        # decode: fwd flops + attention over the cache
+        L, KV, dh = arch.cfg.n_layers, arch.cfg.n_kv_heads, arch.cfg.head_dim
+        H = arch.cfg.n_heads
+        attn = (
+            2.0 * 2.0 * cell.shape["global_batch"] * H * dh
+            * cell.shape["seq_len"] * L
+        )
+        return 2.0 * n_params * tokens + attn
+    if arch.family == "sasrec":
+        e = arch.cfg.embed_dim
+        if cell.kind == "retrieval":
+            return 2.0 * cell.shape["n_candidates"] * e
+        if cell.kind == "serve":
+            # user encoder + full-catalog MIPS
+            S = arch.cfg.seq_len
+            enc = 2.0 * arch.cfg.n_blocks * (4 * e * e * S + 2 * S * S * e)
+            return cell.shape["batch"] * (
+                enc + 2.0 * arch.cfg.n_items * e
+            )
+        S = arch.cfg.seq_len
+        enc = 2.0 * arch.cfg.n_blocks * (4 * e * e * S + 2 * S * S * e)
+        return 3.0 * cell.shape["batch"] * (
+            enc + 2.0 * S * arch.cfg.n_neg * e
+        )
+    if arch.family == "recsys":
+        cfg = arch.cfg
+        B = cell.shape.get("n_candidates", cell.shape.get("batch", 1))
+        d0 = cfg.interaction_dim
+        if cfg.kind == "dcn_v2":
+            per = 2.0 * cfg.n_cross_layers * d0 * d0
+            dims = (d0,) + cfg.mlp_dims
+            for i in range(len(dims) - 1):
+                per += 2.0 * dims[i] * dims[i + 1]
+        elif cfg.kind == "fm":
+            per = 4.0 * cfg.n_sparse * cfg.embed_dim
+        else:  # autoint
+            F, H, da = cfg.n_sparse, cfg.n_attn_heads, cfg.d_attn
+            e = cfg.embed_dim
+            per = 0.0
+            d_in = e
+            for _ in range(cfg.n_attn_layers):
+                per += 2.0 * F * (4 * d_in * H * da) + 4.0 * F * F * H * da
+                d_in = H * da
+        mult = 3.0 if cell.kind == "train" else 1.0
+        return mult * B * per
+    if arch.family == "nequip":
+        E = cell.shape["n_edges"]
+        C = arch.cfg.channels
+        # per edge: radial MLP + tensor-product paths (~9 paths, m<=5)
+        per_edge = 2.0 * (arch.cfg.n_rbf * 64 + 64 * 9 * C) + 9 * 2.0 * C * 15
+        return 3.0 * arch.cfg.n_layers * E * per_edge
+    return None

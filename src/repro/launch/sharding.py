@@ -1,0 +1,313 @@
+"""Sharding policy: DP / FSDP / TP / EP / SP rules for every family.
+
+Everything is divisibility-checked: an axis is only assigned to a dim it
+divides, otherwise the next candidate (or replication) is used — so the
+same rules compile for 40-expert granite and 384-expert kimi, on the
+single-pod and the 2-pod mesh alike.  What ends up replicated is visible
+in the dry-run memory analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """Knobs the perf hillclimb flips."""
+
+    tp_axis: str = "model"
+    seq_parallel: bool = False  # shard activations' seq dim over tp
+    fsdp: bool = True  # shard big params over the data axis too
+    shard_moe_buffer: bool = True
+    # Attention-boundary and FFN-hidden layout pins (§Perf iterations
+    # 1-2). Size-dependent tradeoff: pinning swaps weight gathers for
+    # activation gathers — a 10x collective win at 72B+ scale, but a
+    # regression for <10B models whose FFN weights are cheaper to
+    # replicate than their activations are to gather. Per-arch override
+    # via Arch.policy_overrides.
+    pin_attn_boundary: bool = True
+    pin_ffn_hidden: bool = True
+
+    def dp(self, mesh: Mesh) -> tuple:
+        return tuple(a for a in mesh.axis_names if a != self.tp_axis)
+
+
+def _div(n: int, mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return True
+    if isinstance(axes, str):
+        axes = (axes,)
+    total = 1
+    for a in axes:
+        if a not in mesh.shape:  # e.g. no "pod" axis on single-pod mesh
+            return False
+        total *= mesh.shape[a]
+    return n % total == 0
+
+
+def pick(mesh: Mesh, dim: int, *candidates):
+    """First candidate axis (or axis tuple) that divides dim; else None."""
+    for c in candidates:
+        if c is None:
+            continue
+        if _div(dim, mesh, c):
+            return c
+    return None
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def fit_spec(spec: P, ndim: int) -> P:
+    """Adapt a spec to a lower-rank tensor by dropping trailing Nones
+    (adafactor vr/vc reuse the parameter rules on reduced shapes)."""
+    entries = list(spec)
+    while len(entries) > ndim and entries[-1] is None:
+        entries.pop()
+    if len(entries) > ndim:
+        return P()
+    return P(*entries)
+
+
+def _path_str(path) -> str:
+    return "/".join(
+        str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+        for p in path
+    )
+
+
+def specs_by_rules(tree, rules: Callable[[str, tuple], P]):
+    """Map a (path, shape) -> PartitionSpec rule over a pytree of
+    ShapeDtypeStructs (or arrays)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: rules(_path_str(path), tuple(leaf.shape)), tree
+    )
+
+
+# ---------------------------------------------------------------------------
+# Transformer parameter rules
+# ---------------------------------------------------------------------------
+
+
+def transformer_param_rules(mesh: Mesh, pol: ShardingPolicy):
+    tp = pol.tp_axis
+
+    def rules(path: str, shape: tuple) -> P:
+        nd = len(shape)
+
+        def ax(i, *cands):
+            # bounds-safe: reduced shapes (adafactor row/col stats) use
+            # the same rules with trailing dims dropped
+            if i >= nd or i < -nd:
+                return None
+            return pick(mesh, shape[i], *cands)
+
+        if path.endswith("embed"):  # (V, D)
+            return P(ax(0, tp), ax(1, "data", "pod"))
+        if path.endswith("lm_head"):  # (D, V)
+            return P(ax(0, "data", "pod"), ax(1, tp))
+        if re.search(r"layers/(wq|wk|wv)$", path):  # (L, D, X)
+            return P(None, ax(1, "data", "pod") if pol.fsdp else None,
+                     ax(2, tp))
+        if path.endswith("layers/wo"):  # (L, X, D)
+            return P(None, ax(1, tp),
+                     ax(2, "data", "pod") if pol.fsdp else None)
+        if re.search(r"layers/(w_gate|w_up)$", path):  # (L, D, F)
+            return P(None, ax(1, "data", "pod") if pol.fsdp else None,
+                     ax(2, tp))
+        if path.endswith("layers/w_down"):  # (L, F, D)
+            return P(None, ax(1, tp),
+                     ax(2, "data", "pod") if pol.fsdp else None)
+        if path.endswith("moe/router"):  # (L, D, E)
+            return P(None, ax(1, "data", "pod") if pol.fsdp else None,
+                     None)
+        if re.search(r"moe/(w_gate|w_up)$", path):  # (L, E, D, Fe)
+            e_ax = ax(1, tp, "pod")
+            d_ax = ax(2, "pod" if e_ax != "pod" else None)
+            f_ax = ax(3, "data") if pol.fsdp else None
+            return P(None, e_ax, d_ax, f_ax)
+        if path.endswith("moe/w_down"):  # (L, E, Fe, D)
+            e_ax = ax(1, tp, "pod")
+            f_ax = ax(2, "data") if pol.fsdp else None
+            d_ax = ax(3, "pod" if e_ax != "pod" else None)
+            return P(None, e_ax, f_ax, d_ax)
+        # norms, biases, kv_quant projections: replicated
+        return P()
+
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# RecSys / SASRec / NequIP parameter rules
+# ---------------------------------------------------------------------------
+
+
+def recsys_param_rules(mesh: Mesh, pol: ShardingPolicy):
+    tp = pol.tp_axis
+
+    def rules(path: str, shape: tuple) -> P:
+        def ax(i, *cands):
+            return pick(mesh, shape[i], *cands)
+
+        if path.endswith("tables") or path.endswith("linear_sparse"):
+            # (F*V, e): row-shard the huge table over EVERYTHING possible
+            return P(ax(0, ("pod", "data", "model"), ("data", "model"),
+                        ("data",)), None)
+        if path.endswith("item_emb"):  # (n_items, e)
+            return P(ax(0, ("pod", "data", "model"), ("data", "model"),
+                        ("data",)), None)
+        if "mlp" in path and len(shape) == 2:
+            return P(None, ax(1, tp))
+        if "cross" in path and len(shape) == 3:
+            return P(None, None, None)  # tiny (429 x 429)
+        if len(shape) >= 2:
+            return P(*([None] * (len(shape) - 1) + [ax(-1, tp)]))
+        return P()
+
+    return rules
+
+
+def nequip_param_rules(mesh: Mesh, pol: ShardingPolicy):
+    def rules(path: str, shape: tuple) -> P:
+        return P()  # ~100k params: replicate
+
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# Batch / activation specs
+# ---------------------------------------------------------------------------
+
+
+def batch_rules_leading_dp(mesh: Mesh, pol: ShardingPolicy):
+    """Shard dim 0 over the DP axes (batch/nodes/edges); rest replicated."""
+    dpa = pol.dp(mesh)
+
+    def rules(path: str, shape: tuple) -> P:
+        if not shape:
+            return P()
+        a0 = pick(mesh, shape[0], dpa, dpa[:1], dpa[-1:])
+        return P(*([a0] + [None] * (len(shape) - 1)))
+
+    return rules
+
+
+def kv_cache_rules(mesh: Mesh, pol: ShardingPolicy):
+    """Cache (L, B, S, KV, dh) or codes (L, B, S, KV, W):
+    B over DP, S over tp (flash-decoding style length splits)."""
+    dpa = pol.dp(mesh)
+    tp = pol.tp_axis
+
+    def rules(path: str, shape: tuple) -> P:
+        if len(shape) < 4:
+            return P()
+        b_ax = pick(mesh, shape[1], dpa, dpa[:1], dpa[-1:])
+        s_ax = pick(mesh, shape[2], tp)
+        return P(*([None, b_ax, s_ax] + [None] * (len(shape) - 3)))
+
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# Activation constraint hook (passed into model forwards)
+# ---------------------------------------------------------------------------
+
+
+def make_constrain(mesh: Mesh, pol: ShardingPolicy, param_rules=None):
+    dpa = pol.dp(mesh)
+    tp = pol.tp_axis
+
+    def constrain(a, kind: str):
+        if kind == "layer_params" and param_rules is not None:
+            # Per-layer sliced weights inside a scan body: constrain the
+            # slice back to its sharded spec so GSPMD cannot hoist the
+            # FSDP all-gather out of the loop (which would materialize
+            # ALL layers' weights at once — see EXPERIMENTS.md §Perf).
+            def f(path, leaf):
+                p = "layers/" + _path_str(path)
+                try:
+                    spec = param_rules(p, (None,) + tuple(leaf.shape))
+                    sub = P(*spec[1:len(leaf.shape) + 1])
+                    return jax.lax.with_sharding_constraint(
+                        leaf, NamedSharding(mesh, sub)
+                    )
+                except Exception:
+                    return leaf
+
+            return jax.tree_util.tree_map_with_path(f, a)
+        try:
+            if kind == "resid":  # (B, S, D)
+                sp = pick(mesh, a.shape[1], tp) if pol.seq_parallel else None
+                spec = P(pick(mesh, a.shape[0], dpa, dpa[:1], dpa[-1:]),
+                         sp, None)
+            elif kind in ("qkv", "kv"):  # (B, S, H, dh)
+                spec = P(pick(mesh, a.shape[0], dpa, dpa[:1], dpa[-1:]),
+                         None, pick(mesh, a.shape[2], tp), None)
+            elif kind == "ffn_hidden":  # (B, S, F): Megatron column-
+                # parallel hidden — F over tp; without this pin GSPMD
+                # replicates the FFN weights instead (§Perf iteration 2)
+                if not pol.pin_ffn_hidden:
+                    return a
+                spec = P(pick(mesh, a.shape[0], dpa, dpa[:1], dpa[-1:]),
+                         None, pick(mesh, a.shape[2], tp))
+            elif kind in ("attn_out", "v"):  # (B, S, H|KV, dh)
+                if not pol.pin_attn_boundary:
+                    return a
+                spec = P(pick(mesh, a.shape[0], dpa, dpa[:1], dpa[-1:]),
+                         None, pick(mesh, a.shape[2], tp), None)
+            elif kind == "logits":  # (B, S, V)
+                spec = P(pick(mesh, a.shape[0], dpa, dpa[:1], dpa[-1:]),
+                         None, pick(mesh, a.shape[2], tp))
+            elif kind == "moe_buffer" and pol.shard_moe_buffer:
+                # (n_groups, E, C, D); the expert axis must not reuse an
+                # axis already carrying the group dim
+                g_ax = pick(mesh, a.shape[0], dpa, dpa[:1], dpa[-1:])
+                used = (g_ax,) if isinstance(g_ax, str) else (g_ax or ())
+                e_cands = [c for c in (tp, "pod") if c not in used]
+                spec = P(g_ax, pick(mesh, a.shape[1], *e_cands) if e_cands
+                         else None, None, None)
+            elif kind == "node_feats":  # (N, C, m)
+                spec = P(pick(mesh, a.shape[0], dpa, dpa[:1], dpa[-1:]),
+                         None, None)
+            elif kind == "edge_feats":  # (E, ...) edge-wise tensors
+                spec = P(*(
+                    [pick(mesh, a.shape[0], dpa, dpa[:1], dpa[-1:])]
+                    + [None] * (a.ndim - 1)
+                ))
+            elif kind == "edge_chunked":  # (chunks, E/chunks, ...)
+                spec = P(*(
+                    [None, pick(mesh, a.shape[1], dpa, dpa[:1],
+                                dpa[-1:])]
+                    + [None] * (a.ndim - 2)
+                ))
+            else:
+                return a
+            return jax.lax.with_sharding_constraint(
+                a, NamedSharding(mesh, spec)
+            )
+        except (ValueError, TypeError):
+            return a
+
+    return constrain
+
+
+# ---------------------------------------------------------------------------
+# Attach shardings to abstract values
+# ---------------------------------------------------------------------------
+
+
+def with_shardings(tree_sds, specs, mesh: Mesh):
+    """Return ShapeDtypeStructs with NamedShardings attached."""
+    return jax.tree_util.tree_map(
+        lambda s, spec: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, spec)
+        ),
+        tree_sds, specs,
+    )

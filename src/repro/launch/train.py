@@ -1,0 +1,185 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \
+      --steps 100 --batch 8 --seq 128 --reduced --ckpt-dir /tmp/ckpt
+
+``--reduced`` scales the architecture down (layers/width/vocab) so any
+assigned config trains on this CPU container; the full configs are
+exercised through the dry-run.  The loop is fault-tolerant: it resumes
+from the latest committed checkpoint (state + data cursor + RNG) and a
+``--die-at-step N`` flag exists purely to let tests/demos kill and
+resurrect it deterministically.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.data.synthetic import (
+    ClickStream, IteratorState, SequenceStream, TokenStream,
+)
+from repro.train.checkpoint import CheckpointManager
+from repro.train.trainer import TrainConfig, init_state, make_train_step
+from repro.models import transformer as TFM
+
+
+def reduced_arch(arch):
+    """Scale an assigned config down to CPU size, same family/topology."""
+    import copy
+
+    a = copy.copy(arch)
+    cfg = arch.cfg
+    if arch.family == "transformer":
+        moe = cfg.moe
+        if moe is not None:
+            moe = dataclasses.replace(
+                moe, n_experts=min(moe.n_experts, 8), d_ff=64,
+                group_size=64,
+            )
+        a.cfg = dataclasses.replace(
+            cfg, n_layers=2, d_model=64,
+            n_heads=4, n_kv_heads=min(cfg.n_kv_heads, 4), d_head=16,
+            d_ff=128, vocab=512, moe=moe, dtype=jnp.float32,
+            param_dtype=jnp.float32, q_chunk=0,
+        )
+    elif arch.family == "nequip":
+        a.cfg = dataclasses.replace(cfg, n_layers=2, channels=8)
+    elif arch.family == "sasrec":
+        a.cfg = dataclasses.replace(
+            cfg, n_items=1000, embed_dim=16, seq_len=16, n_neg=32
+        )
+    else:  # recsys
+        kw = dict(vocab_per_field=1000, embed_dim=8)
+        if cfg.kind == "dcn_v2":
+            kw["mlp_dims"] = (64, 32)
+        a.cfg = dataclasses.replace(cfg, **kw)
+    a.train_cfg = dataclasses.replace(
+        arch.train_cfg, microbatches=1,
+        opt=dataclasses.replace(arch.train_cfg.opt, warmup_steps=10,
+                                total_steps=1000),
+    )
+    return a
+
+
+def make_stream(arch, batch: int, seq: int, seed: int, step: int = 0):
+    st = IteratorState(seed=seed, step=step)
+    if arch.family == "transformer":
+        return TokenStream(st, batch, seq, arch.cfg.vocab)
+    if arch.family == "sasrec":
+        return SequenceStream(
+            st, batch, arch.cfg.seq_len, arch.cfg.n_items,
+            arch.cfg.n_neg,
+        )
+    if arch.family == "recsys":
+        return ClickStream(
+            st, batch, arch.cfg.n_dense, arch.cfg.n_sparse,
+            arch.cfg.vocab_per_field,
+        )
+    if arch.family == "nequip":
+        from repro.data import graphs as G
+
+        class GraphStream:
+            n_graphs = max(batch // 8, 1)  # STATIC per stream
+
+            def __init__(self, state):
+                self.state = state
+
+            def next(self):
+                b = G.batch_small_graphs(
+                    self.state.seed * 100003 + self.state.step,
+                    n_graphs=self.n_graphs, nodes_per=12,
+                    edges_per=32, n_species=arch.cfg.n_species,
+                )
+                b.pop("n_graphs")  # static: closed over by the loss
+                b = {k: jnp.asarray(v) for k, v in b.items()}
+                key = jax.random.PRNGKey(self.state.step)
+                b["energy"] = jax.random.normal(key, (self.n_graphs,))
+                b["forces"] = (
+                    jax.random.normal(key, b["positions"].shape) * 0.1
+                )
+                self.state.step += 1
+                return b
+
+        return GraphStream(st)
+    raise ValueError(arch.family)
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--steps", type=int, default=100)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=128)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--reduced", action="store_true")
+    p.add_argument("--ckpt-dir", default=None)
+    p.add_argument("--ckpt-every", type=int, default=50)
+    p.add_argument("--die-at-step", type=int, default=0,
+                   help="simulate a node failure (for FT tests)")
+    p.add_argument("--log-every", type=int, default=10)
+    args = p.parse_args(argv)
+
+    arch = registry.get(args.arch)
+    if args.reduced:
+        arch = reduced_arch(arch)
+
+    from repro import models
+
+    fam = getattr(models, arch.family)
+    key = jax.random.PRNGKey(args.seed)
+    params = fam.init_params(key, arch.cfg)
+    state = init_state(key, params, arch.train_cfg)
+    loss_fn = arch.loss_fn(lambda a, k: a)
+    stream_tmp = make_stream(arch, args.batch, args.seq, args.seed)
+    if arch.family == "nequip":
+        base = loss_fn
+        ng = stream_tmp.n_graphs
+        loss_fn = lambda p, b: base(p, dict(b, n_graphs=ng))
+    step_fn = jax.jit(make_train_step(loss_fn, arch.train_cfg))
+
+    start_step = 0
+    mgr = None
+    if args.ckpt_dir:
+        mgr = CheckpointManager(args.ckpt_dir, keep_n=3)
+        latest = mgr.latest_step()
+        if latest is not None:
+            state, extra = mgr.restore(state, latest)
+            start_step = latest
+            args.seed = extra.get("seed", args.seed)
+            print(f"[restore] resumed from step {latest}")
+
+    stream = make_stream(arch, args.batch, args.seq, args.seed,
+                         step=start_step)
+
+    t0 = time.time()
+    for i in range(start_step, args.steps):
+        if args.die_at_step and i == args.die_at_step:
+            print(f"[failure-sim] dying at step {i}", flush=True)
+            sys.exit(42)
+        batch = stream.next()
+        state, metrics = step_fn(state, batch)
+        if (i + 1) % args.log_every == 0 or i == start_step:
+            dt = time.time() - t0
+            print(
+                f"step {i+1:5d} loss {float(metrics['loss']):.4f} "
+                f"gnorm {float(metrics['grad_norm']):.3f} "
+                f"({dt:.1f}s)", flush=True,
+            )
+        if mgr and (i + 1) % args.ckpt_every == 0:
+            mgr.save(i + 1, state, extra={"seed": args.seed})
+    if mgr:
+        mgr.save(args.steps, state, extra={"seed": args.seed})
+        mgr.wait()
+    print("[done]")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

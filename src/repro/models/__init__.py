@@ -1,0 +1,4 @@
+"""Model zoo for the assigned architectures."""
+from repro.models import common, transformer, moe, nequip, recsys, sasrec
+
+__all__ = ["common", "transformer", "moe", "nequip", "recsys", "sasrec"]

@@ -1,0 +1,211 @@
+"""Shared model-building blocks (pure JAX, no flax).
+
+Params are plain nested dicts of jnp arrays; every block is a function
+``(params, x, cfg) -> y``.  Layers are stacked along a leading L axis and
+driven by ``jax.lax.scan`` so that 80-layer configs compile fast.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, in_axis=-2, dtype=jnp.float32, scale=1.0):
+    fan_in = shape[in_axis]
+    std = scale / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    # Variance in fp32 (reduction accuracy) but x is rescaled in its own
+    # dtype: materializing x.astype(f32) as the first op makes XLA stash
+    # the scan-carry residual in f32 — doubling activation memory at
+    # 70B+ scale (observed in the dry-run; see EXPERIMENTS.md §Perf).
+    var = jnp.mean(
+        jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True
+    )
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * scale.astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale + bias).astype(x.dtype)
+
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(d_head: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head)
+    )
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float = 10000.0
+) -> jax.Array:
+    """x: (..., S, H, dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # (dh/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(angles), jnp.sin(angles)  # (..., S, 1, dh/2)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, causal or full, query-chunked for long prefill)
+# ---------------------------------------------------------------------------
+
+
+def gqa_attention(
+    q: jax.Array,  # (B, S, H, dh)
+    k: jax.Array,  # (B, T, KV, dh)
+    v: jax.Array,  # (B, T, KV, dh)
+    *,
+    causal: bool = True,
+    q_offset: int | jax.Array = 0,
+    q_chunk: int = 0,
+    kv_len: Optional[jax.Array] = None,  # (B,) valid KV prefix lengths
+) -> jax.Array:
+    """Grouped-query attention; repeats KV heads logically via reshape.
+
+    q_chunk > 0 processes queries in chunks of that size (bounds the
+    (Sq, Skv) score tile for 32k prefill).
+    """
+    B, S, H, dh = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(dh)
+    qr = q.reshape(B, S, KV, G, dh)
+
+    def chunk_attn(q_c, qpos_c):
+        # q_c: (B, Sc, KV, G, dh). Keep operands in their storage dtype
+        # and accumulate in f32 — materializing .astype(f32) copies of
+        # q/k/v lets XLA hoist the converts into full-size f32 buffers
+        # (2x activation / KV-cache memory; observed in the dry-run).
+        logits = jnp.einsum(
+            "bskgd,btkd->bkgst", q_c, k,
+            preferred_element_type=jnp.float32,
+        ) * scale  # (B, KV, G, Sc, T) f32
+        tpos = jnp.arange(T)
+        mask = None
+        if causal:
+            mask = qpos_c[:, None] >= tpos[None, :]  # (Sc, T)
+            mask = mask[None, None, None]
+        if kv_len is not None:
+            lm = tpos[None, :] < kv_len[:, None]  # (B, T)
+            lm = lm[:, None, None, None, :]
+            mask = lm if mask is None else (mask & lm)
+        if mask is not None:
+            logits = jnp.where(mask, logits, -1e30)
+        p = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        out = jnp.einsum(
+            "bkgst,btkd->bskgd", p, v,
+            preferred_element_type=jnp.float32,
+        )
+        return out.astype(q.dtype)
+
+    qpos = jnp.arange(S) + q_offset
+    if q_chunk and S > q_chunk and S % q_chunk == 0:
+        n_chunks = S // q_chunk
+        qc = qr.reshape(B, n_chunks, q_chunk, KV, G, dh).transpose(
+            1, 0, 2, 3, 4, 5
+        )
+        pc = qpos.reshape(n_chunks, q_chunk)
+        out = jax.lax.map(lambda ab: chunk_attn(ab[0], ab[1]), (qc, pc))
+        out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H, dh)
+    else:
+        out = chunk_attn(qr, qpos).reshape(B, S, H, dh)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def softmax_cross_entropy(
+    logits: jax.Array, labels: jax.Array, mask: Optional[jax.Array] = None
+) -> jax.Array:
+    """Mean next-token CE. logits (..., V) fp; labels (...,) int."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(
+        logits, labels[..., None], axis=-1
+    )[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def binary_cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels
+        + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag (JAX has no native one — built from take + segment_sum)
+# ---------------------------------------------------------------------------
+
+
+def embedding_bag(
+    table: jax.Array,  # (vocab, dim)
+    indices: jax.Array,  # (n_lookups,)
+    segment_ids: jax.Array,  # (n_lookups,) which bag each lookup joins
+    num_bags: int,
+    weights: Optional[jax.Array] = None,
+    combiner: str = "sum",
+) -> jax.Array:
+    """Multi-hot embedding lookup + per-bag reduction: (num_bags, dim)."""
+    rows = jnp.take(table, indices, axis=0)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    summed = jax.ops.segment_sum(rows, segment_ids, num_segments=num_bags)
+    if combiner == "sum":
+        return summed
+    counts = jax.ops.segment_sum(
+        jnp.ones_like(segment_ids, dtype=rows.dtype),
+        segment_ids,
+        num_segments=num_bags,
+    )
+    if combiner == "mean":
+        return summed / jnp.maximum(counts[:, None], 1.0)
+    raise ValueError(combiner)

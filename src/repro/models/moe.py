@@ -1,0 +1,134 @@
+"""Mixture-of-Experts FFN block (token-choice top-k, GShard-style).
+
+Dispatch is gather/scatter-based (NOT the one-hot einsum, whose FLOP cost
+would dwarf the expert matmuls at E=384): tokens are grouped (a group is
+a data-parallel shard's slice, so sorting stays shard-local), each
+(token, choice) pair receives a slot in a per-group (E, capacity) buffer
+via a stable sort by expert id, and the expert GEMMs run batched over the
+buffer.  Overflowing pairs are dropped (capacity_factor controls head
+room) — standard GShard semantics.
+
+Sharding intent (constrained via with_sharding_constraint by the caller's
+mesh rules):
+  buffer (n_groups, E, C, D): groups over data/pod, E over model
+  expert weights (E, D, F): E over model, F over data (FSDP'd at rest)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int  # per-expert hidden width
+    capacity_factor: float = 1.25
+    group_size: int = 4096  # tokens per dispatch group
+    router_aux_weight: float = 0.01
+
+
+def init_moe(key, cfg: MoEConfig, d_model: int, dtype=jnp.float32):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    E, F = cfg.n_experts, cfg.d_ff
+    return {
+        "router": cm.dense_init(k1, (d_model, E), dtype=jnp.float32),
+        "w_gate": cm.dense_init(k2, (E, d_model, F), in_axis=-2, dtype=dtype),
+        "w_up": cm.dense_init(k3, (E, d_model, F), in_axis=-2, dtype=dtype),
+        "w_down": cm.dense_init(k4, (E, F, d_model), in_axis=-2, dtype=dtype),
+    }
+
+
+def moe_block(
+    params,
+    x: jax.Array,  # (T, D) flattened tokens
+    cfg: MoEConfig,
+    constrain=lambda a, kind: a,  # sharding-constraint hook
+):
+    """Returns (out (T, D), aux_loss scalar)."""
+    T, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    G = min(cfg.group_size, T)
+    assert T % G == 0, (T, G)
+    n_groups = T // G
+    cap = int((G * k * cfg.capacity_factor) / E) + 1
+
+    logits = x.astype(jnp.float32) @ params["router"]  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)  # (T, k)
+    top_p = top_p / jnp.maximum(
+        jnp.sum(top_p, axis=-1, keepdims=True), 1e-9
+    )
+
+    # Load-balance auxiliary loss (Switch/GShard)
+    me = jnp.mean(probs, axis=0)  # (E,)
+    ce = jnp.mean(
+        jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32), axis=0
+    )
+    aux = cfg.router_aux_weight * E * jnp.sum(me * ce)
+
+    # ---- slot assignment (per group, static shapes) ----
+    ge = top_e.reshape(n_groups, G * k)  # expert id per pair
+    gp = top_p.reshape(n_groups, G * k).astype(x.dtype)
+    order = jnp.argsort(ge, axis=-1, stable=True)  # (n_groups, G*k)
+    sorted_e = jnp.take_along_axis(ge, order, axis=-1)
+    # position within expert = index - first index of that expert
+    first = jax.vmap(
+        lambda se: jnp.searchsorted(se, jnp.arange(E), side="left")
+    )(sorted_e)  # (n_groups, E)
+    pos_sorted = (
+        jnp.arange(G * k)[None, :]
+        - jnp.take_along_axis(first, sorted_e, axis=-1)
+    )
+    inv = jnp.argsort(order, axis=-1)
+    pos = jnp.take_along_axis(pos_sorted, inv, axis=-1)  # (n_groups, G*k)
+    keep = pos < cap
+    slot = jnp.where(keep, ge * cap + pos, E * cap)  # E*cap = drop bin
+
+    # ---- dispatch: scatter rows into (n_groups, E*cap+1, D) ----
+    xg = x.reshape(n_groups, G, D)
+    rows = jnp.repeat(xg, k, axis=1)  # (n_groups, G*k, D) pair rows
+
+    def scatter_group(slots_g, rows_g):
+        buf = jnp.zeros((E * cap + 1, D), rows_g.dtype)
+        return buf.at[slots_g].set(rows_g, mode="drop")
+
+    buffer = jax.vmap(scatter_group)(slot, rows)[:, :-1]  # drop bin cut
+    buffer = buffer.reshape(n_groups, E, cap, D)
+    buffer = constrain(buffer, "moe_buffer")
+
+    # ---- expert GEMMs (batched over E) ----
+    gate = jnp.einsum(
+        "gecd,edf->gecf", buffer, params["w_gate"].astype(buffer.dtype)
+    )
+    up = jnp.einsum(
+        "gecd,edf->gecf", buffer, params["w_up"].astype(buffer.dtype)
+    )
+    hidden = cm.swiglu(gate, up)
+    out_buf = jnp.einsum(
+        "gecf,efd->gecd", hidden, params["w_down"].astype(buffer.dtype)
+    )
+    out_buf = constrain(out_buf, "moe_buffer")
+    out_flat = out_buf.reshape(n_groups, E * cap, D)
+    # append a zero row as the drop bin target
+    out_flat = jnp.concatenate(
+        [out_flat, jnp.zeros((n_groups, 1, D), out_buf.dtype)], axis=1
+    )
+
+    # ---- combine: gather back + weighted sum over k choices ----
+    def gather_group(out_g, slots_g, w_g):
+        picked = out_g[slots_g]  # (G*k, D) drop bin -> zeros
+        return picked * w_g[:, None]
+
+    contrib = jax.vmap(gather_group)(
+        out_flat, slot, gp * keep.astype(gp.dtype)
+    )  # (n_groups, G*k, D)
+    out = jnp.sum(contrib.reshape(n_groups, G, k, D), axis=2)
+    return out.reshape(T, D), aux

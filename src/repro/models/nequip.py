@@ -1,0 +1,448 @@
+"""NequIP [Batzner et al., arXiv:2101.03164] — E(3)-equivariant GNN.
+
+Self-contained implementation (no e3nn):
+
+* node features are irrep blocks {l: (n_nodes, channels, 2l+1)}, l <= l_max
+* edge attributes: real spherical harmonics Y_l(r_hat) (explicit formulas
+  for l = 0, 1, 2) and a radial Bessel basis with a polynomial cutoff
+  envelope
+* interaction = tensor-product message passing: neighbor feature irrep l1
+  x edge SH irrep l2 -> output irrep l3 contracted through the *Gaunt
+  coupling tensor* C[l1 l2 l3]_{m1 m2 m3} = integral of
+  Y_{l1 m1} Y_{l2 m2} Y_{l3 m3} over the sphere, the unique (up to scale)
+  equivariant bilinear map for each path.  C is computed numerically at import time by Gauss-Legendre
+  x trapezoid quadrature, which is EXACT for polynomial integrands of
+  the degrees involved (< 7).
+* messages are weighted by a radial MLP (per path x channel), aggregated
+  with segment_sum (JAX's message-passing primitive — see DESIGN.md),
+  followed by self-interaction linears and gated nonlinearities.
+* output: scalar (l=0) head -> per-atom energies -> total energy; forces
+  come from jax.grad wrt positions (tested for rotation equivariance).
+
+ASH applicability: scalar-quantizing irrep features breaks exact
+equivariance, and force-field message passing is not a MIPS problem —
+the paper's technique is NOT wired into this arch (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import common as cm
+
+# ---------------------------------------------------------------------------
+# Real spherical harmonics (explicit, l <= 2) and Gaunt coupling tensors
+# ---------------------------------------------------------------------------
+
+
+def sph_harm_np(l: int, xyz: np.ndarray) -> np.ndarray:
+    """Real SH on unit vectors, numpy; xyz (..., 3) -> (..., 2l+1)."""
+    x, y, z = xyz[..., 0], xyz[..., 1], xyz[..., 2]
+    if l == 0:
+        return np.full(xyz.shape[:-1] + (1,), 0.5 / math.sqrt(math.pi))
+    if l == 1:
+        c = math.sqrt(3.0 / (4.0 * math.pi))
+        return np.stack([c * y, c * z, c * x], axis=-1)
+    if l == 2:
+        c = [
+            0.5 * math.sqrt(15.0 / math.pi),   # xy
+            0.5 * math.sqrt(15.0 / math.pi),   # yz
+            0.25 * math.sqrt(5.0 / math.pi),   # 3z^2-1
+            0.5 * math.sqrt(15.0 / math.pi),   # xz
+            0.25 * math.sqrt(15.0 / math.pi),  # x^2-y^2
+        ]
+        return np.stack(
+            [
+                c[0] * x * y,
+                c[1] * y * z,
+                c[2] * (3.0 * z * z - 1.0),
+                c[3] * x * z,
+                c[4] * (x * x - y * y),
+            ],
+            axis=-1,
+        )
+    raise NotImplementedError(l)
+
+
+def sph_harm(l: int, xyz: jax.Array) -> jax.Array:
+    """Real SH in jnp (same formulas)."""
+    x, y, z = xyz[..., 0], xyz[..., 1], xyz[..., 2]
+    if l == 0:
+        return jnp.full(
+            xyz.shape[:-1] + (1,), 0.5 / math.sqrt(math.pi), xyz.dtype
+        )
+    if l == 1:
+        c = math.sqrt(3.0 / (4.0 * math.pi))
+        return jnp.stack([c * y, c * z, c * x], axis=-1)
+    if l == 2:
+        c0 = 0.5 * math.sqrt(15.0 / math.pi)
+        c2 = 0.25 * math.sqrt(5.0 / math.pi)
+        c4 = 0.25 * math.sqrt(15.0 / math.pi)
+        return jnp.stack(
+            [
+                c0 * x * y,
+                c0 * y * z,
+                c2 * (3.0 * z * z - 1.0),
+                c0 * x * z,
+                c4 * (x * x - y * y),
+            ],
+            axis=-1,
+        )
+    raise NotImplementedError(l)
+
+
+@functools.lru_cache(maxsize=None)
+def gaunt_tensor(l1: int, l2: int, l3: int) -> np.ndarray:
+    """C[m1, m2, m3] = ∫ Y_{l1 m1} Y_{l2 m2} Y_{l3 m3} dΩ (exact quadrature)."""
+    n_theta, n_phi = 16, 32
+    t_nodes, t_weights = np.polynomial.legendre.leggauss(n_theta)
+    phi = (np.arange(n_phi) + 0.5) * (2 * np.pi / n_phi)
+    w_phi = 2 * np.pi / n_phi
+    ct = t_nodes  # cos(theta) in [-1, 1]
+    st = np.sqrt(1 - ct**2)
+    # grid of unit vectors (n_theta, n_phi, 3)
+    xyz = np.stack(
+        [
+            st[:, None] * np.cos(phi)[None, :],
+            st[:, None] * np.sin(phi)[None, :],
+            np.broadcast_to(ct[:, None], (n_theta, n_phi)),
+        ],
+        axis=-1,
+    )
+    Y1 = sph_harm_np(l1, xyz)  # (T, P, 2l1+1)
+    Y2 = sph_harm_np(l2, xyz)
+    Y3 = sph_harm_np(l3, xyz)
+    w = t_weights[:, None] * w_phi  # (T, 1)
+    C = np.einsum("tpa,tpb,tpc,tp->abc", Y1, Y2, Y3, np.broadcast_to(
+        w, (n_theta, n_phi)
+    ))
+    C[np.abs(C) < 1e-12] = 0.0
+    return C.astype(np.float32)
+
+
+def tp_paths(l_max: int) -> list[tuple[int, int, int]]:
+    """All (l_in, l_edge, l_out) with non-vanishing Gaunt coupling."""
+    paths = []
+    for l1 in range(l_max + 1):
+        for l2 in range(l_max + 1):
+            for l3 in range(l_max + 1):
+                if abs(l1 - l2) <= l3 <= l1 + l2 and (l1 + l2 + l3) % 2 == 0:
+                    if np.abs(gaunt_tensor(l1, l2, l3)).max() > 1e-10:
+                        paths.append((l1, l2, l3))
+    return paths
+
+
+# ---------------------------------------------------------------------------
+# Radial basis
+# ---------------------------------------------------------------------------
+
+
+def bessel_basis(r: jax.Array, n_rbf: int, cutoff: float) -> jax.Array:
+    """sin(n pi r / rc) / r basis [Klicpera 2020], (E,) -> (E, n_rbf)."""
+    r = jnp.maximum(r, 1e-6)
+    n = jnp.arange(1, n_rbf + 1, dtype=jnp.float32)
+    return (
+        jnp.sqrt(2.0 / cutoff)
+        * jnp.sin(n[None, :] * jnp.pi * r[:, None] / cutoff)
+        / r[:, None]
+    )
+
+
+def poly_cutoff(r: jax.Array, cutoff: float, p: int = 6) -> jax.Array:
+    """Smooth polynomial envelope, 1 at r=0, 0 at r>=cutoff."""
+    x = jnp.clip(r / cutoff, 0.0, 1.0)
+    return (
+        1.0
+        - ((p + 1) * (p + 2) / 2) * x**p
+        + p * (p + 2) * x ** (p + 1)
+        - (p * (p + 1) / 2) * x ** (p + 2)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Config / init
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class NequIPConfig:
+    name: str = "nequip"
+    n_layers: int = 5
+    channels: int = 32
+    l_max: int = 2
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    d_feat_in: int = 0  # raw node-feature dim (0 -> species one-hot)
+    n_species: int = 16
+    radial_hidden: int = 64
+    dtype: Any = jnp.float32
+    # memory controls for 10^7-10^8-edge graphs: rematerialize each
+    # interaction layer, and stream edges in chunks (a lax.scan over
+    # edge blocks accumulating per-node sums) so edge-wise tensors never
+    # exist all at once.
+    remat: bool = True
+    edge_chunks: int = 1
+
+
+def _irrep_dims(l_max: int):
+    return {l: 2 * l + 1 for l in range(l_max + 1)}
+
+
+def init_params(key: jax.Array, cfg: NequIPConfig) -> cm.Params:
+    C = cfg.channels
+    paths = tp_paths(cfg.l_max)
+    keys = jax.random.split(key, 6 + cfg.n_layers)
+    in_dim = cfg.d_feat_in or cfg.n_species
+    params: cm.Params = {
+        "embed": cm.dense_init(keys[0], (in_dim, C)),
+        "layers": [],
+        "out_w1": cm.dense_init(keys[1], (C, C)),
+        "out_w2": cm.dense_init(keys[2], (C, 1)),
+    }
+    for i in range(cfg.n_layers):
+        lk = jax.random.split(keys[6 + i], 4 + len(paths))
+        layer = {
+            # radial MLP: n_rbf -> hidden -> (n_paths * C) weights
+            "rad_w1": cm.dense_init(lk[0], (cfg.n_rbf, cfg.radial_hidden)),
+            "rad_b1": jnp.zeros((cfg.radial_hidden,)),
+            "rad_w2": cm.dense_init(
+                lk[1], (cfg.radial_hidden, len(paths) * C)
+            ),
+            # self-interaction per l: (C, C)
+            "self": {
+                l: cm.dense_init(lk[2 + li], (C, C))
+                for li, l in enumerate(range(cfg.l_max + 1))
+            },
+            # per-l gate scalars produced from l=0 channel
+            "gate_w": cm.dense_init(
+                lk[3 + cfg.l_max], (C, C * cfg.l_max)
+            ),
+        }
+        params["layers"].append(layer)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _messages(cfg, lp, feats, edge_src, edge_dst, sh, radial, n_nodes,
+              constrain):
+    """Edge-wise tensor products + scatter: {l3: (N, C, 2l3+1)} sums."""
+    C = cfg.channels
+    paths = tp_paths(cfg.l_max)
+    h = jax.nn.silu(radial @ lp["rad_w1"] + lp["rad_b1"])
+    w = (h @ lp["rad_w2"]).reshape(-1, len(paths), C)  # (E, P, C)
+    out = {
+        l: jnp.zeros((n_nodes, C, 2 * l + 1), feats[0].dtype)
+        for l in range(cfg.l_max + 1)
+    }
+    for pi, (l1, l2, l3) in enumerate(paths):
+        Cg = jnp.asarray(gaunt_tensor(l1, l2, l3))  # (m1, m2, m3)
+        src_feat = constrain(feats[l1][edge_src], "edge_feats")
+        msg = jnp.einsum(
+            "eca,eb,abm->ecm", src_feat, sh[l2], Cg
+        )  # (E, C, 2l3+1)
+        msg = constrain(msg * w[:, pi, :, None], "edge_feats")
+        out[l3] = out[l3] + jax.ops.segment_sum(
+            msg, edge_dst, num_segments=n_nodes
+        )
+    return out
+
+
+def _interaction(
+    cfg: NequIPConfig,
+    lp: cm.Params,
+    feats: dict[int, jax.Array],  # {l: (N, C, 2l+1)}
+    edge_src: jax.Array,  # (E,)
+    edge_dst: jax.Array,  # (E,)
+    sh: dict[int, jax.Array],  # {l: (E, 2l+1)}
+    radial: jax.Array,  # (E, n_rbf) already enveloped
+    n_nodes: int,
+    constrain=lambda a, k: a,
+):
+    C = cfg.channels
+    E = edge_src.shape[0]
+    k = cfg.edge_chunks
+    msg_fn = _messages
+    if cfg.remat:
+        # checkpoint the EDGE-WISE work (per chunk): backward recomputes
+        # each chunk's messages, so live edge-tensor memory is one chunk
+        # regardless of depth. Node-sized residuals are cheap.
+        msg_fn = jax.checkpoint(
+            _messages, policy=jax.checkpoint_policies.nothing_saveable,
+            static_argnums=(0, 7, 8),
+        )
+    if k > 1 and E % k == 0:
+        # stream edges: scan over chunks, accumulate node sums — bounds
+        # live edge-tensor memory to E/k rows
+        def chunk2(a):
+            return constrain(
+                a.reshape((k, E // k) + a.shape[1:]), "edge_chunked"
+            )
+
+        es, ed = chunk2(edge_src), chunk2(edge_dst)
+        shc = {l: chunk2(s) for l, s in sh.items()}
+        radc = chunk2(radial)
+
+        def body(acc, xs):
+            es_c, ed_c, rad_c, sh_c = xs
+            part = msg_fn(
+                cfg, lp, feats, es_c, ed_c, sh_c, rad_c, n_nodes,
+                constrain,
+            )
+            return (
+                {l: acc[l] + part[l] for l in acc},
+                None,
+            )
+
+        zero = {
+            l: jnp.zeros((n_nodes, C, 2 * l + 1), feats[0].dtype)
+            for l in range(cfg.l_max + 1)
+        }
+        out, _ = jax.lax.scan(body, zero, (es, ed, radc, shc))
+    else:
+        out = msg_fn(
+            cfg, lp, feats, edge_src, edge_dst, sh, radial, n_nodes,
+            constrain,
+        )
+
+    new = {}
+    # self-interaction + residual
+    for l in range(cfg.l_max + 1):
+        mixed = jnp.einsum("ncm,cd->ndm", out[l], lp["self"][l])
+        new[l] = feats[l] + mixed
+    # gated nonlinearity: scalars via silu; l>0 scaled by sigmoid(gates)
+    scalars = new[0][..., 0]  # (N, C)
+    gates = jax.nn.sigmoid(scalars @ lp["gate_w"]).reshape(
+        n_nodes, cfg.l_max, C
+    )
+    act = {0: jax.nn.silu(scalars)[..., None]}
+    for l in range(1, cfg.l_max + 1):
+        act[l] = new[l] * gates[:, l - 1, :, None]
+    return act
+
+
+def forward(
+    params: cm.Params,
+    batch: dict,
+    cfg: NequIPConfig,
+    constrain=lambda a, kind: a,
+) -> jax.Array:
+    """batch: positions (N,3), node_feats (N,F) or species (N,),
+    edge_src/edge_dst (E,), edge_mask (E,), node_mask (N,),
+    graph_ids (N,) for batched small graphs (else zeros).
+    Returns per-graph energies (n_graphs,).
+    """
+    pos = batch["positions"].astype(jnp.float32)
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    n_nodes = pos.shape[0]
+    emask = batch.get("edge_mask")
+    nmask = batch.get("node_mask")
+
+    rel = pos[dst] - pos[src]  # (E, 3)
+    # grad-safe norm (zero-length padding/self edges must not NaN forces)
+    r2 = jnp.sum(rel * rel, axis=-1)
+    r = jnp.sqrt(jnp.maximum(r2, 1e-12))
+    rhat = rel / jnp.maximum(r, 1e-6)[:, None]
+    env = poly_cutoff(r, cfg.cutoff)
+    if emask is not None:
+        env = env * emask.astype(env.dtype)
+    radial = bessel_basis(r, cfg.n_rbf, cfg.cutoff) * env[:, None]
+    sh = {l: sph_harm(l, rhat) for l in range(cfg.l_max + 1)}
+
+    if "node_feats" in batch:
+        x0 = batch["node_feats"].astype(jnp.float32) @ params["embed"]
+    else:
+        x0 = params["embed"][batch["species"]]
+    feats = {0: x0[..., None]}
+    for l in range(1, cfg.l_max + 1):
+        feats[l] = jnp.zeros((n_nodes, cfg.channels, 2 * l + 1), x0.dtype)
+
+    for lp in params["layers"]:
+        feats = _interaction(
+            cfg, lp, feats, src, dst, sh, radial, n_nodes, constrain
+        )
+        feats = {l: constrain(f, "node_feats") for l, f in feats.items()}
+
+    scalars = feats[0][..., 0]  # (N, C)
+    atom_e = jax.nn.silu(scalars @ params["out_w1"]) @ params["out_w2"]
+    atom_e = atom_e[..., 0]
+    if nmask is not None:
+        atom_e = atom_e * nmask.astype(atom_e.dtype)
+    n_graphs = int(batch.get("n_graphs", 1))
+    gid = batch.get("graph_ids")
+    if gid is None:
+        return jnp.sum(atom_e, keepdims=True)
+    return jax.ops.segment_sum(atom_e, gid, num_segments=n_graphs)
+
+
+def energy_and_forces(params, batch, cfg: NequIPConfig):
+    def e_total(pos):
+        b = dict(batch)
+        b["positions"] = pos
+        return jnp.sum(forward(params, b, cfg))
+
+    e, neg_f = jax.value_and_grad(e_total)(batch["positions"])
+    return e, -neg_f
+
+
+def node_output(params, batch, cfg: NequIPConfig,
+                constrain=lambda a, k: a) -> jax.Array:
+    """Per-node scalar prediction (node-property cells): (N,)."""
+    # reuse the trunk, read out per-atom scalars without graph pooling
+    b = dict(batch)
+    b.pop("graph_ids", None)
+    b.pop("n_graphs", None)
+    pos = b["positions"].astype(jnp.float32)
+    # identical trunk to forward() but returning atom_e pre-pooling
+    feats_e = forward(params, dict(b, graph_ids=jnp.arange(
+        pos.shape[0], dtype=jnp.int32), n_graphs=pos.shape[0]), cfg,
+        constrain)
+    return feats_e
+
+
+def loss_fn(params, batch, cfg: NequIPConfig, constrain=lambda a, k: a):
+    """Two regimes:
+
+    * node-property batches (``node_targets`` present — the Cora/
+      Products-style feature-graph cells): masked per-node regression.
+      FIRST-order AD only, so chunk-remat bounds edge memory.
+    * molecular batches (``energy``/``forces``): energy + force matching;
+      forces = -dE/dx makes the loss SECOND-order in params (documented:
+      memory-intensive, used for the small molecule cell).
+    """
+    if "node_targets" in batch:
+        pred = node_output(params, batch, cfg, constrain)  # (N,)
+        mask = batch.get("node_mask")
+        err = (pred - batch["node_targets"]) ** 2
+        if mask is not None:
+            return jnp.sum(err * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        return jnp.mean(err)
+    # ---- energy + forces (second-order) ----
+    def e_total(pos):
+        b = dict(batch)
+        b["positions"] = pos
+        e = forward(params, b, cfg, constrain)
+        return jnp.sum(e), e
+
+    (_, e), neg_f = jax.value_and_grad(e_total, has_aux=True)(
+        batch["positions"]
+    )
+    loss_e = jnp.mean((e - batch["energy"]) ** 2)
+    f = -neg_f
+    fm = batch.get("node_mask")
+    if fm is not None:
+        f = f * fm[:, None]
+        tgt = batch["forces"] * fm[:, None]
+    else:
+        tgt = batch["forces"]
+    loss_f = jnp.mean(jnp.sum((f - tgt) ** 2, axis=-1))
+    return loss_e + loss_f

@@ -1,0 +1,261 @@
+"""CTR / ranking recsys architectures: DCN-v2, FM, AutoInt.
+
+The hot path is the sparse-embedding lookup over huge tables (JAX has no
+EmbeddingBag — it is built from take + segment_sum in models.common and
+used here via per-field single-hot take).  ``retrieval_score`` scores one
+user context against a large candidate set by broadcasting the user-side
+features and swapping the item field — and, for the ASH-integrated path,
+by scoring ASH-compressed candidate embeddings with the fused kernel
+(see repro.serving.retrieval).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+
+@dataclasses.dataclass(frozen=True)
+class RecSysConfig:
+    name: str
+    kind: str  # "dcn_v2" | "fm" | "autoint"
+    n_dense: int
+    n_sparse: int
+    embed_dim: int
+    vocab_per_field: int = 1_000_000
+    # dcn-v2
+    n_cross_layers: int = 3
+    mlp_dims: tuple = (1024, 1024, 512)
+    cross_rank: int = 0  # 0 = full-rank W
+    # autoint
+    n_attn_layers: int = 3
+    n_attn_heads: int = 2
+    d_attn: int = 32
+    dtype: Any = jnp.float32
+    param_dtype: Any = jnp.float32
+
+    @property
+    def interaction_dim(self) -> int:
+        return self.n_dense + self.n_sparse * self.embed_dim
+
+
+def init_params(key: jax.Array, cfg: RecSysConfig) -> cm.Params:
+    pd = cfg.param_dtype
+    keys = jax.random.split(key, 16)
+    params: cm.Params = {
+        # one big table: field f owns rows [f*V, (f+1)*V)
+        "tables": cm.embed_init(
+            keys[0], (cfg.n_sparse * cfg.vocab_per_field, cfg.embed_dim),
+            dtype=pd,
+        ),
+    }
+    if cfg.kind == "fm":
+        params["linear_sparse"] = cm.embed_init(
+            keys[1], (cfg.n_sparse * cfg.vocab_per_field, 1), dtype=pd
+        )
+        if cfg.n_dense:
+            params["linear_dense"] = cm.dense_init(
+                keys[2], (cfg.n_dense, 1), dtype=pd
+            )
+            params["dense_emb"] = cm.dense_init(
+                keys[3], (cfg.n_dense, cfg.embed_dim), dtype=pd
+            )
+        params["bias"] = jnp.zeros((), pd)
+        return params
+
+    d0 = cfg.interaction_dim
+    if cfg.kind == "dcn_v2":
+        L = cfg.n_cross_layers
+        if cfg.cross_rank:
+            params["cross_u"] = jnp.stack([
+                cm.dense_init(jax.random.fold_in(keys[4], i),
+                              (d0, cfg.cross_rank), dtype=pd)
+                for i in range(L)
+            ])
+            params["cross_v"] = jnp.stack([
+                cm.dense_init(jax.random.fold_in(keys[5], i),
+                              (cfg.cross_rank, d0), dtype=pd)
+                for i in range(L)
+            ])
+        else:
+            params["cross_w"] = jnp.stack([
+                cm.dense_init(jax.random.fold_in(keys[4], i), (d0, d0),
+                              dtype=pd)
+                for i in range(L)
+            ])
+        params["cross_b"] = jnp.zeros((L, d0), pd)
+        dims = (d0,) + cfg.mlp_dims
+        params["mlp"] = [
+            {
+                "w": cm.dense_init(
+                    jax.random.fold_in(keys[6], i), (dims[i], dims[i + 1]),
+                    dtype=pd,
+                ),
+                "b": jnp.zeros((dims[i + 1],), pd),
+            }
+            for i in range(len(dims) - 1)
+        ]
+        params["head"] = cm.dense_init(
+            keys[7], (d0 + cfg.mlp_dims[-1], 1), dtype=pd
+        )
+        return params
+
+    if cfg.kind == "autoint":
+        H, da = cfg.n_attn_heads, cfg.d_attn
+        e = cfg.embed_dim
+        params["attn"] = []
+        d_in = e
+        for i in range(cfg.n_attn_layers):
+            lk = jax.random.split(jax.random.fold_in(keys[8], i), 4)
+            params["attn"].append({
+                "wq": cm.dense_init(lk[0], (d_in, H * da), dtype=pd),
+                "wk": cm.dense_init(lk[1], (d_in, H * da), dtype=pd),
+                "wv": cm.dense_init(lk[2], (d_in, H * da), dtype=pd),
+                "wres": cm.dense_init(lk[3], (d_in, H * da), dtype=pd),
+            })
+            d_in = H * da
+        params["head"] = cm.dense_init(
+            keys[9], (cfg.n_sparse * d_in, 1), dtype=pd
+        )
+        if cfg.n_dense:
+            params["dense_proj"] = cm.dense_init(
+                keys[10], (cfg.n_dense, cfg.embed_dim), dtype=pd
+            )
+        return params
+
+    raise ValueError(cfg.kind)
+
+
+# ---------------------------------------------------------------------------
+# Embedding lookup (the hot path)
+# ---------------------------------------------------------------------------
+
+
+def lookup(params, sparse_ids: jax.Array, cfg: RecSysConfig) -> jax.Array:
+    """(B, n_sparse) int32 -> (B, n_sparse, embed_dim).
+
+    Field offsets fold all tables into one row-sharded table so the
+    lookup is a single gather (sharded over the vocab axis on the mesh).
+    """
+    offsets = (
+        jnp.arange(cfg.n_sparse, dtype=sparse_ids.dtype)
+        * cfg.vocab_per_field
+    )
+    flat = (sparse_ids + offsets[None, :]).reshape(-1)
+    rows = jnp.take(params["tables"], flat, axis=0)
+    return rows.reshape(
+        sparse_ids.shape[0], cfg.n_sparse, cfg.embed_dim
+    )
+
+
+# ---------------------------------------------------------------------------
+# Forwards
+# ---------------------------------------------------------------------------
+
+
+def _fm_forward(params, batch, cfg: RecSysConfig):
+    emb = lookup(params, batch["sparse"], cfg)  # (B, F, e)
+    if cfg.n_dense:
+        dense = batch["dense"].astype(emb.dtype)  # (B, nd)
+        demb = dense[:, :, None] * params["dense_emb"][None]  # (B, nd, e)
+        emb = jnp.concatenate([emb, demb], axis=1)
+    # O(nk) sum-square trick: 0.5 * ((sum v)^2 - sum v^2)
+    s = jnp.sum(emb, axis=1)
+    s2 = jnp.sum(emb * emb, axis=1)
+    pair = 0.5 * jnp.sum(s * s - s2, axis=-1)  # (B,)
+    offsets = (
+        jnp.arange(cfg.n_sparse, dtype=batch["sparse"].dtype)
+        * cfg.vocab_per_field
+    )
+    lin_rows = jnp.take(
+        params["linear_sparse"],
+        (batch["sparse"] + offsets[None, :]).reshape(-1),
+        axis=0,
+    ).reshape(batch["sparse"].shape[0], cfg.n_sparse)
+    lin = jnp.sum(lin_rows, axis=1)
+    if cfg.n_dense:
+        lin = lin + (batch["dense"] @ params["linear_dense"])[:, 0]
+    return pair + lin + params["bias"]
+
+
+def _dcn_forward(params, batch, cfg: RecSysConfig):
+    emb = lookup(params, batch["sparse"], cfg).reshape(
+        batch["sparse"].shape[0], -1
+    )
+    x0 = jnp.concatenate(
+        [batch["dense"].astype(emb.dtype), emb], axis=-1
+    ) if cfg.n_dense else emb  # (B, d0)
+    x = x0
+    for i in range(cfg.n_cross_layers):
+        if cfg.cross_rank:
+            wx = (x @ params["cross_u"][i]) @ params["cross_v"][i]
+        else:
+            wx = x @ params["cross_w"][i]
+        x = x0 * (wx + params["cross_b"][i]) + x  # x0 ⊙ (Wx + b) + x
+    h = x0
+    for layer in params["mlp"]:
+        h = jax.nn.relu(h @ layer["w"] + layer["b"])
+    both = jnp.concatenate([x, h], axis=-1)
+    return (both @ params["head"])[:, 0]
+
+
+def _autoint_forward(params, batch, cfg: RecSysConfig):
+    emb = lookup(params, batch["sparse"], cfg)  # (B, F, e)
+    x = emb
+    B, F = x.shape[0], x.shape[1]
+    H, da = cfg.n_attn_heads, cfg.d_attn
+    for lp in params["attn"]:
+        q = (x @ lp["wq"]).reshape(B, F, H, da)
+        k = (x @ lp["wk"]).reshape(B, F, H, da)
+        v = (x @ lp["wv"]).reshape(B, F, H, da)
+        logits = jnp.einsum("bfhd,bghd->bhfg", q, k) / jnp.sqrt(
+            jnp.float32(da)
+        ).astype(x.dtype)
+        p = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum("bhfg,bghd->bfhd", p, v).reshape(B, F, H * da)
+        x = jax.nn.relu(o + x @ lp["wres"])
+    return (x.reshape(B, -1) @ params["head"])[:, 0]
+
+
+def forward(params, batch, cfg: RecSysConfig,
+            constrain=lambda a, k: a) -> jax.Array:
+    """CTR logit (B,)."""
+    if cfg.kind == "fm":
+        return _fm_forward(params, batch, cfg)
+    if cfg.kind == "dcn_v2":
+        return _dcn_forward(params, batch, cfg)
+    if cfg.kind == "autoint":
+        return _autoint_forward(params, batch, cfg)
+    raise ValueError(cfg.kind)
+
+
+def loss_fn(params, batch, cfg: RecSysConfig,
+            constrain=lambda a, k: a) -> jax.Array:
+    logits = forward(params, batch, cfg, constrain)
+    return cm.binary_cross_entropy(logits, batch["labels"])
+
+
+def retrieval_score(
+    params, user_batch: dict, cand_ids: jax.Array, cfg: RecSysConfig
+) -> jax.Array:
+    """Score ONE user context against n candidates (retrieval_cand cell).
+
+    Candidates replace sparse field 0 (the item field); user-side fields
+    broadcast.  Returns (n_candidates,) logits.
+    """
+    n = cand_ids.shape[0]
+    sparse = jnp.broadcast_to(
+        user_batch["sparse"][0][None, :], (n, cfg.n_sparse)
+    )
+    sparse = sparse.at[:, 0].set(cand_ids)
+    batch = {"sparse": sparse}
+    if cfg.n_dense:
+        batch["dense"] = jnp.broadcast_to(
+            user_batch["dense"][0][None, :], (n, cfg.n_dense)
+        )
+    return forward(params, batch, cfg)

@@ -1,0 +1,136 @@
+"""SASRec [Kang & McAuley 2018]: self-attentive sequential recommender.
+
+Next-item retrieval is a MIPS problem over the item-embedding table —
+the paper's home turf.  ``retrieval_score`` supports (a) exact dot
+products and (b) the ASH-compressed path: item embeddings encoded once
+offline, queries (the user state h_t) scored with the fused asymmetric
+kernel (repro.serving.retrieval wires this up).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+
+@dataclasses.dataclass(frozen=True)
+class SASRecConfig:
+    name: str = "sasrec"
+    n_items: int = 1_000_000
+    embed_dim: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    seq_len: int = 50
+    n_neg: int = 128  # sampled-softmax negatives for training
+    dtype: Any = jnp.float32
+    param_dtype: Any = jnp.float32
+
+
+def init_params(key: jax.Array, cfg: SASRecConfig) -> cm.Params:
+    pd = cfg.param_dtype
+    keys = jax.random.split(key, 4 + 6 * cfg.n_blocks)
+    e = cfg.embed_dim
+    params: cm.Params = {
+        "item_emb": cm.embed_init(keys[0], (cfg.n_items, e), dtype=pd),
+        "pos_emb": cm.embed_init(keys[1], (cfg.seq_len, e), dtype=pd),
+        "blocks": [],
+        "final_ln_s": jnp.ones((e,), pd),
+        "final_ln_b": jnp.zeros((e,), pd),
+    }
+    for i in range(cfg.n_blocks):
+        bk = jax.random.split(keys[2 + i], 6)
+        params["blocks"].append({
+            "ln1_s": jnp.ones((e,), pd), "ln1_b": jnp.zeros((e,), pd),
+            "wq": cm.dense_init(bk[0], (e, e), dtype=pd),
+            "wk": cm.dense_init(bk[1], (e, e), dtype=pd),
+            "wv": cm.dense_init(bk[2], (e, e), dtype=pd),
+            "wo": cm.dense_init(bk[3], (e, e), dtype=pd),
+            "ln2_s": jnp.ones((e,), pd), "ln2_b": jnp.zeros((e,), pd),
+            "ff1": cm.dense_init(bk[4], (e, e), dtype=pd),
+            "ff1_b": jnp.zeros((e,), pd),
+            "ff2": cm.dense_init(bk[5], (e, e), dtype=pd),
+            "ff2_b": jnp.zeros((e,), pd),
+        })
+    return params
+
+
+def encode_sequence(params, seq: jax.Array, cfg: SASRecConfig) -> jax.Array:
+    """(B, S) item ids (0 = padding) -> (B, S, e) hidden states."""
+    B, S = seq.shape
+    e = cfg.embed_dim
+    x = params["item_emb"][seq] * jnp.sqrt(jnp.float32(e)).astype(
+        cfg.dtype
+    )
+    x = x + params["pos_emb"][None, :S]
+    pad_mask = (seq > 0)[:, :, None]
+    x = x * pad_mask.astype(x.dtype)
+    H = cfg.n_heads
+    dh = e // H
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    for bp in params["blocks"]:
+        h = cm.layer_norm(x, bp["ln1_s"], bp["ln1_b"])
+        q = (h @ bp["wq"]).reshape(B, S, H, dh)
+        k = (h @ bp["wk"]).reshape(B, S, H, dh)
+        v = (h @ bp["wv"]).reshape(B, S, H, dh)
+        logits = jnp.einsum(
+            "bshd,bthd->bhst", q.astype(jnp.float32),
+            k.astype(jnp.float32),
+        ) / jnp.sqrt(jnp.float32(dh))
+        key_mask = (seq > 0)[:, None, None, :]
+        logits = jnp.where(causal[None, None] & key_mask, logits, -1e30)
+        p = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum("bhst,bthd->bshd", p, v.astype(jnp.float32))
+        x = x + (o.reshape(B, S, e) @ bp["wo"]).astype(x.dtype)
+        h2 = cm.layer_norm(x, bp["ln2_s"], bp["ln2_b"])
+        ff = jax.nn.relu(h2 @ bp["ff1"] + bp["ff1_b"])
+        x = x + (ff @ bp["ff2"] + bp["ff2_b"])
+        x = x * pad_mask.astype(x.dtype)
+    return cm.layer_norm(x, params["final_ln_s"], params["final_ln_b"])
+
+
+def loss_fn(params, batch, cfg: SASRecConfig,
+            constrain=lambda a, k: a) -> jax.Array:
+    """Sampled-softmax next-item loss.
+
+    batch: seq (B, S), labels (B, S) next item per position (0 = pad),
+    negatives (n_neg,) shared sampled item ids.
+    """
+    h = encode_sequence(params, batch["seq"], cfg)  # (B, S, e)
+    pos_emb = params["item_emb"][batch["labels"]]  # (B, S, e)
+    neg_emb = params["item_emb"][batch["negatives"]]  # (n_neg, e)
+    pos_logit = jnp.sum(
+        h.astype(jnp.float32) * pos_emb.astype(jnp.float32), axis=-1
+    )  # (B, S)
+    neg_logit = jnp.einsum(
+        "bse,ne->bsn", h.astype(jnp.float32),
+        neg_emb.astype(jnp.float32),
+    )  # (B, S, n_neg)
+    logits = jnp.concatenate(
+        [pos_logit[..., None], neg_logit], axis=-1
+    )
+    mask = (batch["labels"] > 0).astype(jnp.float32)
+    nll = -jax.nn.log_softmax(logits, axis=-1)[..., 0]
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def user_state(params, seq: jax.Array, cfg: SASRecConfig) -> jax.Array:
+    """(B, S) -> (B, e): the query vector for next-item retrieval."""
+    h = encode_sequence(params, seq, cfg)
+    lengths = jnp.sum((seq > 0).astype(jnp.int32), axis=-1)
+    idx = jnp.maximum(lengths - 1, 0)
+    return jnp.take_along_axis(
+        h, idx[:, None, None].astype(jnp.int32), axis=1
+    )[:, 0]
+
+
+def retrieval_score(
+    params, seq: jax.Array, cand_ids: jax.Array, cfg: SASRecConfig
+) -> jax.Array:
+    """Exact MIPS scores of each user state vs candidate items: (B, n)."""
+    u = user_state(params, seq, cfg)  # (B, e)
+    cand = params["item_emb"][cand_ids]  # (n, e)
+    return u.astype(jnp.float32) @ cand.astype(jnp.float32).T

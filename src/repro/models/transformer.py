@@ -1,0 +1,455 @@
+"""Decoder-only transformer family (dense + MoE, GQA, RoPE, SwiGLU).
+
+Covers the five assigned LM architectures.  Layers are stacked along a
+leading axis and driven by lax.scan; activations can be rematerialized
+per layer.  Serving supports a bf16 KV cache and, as the paper-technique
+integration, an ASH-compressed KV cache (see ``decode_step`` with
+``cfg.kv_quant_bits > 0``): keys/values are projected per head by a
+row-orthonormal matrix, scalar-quantized to b bits on the V_b grid and
+bit-packed; attention logits use the asymmetric estimator of Eq. (20)
+with mu = 0, and the V de-projection is applied once per step after the
+probability-weighted reduction (linear-decoder trick, Section 2.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantization as Q
+from repro.models import common as cm
+from repro.models.moe import MoEConfig, init_moe, moe_block
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0  # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    moe: Optional[MoEConfig] = None
+    dtype: Any = jnp.bfloat16  # activation dtype
+    param_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    q_chunk: int = 2048  # query chunking for long prefill (0 = off)
+    use_scan: bool = True  # lax.scan over layers (False: python unroll,
+    # used by the roofline probes — XLA cost_analysis counts loop bodies
+    # once, so probes must be loop-free)
+    # ASH-KV cache compression (0 = off -> bf16 cache)
+    kv_quant_bits: int = 0
+    kv_quant_dim: int = 0  # 0 -> d_head (no dim reduction)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        D, H, KV, dh, F, V, L = (
+            self.d_model, self.n_heads, self.n_kv_heads, self.head_dim,
+            self.d_ff, self.vocab, self.n_layers,
+        )
+        attn = D * (H * dh) + 2 * D * (KV * dh) + (H * dh) * D
+        if self.moe:
+            E, Fe = self.moe.n_experts, self.moe.d_ff
+            ffn = D * E + E * 3 * D * Fe
+        else:
+            ffn = 3 * D * F
+        return L * (attn + ffn + 2 * D) + 2 * V * D + D
+
+    def active_param_count(self) -> int:
+        """6*N_active*D convention for MoE rooflines."""
+        if not self.moe:
+            return self.param_count()
+        D, H, KV, dh, L = (
+            self.d_model, self.n_heads, self.n_kv_heads, self.head_dim,
+            self.n_layers,
+        )
+        attn = D * (H * dh) + 2 * D * (KV * dh) + (H * dh) * D
+        Fe = self.moe.d_ff
+        ffn = D * self.moe.n_experts + self.moe.top_k * 3 * D * Fe
+        return L * (attn + ffn + 2 * D) + 2 * self.vocab * D + D
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_params(key: jax.Array, cfg: TransformerConfig) -> cm.Params:
+    D, H, KV, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    L, F, V = cfg.n_layers, cfg.d_ff, cfg.vocab
+    pd = cfg.param_dtype
+    keys = jax.random.split(key, 12)
+
+    def stack(initfn, subkey, shape, **kw):
+        ks = jax.random.split(subkey, L)
+        return jax.vmap(lambda k_: initfn(k_, shape, **kw))(ks)
+
+    layers: dict[str, Any] = {
+        "attn_norm": jnp.ones((L, D), pd),
+        "ffn_norm": jnp.ones((L, D), pd),
+        "wq": stack(cm.dense_init, keys[0], (D, H * dh), dtype=pd),
+        "wk": stack(cm.dense_init, keys[1], (D, KV * dh), dtype=pd),
+        "wv": stack(cm.dense_init, keys[2], (D, KV * dh), dtype=pd),
+        "wo": stack(cm.dense_init, keys[3], (H * dh, D), dtype=pd),
+    }
+    if cfg.qkv_bias:
+        layers["bq"] = jnp.zeros((L, H * dh), pd)
+        layers["bk"] = jnp.zeros((L, KV * dh), pd)
+        layers["bv"] = jnp.zeros((L, KV * dh), pd)
+    if cfg.moe:
+        mks = jax.random.split(keys[4], L)
+        layers["moe"] = jax.vmap(
+            lambda k_: init_moe(k_, cfg.moe, D, dtype=pd)
+        )(mks)
+    else:
+        layers["w_gate"] = stack(cm.dense_init, keys[5], (D, F), dtype=pd)
+        layers["w_up"] = stack(cm.dense_init, keys[6], (D, F), dtype=pd)
+        layers["w_down"] = stack(cm.dense_init, keys[7], (F, D), dtype=pd)
+
+    params: cm.Params = {
+        "embed": cm.embed_init(keys[8], (V, D), dtype=pd),
+        "layers": layers,
+        "final_norm": jnp.ones((D,), pd),
+        "lm_head": cm.dense_init(keys[9], (D, V), dtype=pd),
+    }
+    if cfg.kv_quant_bits:
+        dc = cfg.kv_quant_dim or dh
+        # Random row-orthonormal per (layer, kv head): data-agnostic ASH
+        # (RaBitQ regime) — learned W can be swapped in post-hoc.
+        def ortho(k_):
+            g = jax.random.normal(k_, (dh, dh), jnp.float32)
+            qm, _ = jnp.linalg.qr(g)
+            return qm[:, :dc].T  # (dc, dh)
+
+        ks = jax.random.split(keys[10], L * KV * 2).reshape(L, KV, 2, 2)
+        params["kv_quant"] = {
+            "Wk": jax.vmap(jax.vmap(lambda kk: ortho(kk[0])))(ks),
+            "Wv": jax.vmap(jax.vmap(lambda kk: ortho(kk[1])))(ks),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _layer(
+    cfg: TransformerConfig,
+    lp: cm.Params,
+    x: jax.Array,  # (B, S, D)
+    positions: jax.Array,  # (S,)
+    constrain=lambda a, kind: a,
+):
+    B, S, D = x.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    h = cm.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    q = h @ lp["wq"]
+    k = h @ lp["wk"]
+    v = h @ lp["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    q = q.reshape(B, S, H, dh)
+    k = k.reshape(B, S, KV, dh)
+    v = v.reshape(B, S, KV, dh)
+    q = cm.apply_rope(q, jnp.broadcast_to(positions, (B, S)), cfg.rope_theta)
+    k = cm.apply_rope(k, jnp.broadcast_to(positions, (B, S)), cfg.rope_theta)
+    # Pin the attention-boundary layouts (q/k/v in, attn out) to the
+    # head-sharded form. Without the OUTPUT pin, the backward cotangent
+    # arrives in the sequence-parallel layout and GSPMD resolves the
+    # clash inside the rematted attention by replicating full (S, S)
+    # score tensors — 48 GiB of the 69 GiB per-probe collective traffic
+    # on qwen2-72b (EXPERIMENTS.md §Perf iteration 1).
+    q = constrain(q, "qkv")
+    k = constrain(k, "kv")
+    v = constrain(v, "v")
+    attn = cm.gqa_attention(q, k, v, causal=True, q_chunk=cfg.q_chunk)
+    attn = constrain(attn, "attn_out")
+    attn = attn.reshape(B, S, H * dh) @ lp["wo"]
+    x = x + constrain(attn, "resid")
+
+    h = cm.rms_norm(x, lp["ffn_norm"], cfg.norm_eps)
+    if cfg.moe:
+        flat = h.reshape(B * S, D)
+        out, aux = moe_block(lp["moe"], flat, cfg.moe, constrain=constrain)
+        ffn = out.reshape(B, S, D)
+    else:
+        gate = constrain(h @ lp["w_gate"], "ffn_hidden")
+        up = constrain(h @ lp["w_up"], "ffn_hidden")
+        ffn = cm.swiglu(gate, up) @ lp["w_down"]
+        aux = jnp.float32(0.0)
+    x = x + constrain(ffn, "resid")
+    return x, aux
+
+
+def forward(
+    params: cm.Params,
+    tokens: jax.Array,  # (B, S) int32
+    cfg: TransformerConfig,
+    constrain=lambda a, kind: a,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (logits (B, S, V) fp32, aux_loss)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    x = constrain(x, "resid")
+    positions = jnp.arange(S)
+
+    def body(carry, lp):
+        x = carry
+        lp = constrain(lp, "layer_params")  # keep FSDP gather in-loop
+        fn = functools.partial(_layer, cfg, constrain=constrain)
+        if cfg.remat:
+            fn = jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        x, aux = fn(lp, x, positions)
+        return x, aux
+
+    if cfg.use_scan:
+        x, auxs = jax.lax.scan(body, x, params["layers"])
+    else:
+        aux_list = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+            x, aux = body(x, lp)
+            aux_list.append(aux)
+        auxs = jnp.stack(aux_list)
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["lm_head"]).astype(jnp.float32)
+    return constrain(logits, "logits"), jnp.sum(auxs)
+
+
+def loss_fn(
+    params: cm.Params,
+    batch: dict,
+    cfg: TransformerConfig,
+    constrain=lambda a, kind: a,
+) -> jax.Array:
+    logits, aux = forward(params, batch["tokens"], cfg, constrain)
+    return cm.softmax_cross_entropy(
+        logits[:, :-1], batch["labels"][:, 1:]
+    ) + aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with (optionally ASH-compressed) KV cache
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int):
+    L, KV, dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    if cfg.kv_quant_bits:
+        b = cfg.kv_quant_bits
+        dc = cfg.kv_quant_dim or dh
+        W = Q.packed_width(dc, b)
+        return {
+            "k_codes": jnp.zeros((L, batch, max_len, KV, W), jnp.uint32),
+            "v_codes": jnp.zeros((L, batch, max_len, KV, W), jnp.uint32),
+            "k_scale": jnp.zeros((L, batch, max_len, KV), cfg.dtype),
+            "v_scale": jnp.zeros((L, batch, max_len, KV), cfg.dtype),
+        }
+    return {
+        "k": jnp.zeros((L, batch, max_len, KV, dh), cfg.dtype),
+        "v": jnp.zeros((L, batch, max_len, KV, dh), cfg.dtype),
+    }
+
+
+def _encode_kv(W: jax.Array, vec: jax.Array, b: int):
+    """ASH-encode one head vector (mu = 0): -> (codes, scale)."""
+    norm = jnp.linalg.norm(vec.astype(jnp.float32), axis=-1, keepdims=True)
+    u = (vec.astype(jnp.float32) / jnp.maximum(norm, 1e-12)) @ W.T
+    V = Q.quant(u, b, exact=(b <= 4))
+    scale = norm[..., 0] / jnp.maximum(Q.code_norms(V), 1e-12)
+    return Q.pack_codes(V, b), scale
+
+
+def decode_step(
+    params: cm.Params,
+    cache: dict,
+    tokens: jax.Array,  # (B,) next input token per sequence
+    cache_len: jax.Array,  # scalar int32: current prefix length
+    cfg: TransformerConfig,
+    constrain=lambda a, kind: a,
+):
+    """One decode step. Returns (logits (B, V), new_cache)."""
+    B = tokens.shape[0]
+    D, H, KV, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // KV
+    x = params["embed"][tokens].astype(cfg.dtype)  # (B, D)
+    pos = jnp.full((B, 1), cache_len, jnp.int32)
+    max_len = (
+        cache["k"].shape[2] if "k" in cache else cache["k_codes"].shape[2]
+    )
+    valid = jnp.arange(max_len) <= cache_len  # includes the new slot
+
+    def body(carry, inp):
+        x = carry
+        lp, layer_cache = inp
+        h = cm.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        q = h @ lp["wq"]
+        k = h @ lp["wk"]
+        v = h @ lp["wv"]
+        if cfg.qkv_bias:
+            q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+        q = cm.apply_rope(
+            q.reshape(B, 1, H, dh), pos, cfg.rope_theta
+        )[:, 0]  # (B, H, dh)
+        k = cm.apply_rope(
+            k.reshape(B, 1, KV, dh), pos, cfg.rope_theta
+        )[:, 0]
+        v = v.reshape(B, KV, dh)
+
+        if cfg.kv_quant_bits:
+            b = cfg.kv_quant_bits
+            Wk, Wv = params["kv_quant"]["Wk"], params["kv_quant"]["Wv"]
+            lidx = layer_cache["lidx"]
+            Wk_l, Wv_l = Wk[lidx], Wv[lidx]  # (KV, dc, dh)
+            kc, ks = jax.vmap(
+                lambda W_, vec: _encode_kv(W_, vec, b),
+                in_axes=(0, 1), out_axes=(1, 1),
+            )(Wk_l, k)
+            vc, vs = jax.vmap(
+                lambda W_, vec: _encode_kv(W_, vec, b),
+                in_axes=(0, 1), out_axes=(1, 1),
+            )(Wv_l, v)
+            k_codes = jax.lax.dynamic_update_slice(
+                layer_cache["k_codes"], kc[:, None], (0, cache_len, 0, 0)
+            )
+            v_codes = jax.lax.dynamic_update_slice(
+                layer_cache["v_codes"], vc[:, None], (0, cache_len, 0, 0)
+            )
+            k_scale = jax.lax.dynamic_update_slice(
+                layer_cache["k_scale"], ks[:, None].astype(cfg.dtype),
+                (0, cache_len, 0),
+            )
+            v_scale = jax.lax.dynamic_update_slice(
+                layer_cache["v_scale"], vs[:, None].astype(cfg.dtype),
+                (0, cache_len, 0),
+            )
+            # logits: q (B, KV, G, dh) -> project into code space
+            qr = q.reshape(B, KV, G, dh)
+            qp = jnp.einsum(
+                "bkgd,kcd->bkgc", qr.astype(cfg.dtype),
+                Wk_l.astype(cfg.dtype),
+                preferred_element_type=jnp.float32,
+            ).astype(cfg.dtype)
+            dc = qp.shape[-1]
+            # unpack to bf16 in-loop (the Pallas ash_kv_attn kernel does
+            # this tile-wise in VMEM on TPU)
+            Kv = Q.unpack_codes(k_codes, dc, b).astype(cfg.dtype)
+            # (B, S, KV, dc) x (B, KV, G, dc) -> (B, KV, G, S)
+            logits = jnp.einsum(
+                "bskc,bkgc->bkgs", Kv, qp,
+                preferred_element_type=jnp.float32,
+            )
+            logits = logits * k_scale.astype(jnp.float32).transpose(
+                0, 2, 1
+            )[:, :, None, :]
+            logits = logits / math.sqrt(dh)
+            logits = jnp.where(
+                valid[None, None, None, :], logits, -1e30
+            )
+            p = jax.nn.softmax(logits, axis=-1)
+            Vv = Q.unpack_codes(v_codes, dc, b).astype(cfg.dtype)
+            pv = (p * v_scale.astype(jnp.float32).transpose(0, 2, 1)[
+                :, :, None, :
+            ]).astype(cfg.dtype)
+            red = jnp.einsum(
+                "bkgs,bskc->bkgc", pv, Vv,
+                preferred_element_type=jnp.float32,
+            )  # reduced space
+            attn = jnp.einsum("bkgc,kcd->bkgd", red, Wv_l)  # decode once
+            attn = attn.reshape(B, H * dh).astype(cfg.dtype)
+            new_layer_cache = {
+                "k_codes": k_codes, "v_codes": v_codes,
+                "k_scale": k_scale, "v_scale": v_scale,
+                "lidx": lidx,
+            }
+        else:
+            kc = jax.lax.dynamic_update_slice(
+                layer_cache["k"], k[:, None].astype(cfg.dtype),
+                (0, cache_len, 0, 0),
+            )
+            vc = jax.lax.dynamic_update_slice(
+                layer_cache["v"], v[:, None].astype(cfg.dtype),
+                (0, cache_len, 0, 0),
+            )
+            qr = q.reshape(B, KV, G, dh).astype(cfg.dtype)
+            # bf16 operands + f32 accumulation: a materialized f32 cast
+            # of the cache would be hoisted out of the layer scan into a
+            # full-size f32 cache copy (2x HBM) — see common.gqa_attention.
+            # The barrier pins any backend-inserted upcast INSIDE the
+            # layer loop (per-layer transient, not a whole-cache copy).
+            kc_b, vc_b = jax.lax.optimization_barrier((kc, vc))
+            logits = jnp.einsum(
+                "bkgd,bskd->bkgs", qr, kc_b,
+                preferred_element_type=jnp.float32,
+            ) / math.sqrt(dh)
+            logits = jnp.where(
+                valid[None, None, None, :], logits, -1e30
+            )
+            p = jax.nn.softmax(logits, axis=-1).astype(cfg.dtype)
+            attn = jnp.einsum(
+                "bkgs,bskd->bkgd", p, vc_b,
+                preferred_element_type=jnp.float32,
+            ).reshape(B, H * dh).astype(cfg.dtype)
+            new_layer_cache = {"k": kc, "v": vc}
+
+        x = x + attn @ lp["wo"]
+        h2 = cm.rms_norm(x, lp["ffn_norm"], cfg.norm_eps)
+        if cfg.moe:
+            out, _ = moe_block(lp["moe"], h2, cfg.moe, constrain=constrain)
+            ffn = out
+        else:
+            ffn = cm.swiglu(h2 @ lp["w_gate"], h2 @ lp["w_up"]) @ lp[
+                "w_down"
+            ]
+        x = x + ffn
+        return x, new_layer_cache
+
+    scan_cache = dict(cache)
+    if cfg.kv_quant_bits:
+        scan_cache["lidx"] = jnp.arange(cfg.n_layers)
+    if cfg.use_scan:
+        x, new_cache = jax.lax.scan(
+            body, x, (params["layers"], scan_cache)
+        )
+    else:
+        caches = []
+        for i in range(cfg.n_layers):
+            sl = jax.tree_util.tree_map(
+                lambda a: a[i], (params["layers"], scan_cache)
+            )
+            x, lc = body(x, sl)
+            caches.append(lc)
+        new_cache = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *caches
+        )
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["lm_head"]).astype(jnp.float32)
+    if cfg.kv_quant_bits:
+        new_cache = {k_: v_ for k_, v_ in new_cache.items() if k_ != "lidx"}
+    return logits, new_cache
+
+
+def prefill(
+    params: cm.Params,
+    tokens: jax.Array,  # (B, S)
+    cfg: TransformerConfig,
+    constrain=lambda a, kind: a,
+) -> jax.Array:
+    """Prefill serve step: full forward, returns last-position logits."""
+    logits, _ = forward(params, tokens, cfg, constrain)
+    return logits[:, -1]

@@ -1,0 +1,4 @@
+"""Serving integrations of the ASH technique."""
+from repro.serving import retrieval
+
+__all__ = ["retrieval"]

@@ -1,0 +1,4 @@
+"""Training substrate: optimizers, compression, trainer, checkpointing."""
+from repro.train import optim, compression, trainer, checkpoint
+
+__all__ = ["optim", "compression", "trainer", "checkpoint"]

@@ -1,0 +1,291 @@
+"""Optimizers (pure JAX): AdamW, Adafactor (factored 2nd moment, for the
+1T-parameter MoE where full fp32 Adam states cannot fit HBM), and Muon
+(Newton-Schulz orthogonalized momentum — the same polar-factor iteration
+the ASH learner uses for its Procrustes step).
+
+API mirrors optax: init(params) -> state;
+update(grads, state, params) -> (updates, state). Updates are ADDED.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.learning import newton_schulz
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"  # adamw | adafactor | muon
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    # memory knobs for the >=100B regime
+    moment_dtype: Any = jnp.float32  # bf16 halves optimizer HBM
+    # muon
+    ns_steps: int = 5
+    # warmup/cosine schedule
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+def lr_at(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps)
+        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree
+    ), gn
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adamw_init(cfg: OptConfig, params) -> AdamState:
+    z = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return AdamState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree_util.tree_map(z, params),
+        nu=jax.tree_util.tree_map(z, params),
+    )
+
+
+def adamw_update(cfg: OptConfig, grads, state: AdamState, params):
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+    grads, gn = clip_by_global_norm(grads, cfg.grad_clip)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g32 * g32
+        mhat = m32 / (1 - cfg.b1 ** step)
+        vhat = v32 / (1 - cfg.b2 ** step)
+        u = -lr * (
+            mhat / (jnp.sqrt(vhat) + cfg.eps)
+            + cfg.weight_decay * p.astype(jnp.float32)
+        )
+        return (
+            u.astype(p.dtype),
+            m32.astype(cfg.moment_dtype),
+            v32.astype(cfg.moment_dtype),
+        )
+
+    out = jax.tree_util.tree_map(upd, grads, state.mu, state.nu, params)
+    updates = jax.tree_util.tree_map(lambda t: t[0], out,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+    mu = jax.tree_util.tree_map(lambda t: t[1], out,
+                                is_leaf=lambda x: isinstance(x, tuple))
+    nu = jax.tree_util.tree_map(lambda t: t[2], out,
+                                is_leaf=lambda x: isinstance(x, tuple))
+    return updates, AdamState(step=step, mu=mu, nu=nu)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; Shazeer & Stern 2018)
+# ---------------------------------------------------------------------------
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    mu: Any  # first moment (moment_dtype) — optional momentum
+    vr: Any  # row statistics
+    vc: Any  # col statistics
+    v: Any  # full second moment for <2D params
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(cfg: OptConfig, params) -> AdafactorState:
+    def zr(p):
+        return (
+            jnp.zeros(p.shape[:-1], jnp.float32)
+            if _factored(p) else jnp.zeros((1,), jnp.float32)
+        )
+
+    def zc(p):
+        return (
+            jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            if _factored(p) else jnp.zeros((1,), jnp.float32)
+        )
+
+    def zv(p):
+        return (
+            jnp.zeros((1,), jnp.float32)
+            if _factored(p) else jnp.zeros(p.shape, jnp.float32)
+        )
+
+    # b1 == 0 -> momentum-free Adafactor (classic): no first-moment
+    # buffers at all, the key memory saving for the 1T-param config.
+    if cfg.b1 == 0.0:
+        mu = jax.tree_util.tree_map(
+            lambda p: jnp.zeros((1,), cfg.moment_dtype), params
+        )
+    else:
+        mu = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, cfg.moment_dtype), params
+        )
+    return AdafactorState(
+        step=jnp.zeros((), jnp.int32),
+        mu=mu,
+        vr=jax.tree_util.tree_map(zr, params),
+        vc=jax.tree_util.tree_map(zc, params),
+        v=jax.tree_util.tree_map(zv, params),
+    )
+
+
+def adafactor_update(cfg: OptConfig, grads, state: AdafactorState, params):
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+    grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+    decay = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+
+    def upd(g, m, vr, vc, v, p):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + 1e-30
+        if _factored(p):
+            vr_n = decay * vr + (1 - decay) * jnp.mean(g2, axis=-1)
+            vc_n = decay * vc + (1 - decay) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(
+                jnp.mean(vr_n, axis=-1, keepdims=True), 1e-30
+            )
+            vhat = (
+                vr_n[..., None] * vc_n[..., None, :]
+                / denom[..., None]
+            )
+            v_n = v
+        else:
+            vhat = decay * v + (1 - decay) * g2
+            v_n = vhat
+            vr_n, vc_n = vr, vc
+        u = g32 / jnp.sqrt(vhat + cfg.eps)
+        if cfg.b1 == 0.0:
+            m32 = m  # dummy (1,) buffer, untouched
+            upd32 = u
+        else:
+            m32 = (cfg.b1 * m.astype(jnp.float32)
+                   + (1 - cfg.b1) * u).astype(cfg.moment_dtype)
+            upd32 = m32.astype(jnp.float32)
+        out = -lr * (upd32 + cfg.weight_decay * p.astype(jnp.float32))
+        return (out.astype(p.dtype), m32, vr_n, vc_n, v_n)
+
+    out = jax.tree_util.tree_map(
+        upd, grads, state.mu, state.vr, state.vc, state.v, params
+    )
+    pick = lambda i: jax.tree_util.tree_map(
+        lambda t: t[i], out, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    return pick(0), AdafactorState(
+        step=step, mu=pick(1), vr=pick(2), vc=pick(3), v=pick(4)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Muon (momentum + Newton-Schulz orthogonalization for 2D params)
+# ---------------------------------------------------------------------------
+
+
+class MuonState(NamedTuple):
+    step: jax.Array
+    mu: Any
+
+
+def muon_init(cfg: OptConfig, params) -> MuonState:
+    return MuonState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, cfg.moment_dtype), params
+        ),
+    )
+
+
+def muon_update(cfg: OptConfig, grads, state: MuonState, params):
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+    grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+
+    def upd(g, m, p):
+        g32 = g.astype(jnp.float32)
+        m32 = cfg.b1 * m.astype(jnp.float32) + g32
+        if p.ndim == 2 and min(p.shape) > 1:
+            # polar factor of m32 (== U V^T of its SVD), same shape
+            o = newton_schulz(m32.T, steps=cfg.ns_steps)
+            o = o * jnp.sqrt(
+                jnp.float32(max(p.shape)) / jnp.float32(min(p.shape))
+            )
+        else:
+            o = m32 / (jnp.linalg.norm(m32.reshape(-1)) + 1e-9)
+        u = -lr * (o + cfg.weight_decay * p.astype(jnp.float32))
+        return u.astype(p.dtype), m32.astype(cfg.moment_dtype)
+
+    out = jax.tree_util.tree_map(upd, grads, state.mu, params)
+    pick = lambda i: jax.tree_util.tree_map(
+        lambda t: t[i], out, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    return pick(0), MuonState(step=step, mu=pick(1))
+
+
+# ---------------------------------------------------------------------------
+# Dispatcher
+# ---------------------------------------------------------------------------
+
+
+def make_optimizer(cfg: OptConfig):
+    if cfg.name == "adamw":
+        return (
+            functools.partial(adamw_init, cfg),
+            functools.partial(adamw_update, cfg),
+        )
+    if cfg.name == "adafactor":
+        return (
+            functools.partial(adafactor_init, cfg),
+            functools.partial(adafactor_update, cfg),
+        )
+    if cfg.name == "muon":
+        return (
+            functools.partial(muon_init, cfg),
+            functools.partial(muon_update, cfg),
+        )
+    raise ValueError(cfg.name)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32)
+                      + u.astype(jnp.float32)).astype(p.dtype),
+        params, updates,
+    )

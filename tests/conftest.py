@@ -1,0 +1,22 @@
+import os
+
+# Tests run on the single real CPU device — the 512-device override is
+# strictly dryrun.py-local (per the brief).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import pytest
+from hypothesis import settings, HealthCheck
+
+settings.register_profile(
+    "ci",
+    deadline=None,
+    max_examples=25,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("ci")
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

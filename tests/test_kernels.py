@@ -1,0 +1,164 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU).
+
+Per the brief: sweep shapes/dtypes per kernel and assert_allclose
+against the ref.py oracle.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quantization as Q
+from repro.kernels import ref
+from repro.kernels.ash_score import ash_score_pallas
+from repro.kernels.ash_kv_attn import ash_kv_attn_pallas
+from repro.kernels import ops
+
+
+def _mk_score_inputs(key, b, d, n, m, C):
+    ks = jax.random.split(key, 6)
+    vals = Q.quant(jax.random.normal(ks[0], (n, d)), b)
+    codes = Q.pack_codes(vals, b)
+    d_pad = codes.shape[1] * Q.codes_per_word(b)
+    q = jnp.pad(jax.random.normal(ks[1], (m, d)), ((0, 0), (0, d_pad - d)))
+    scale = jax.random.uniform(ks[2], (n,), minval=0.5, maxval=2.0)
+    offset = jax.random.normal(ks[3], (n,))
+    cluster = jax.random.randint(ks[4], (n,), 0, C)
+    ipq = jax.random.normal(ks[5], (m, C))
+    return codes, q, scale, offset, cluster, ipq
+
+
+SCORE_CASES = [
+    (1, 256, 700, 5, 1),
+    (1, 64, 100, 1, 4),
+    (2, 384, 1000, 33, 64),
+    (2, 128, 257, 2, 256),
+    (4, 128, 513, 3, 8),
+    (4, 512, 1024, 8, 1),
+    (8, 96, 300, 17, 2),
+]
+
+
+@pytest.mark.parametrize("b,d,n,m,C", SCORE_CASES)
+def test_ash_score_kernel_vs_ref(b, d, n, m, C):
+    key = jax.random.PRNGKey(b * 1000 + d)
+    args = _mk_score_inputs(key, b, d, n, m, C)
+    want = ref.ash_score_ref(*args, b=b)
+    got = ash_score_pallas(
+        *args, b=b, interpret=True, compute_dtype=jnp.float32
+    )
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-4
+    )
+
+
+@pytest.mark.parametrize("block_m,block_n,block_d", [
+    (8, 128, 128), (128, 512, 256), (32, 256, 512),
+])
+def test_ash_score_block_shape_sweep(block_m, block_n, block_d):
+    b, d, n, m, C = 2, 320, 777, 13, 16
+    key = jax.random.PRNGKey(99)
+    args = _mk_score_inputs(key, b, d, n, m, C)
+    want = ref.ash_score_ref(*args, b=b)
+    got = ash_score_pallas(
+        *args, b=b, interpret=True, compute_dtype=jnp.float32,
+        block_m=block_m, block_n=block_n, block_d=block_d,
+    )
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-4
+    )
+
+
+def test_ash_score_bf16_compute_close():
+    b, d, n, m, C = 2, 256, 512, 9, 8
+    args = _mk_score_inputs(jax.random.PRNGKey(3), b, d, n, m, C)
+    want = ref.ash_score_ref(*args, b=b)
+    got = ash_score_pallas(
+        *args, b=b, interpret=True, compute_dtype=jnp.bfloat16
+    )
+    # bf16 MXU operands (f32 accumulation): error scales with the dot's
+    # magnitude (~||q|| ||v|| 2^-8), not with the final score, so judge
+    # against the score DISTRIBUTION, not per-element relative error.
+    g, w = np.asarray(got), np.asarray(want)
+    err = np.abs(g - w)
+    assert err.max() < 0.05 * w.std() + 0.5, err.max()
+    corr = np.corrcoef(g.ravel(), w.ravel())[0, 1]
+    assert corr > 0.9999, corr
+
+
+KV_CASES = [
+    (1, 1, 128, 128, 300),
+    (2, 2, 128, 128, 1000),
+    (1, 4, 256, 64, 513),
+    (4, 1, 64, 256, 1024),
+    (4, 4, 96, 96, 77),
+]
+
+
+@pytest.mark.parametrize("bk,bv,dk,dv,S", KV_CASES)
+def test_ash_kv_attn_kernel_vs_ref(bk, bv, dk, dv, S):
+    key = jax.random.PRNGKey(bk * 100 + bv)
+    ks = jax.random.split(key, 8)
+    kvals = Q.quant(jax.random.normal(ks[0], (S, dk)), bk)
+    vvals = Q.quant(jax.random.normal(ks[1], (S, dv)), bv)
+    k_codes, v_codes = Q.pack_codes(kvals, bk), Q.pack_codes(vvals, bv)
+    qk = jax.random.normal(ks[2], (dk,)) * 0.1
+    k_scale = jax.random.uniform(ks[3], (S,), minval=0.5, maxval=1.5) * 0.05
+    k_bias = jax.random.normal(ks[4], (S,)) * 0.1
+    v_scale = jax.random.uniform(ks[5], (S,), minval=0.5, maxval=1.5)
+    mask = jnp.arange(S) < (S - 3)
+    want, _ = ref.ash_kv_attn_ref(
+        qk, k_codes, k_scale, k_bias, v_codes, v_scale, bk, bv, mask=mask
+    )
+    got = ash_kv_attn_pallas(
+        qk, k_codes, k_scale, k_bias, v_codes, v_scale, mask,
+        b_k=bk, b_v=bv, interpret=True,
+    )
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_ops_batched_kv_attention():
+    H, S, dk, dv, b = 3, 200, 128, 128, 2
+    key = jax.random.PRNGKey(5)
+    ks = jax.random.split(key, 4)
+    kvals = Q.quant(jax.random.normal(ks[0], (H, S, dk)), b)
+    vvals = Q.quant(jax.random.normal(ks[1], (H, S, dv)), b)
+    kc, vc = Q.pack_codes(kvals, b), Q.pack_codes(vvals, b)
+    qk = jax.random.normal(ks[2], (H, dk)) * 0.1
+    kscale = jnp.full((H, S), 0.05)
+    kbias = jnp.zeros((H, S))
+    vscale = jnp.ones((H, S))
+    mask = jnp.ones((H, S), bool)
+    got = ops.ash_kv_attention(
+        qk, kc, kscale, kbias, vc, vscale, mask, b_k=b, b_v=b,
+        interpret=True,
+    )
+    want = ops.ash_kv_attention(
+        qk, kc, kscale, kbias, vc, vscale, mask, b_k=b, b_v=b,
+        use_pallas=False,
+    )
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_ops_ash_score_end_to_end():
+    """Kernel wrapper == scoring.score_dot on a real encoded payload."""
+    from repro.core import ASHConfig, train, encode, prepare_queries
+    from repro.core import scoring as S
+    from repro.data.synthetic import embedding_dataset
+
+    key = jax.random.PRNGKey(0)
+    X = embedding_dataset(key, 2000, 64)
+    Qm = embedding_dataset(jax.random.PRNGKey(1), 8, 64)
+    model, _ = train(key, X, ASHConfig(b=2, d=32, n_landmarks=8,
+                                       store_fp16=False))
+    pay = encode(model, X)
+    prep = prepare_queries(model, Qm)
+    want = S.score_dot(model, prep, pay)
+    got = ops.ash_score(model, prep, pay, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-3
+    )

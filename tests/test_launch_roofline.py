@@ -1,0 +1,159 @@
+"""Launch-layer units: sharding rules, roofline parsing, mesh builders,
+cost algebra — everything the dry-run relies on, testable on 1 CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as onp
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import registry
+from repro.launch import roofline as RL
+from repro.launch import sharding as SH
+from repro.launch.analysis import CostVec
+from repro.launch.mesh import dp_axes, make_test_mesh, mesh_size
+from repro.launch.sharding import ShardingPolicy
+
+
+class FakeMesh:
+    """Duck-typed mesh: shape mapping only (rule logic needs no devices)."""
+
+    def __init__(self, **shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH1 = FakeMesh(data=16, model=16)
+MESH2 = FakeMesh(pod=2, data=16, model=16)
+
+
+def test_pick_divisibility():
+    assert SH.pick(MESH1, 64, "model") == "model"
+    assert SH.pick(MESH1, 40, "model", "pod") is None  # no pod axis
+    assert SH.pick(MESH2, 40, "model", "pod") == "pod"
+    assert SH.pick(MESH2, 1_000_000, ("pod", "data", "model"),
+                   ("pod", "data")) == ("pod", "data")
+    assert SH.pick(MESH1, 7, "data", "model") is None
+
+
+def test_fit_spec():
+    assert SH.fit_spec(P(None, "model", "pod", None), 3) == P(
+        None, "model", "pod"
+    )
+    assert SH.fit_spec(P("data", "model"), 2) == P("data", "model")
+    assert SH.fit_spec(P("data", "model"), 1) == P()  # can't drop used
+
+
+@pytest.mark.parametrize("arch_id", sorted(registry.ARCHS))
+@pytest.mark.parametrize("mesh", [MESH1, MESH2], ids=["1pod", "2pod"])
+def test_param_rules_valid_for_all_archs(arch_id, mesh):
+    """Every param leaf gets a spec that (a) fits its rank and (b) only
+    assigns axes that divide the dim — for both production meshes."""
+    arch = registry.get(arch_id)
+    pol = ShardingPolicy(seq_parallel=True, **arch.policy_overrides)
+    rules = arch.param_rules(mesh, pol)
+    params = arch.abstract_params()
+
+    def check(path, leaf):
+        spec = SH.fit_spec(
+            rules(SH._path_str(path), tuple(leaf.shape)), len(leaf.shape)
+        )
+        assert len(spec) <= len(leaf.shape)
+        used = []
+        for i, ax in enumerate(spec):
+            if ax is None:
+                continue
+            axes = (ax,) if isinstance(ax, str) else ax
+            total = 1
+            for a in axes:
+                assert a in mesh.shape, (path, a)
+                assert a not in used, f"axis {a} reused in {spec}"
+                used.append(a)
+                total *= mesh.shape[a]
+            assert leaf.shape[i] % total == 0, (
+                SH._path_str(path), leaf.shape, spec
+            )
+
+    jax.tree_util.tree_map_with_path(check, params)
+
+
+def test_shape_bytes_and_collective_parser():
+    hlo = """
+  %ag = f32[128,256]{1,0} all-gather(%x), replica_groups={}
+  %ar.1 = bf16[64]{0} all-reduce-start(%y)
+  %ar.2 = bf16[64]{0} all-reduce-done(%ar.1)
+  %rs = f32[32,32]{1,0} reduce-scatter(%z)
+  %dot = f32[8,8]{1,0} dot(%a, %b)
+"""
+    stats = RL.parse_collectives(hlo)
+    assert stats.bytes_by_kind["all-gather"] == 128 * 256 * 4
+    assert stats.bytes_by_kind["all-reduce"] == 64 * 2  # start counted once
+    assert stats.bytes_by_kind["reduce-scatter"] == 32 * 32 * 4
+    assert stats.count_by_kind["all-reduce"] == 1
+    assert stats.async_pairs == 1  # the -start form
+
+
+def test_ghost_detector():
+    hlo = """
+  %big = bf16[1000,100000]{1,0} add(%a, %b)
+  %gh = f32[1000,100000]{1,0} convert(%big)
+  %small = f32[10]{0} convert(%c)
+"""
+    g = RL.cpu_float_norm_ghost_bytes(hlo, min_bytes=2**20)
+    assert g == 1000 * 100000 * 4
+
+
+def test_roofline_terms_and_bottleneck():
+    r = RL.Roofline(flops=197e12, hbm_bytes=819e9 * 2,
+                    collective_bytes=50e9 * 0.5, n_chips=256,
+                    model_flops=197e12 * 0.5)
+    assert abs(r.t_compute - 1.0) < 1e-9
+    assert abs(r.t_memory - 2.0) < 1e-9
+    assert abs(r.t_collective - 0.5) < 1e-9
+    assert r.bottleneck == "memory"
+    assert abs(r.roofline_frac - 0.25) < 1e-9  # 0.5s useful / 2s bound
+    assert abs(r.useful_flops_frac - 0.5) < 1e-9
+
+
+def test_model_flops_conventions():
+    arch = registry.get("llama3.2-3b")
+    cell = arch.cells["train_4k"]
+    mf = RL.model_flops_for(arch, cell)
+    n = arch.cfg.param_count()
+    assert abs(mf - 6.0 * n * 256 * 4096) / mf < 1e-9
+    # MoE uses ACTIVE params
+    kimi = registry.get("kimi-k2-1t-a32b")
+    mf_k = RL.model_flops_for(kimi, kimi.cells["train_4k"])
+    assert mf_k < 6.0 * kimi.cfg.param_count() * 256 * 4096 * 0.1
+
+
+def test_costvec_algebra():
+    a = CostVec(1.0, 2.0, 3.0)
+    b = CostVec(0.5, 0.5, 0.5)
+    c = 2 * (a - b) + b
+    assert (c.flops, c.hbm_bytes, c.coll_bytes) == (1.5, 3.5, 5.5)
+
+
+def test_mesh_builders():
+    m = make_test_mesh()
+    assert mesh_size(m) == jax.device_count()
+    assert dp_axes(m) == ("data",)
+
+
+def test_make_constrain_noop_off_policy():
+    mesh = make_test_mesh(shape=(1, 1), axes=("data", "model"))
+    pol = ShardingPolicy(pin_ffn_hidden=False, pin_attn_boundary=False)
+    c = SH.make_constrain(mesh, pol)
+    x = jnp.ones((4, 8, 16))
+    assert c(x, "ffn_hidden") is x  # disabled pins return inputs as-is
+    y = jnp.ones((4, 8, 2, 4))
+    assert c(y, "attn_out") is y
+
+
+def test_batch_rules_fallback_chain():
+    rules = SH.batch_rules_leading_dp(MESH2, ShardingPolicy())
+    # divisible by pod*data=32
+    assert rules("x", (64, 5)) == P(("pod", "data"), None)
+    # divisible only by pod
+    assert rules("x", (2, 5)) == P(("pod",), None)
+    # prime: replicated
+    assert rules("x", (7, 5)) == P(None, None)

@@ -1,0 +1,164 @@
+"""NequIP: exactness of the Gaunt couplings + E(3) symmetry properties."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.spatial.transform as sst
+from hypothesis import given, strategies as st
+
+from repro.models import nequip as NQ
+
+
+def _random_graph(key, N=10, E=30, species=4):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    pos = jax.random.normal(k1, (N, 3)) * 2.0
+    src = jax.random.randint(k2, (E,), 0, N)
+    dst = (src + 1 + jax.random.randint(k3, (E,), 0, N - 1)) % N
+    sp = jax.random.randint(k4, (N,), 0, species)
+    return {"positions": pos, "species": sp,
+            "edge_src": src, "edge_dst": dst}
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = NQ.NequIPConfig(n_layers=2, channels=8, n_species=4)
+    params = NQ.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_gaunt_known_values():
+    # (1,1,0): Y1m Y1m' integrates to delta_mm' / sqrt(4pi) * Y00 coupling
+    C = NQ.gaunt_tensor(1, 1, 0)[:, :, 0]
+    np.testing.assert_allclose(
+        C, np.eye(3) * 0.5 / math.sqrt(math.pi), atol=1e-6
+    )
+    # (0,l,l): coupling with the scalar is identity x Y00
+    for l in (1, 2):
+        C = NQ.gaunt_tensor(0, l, l)[0]
+        np.testing.assert_allclose(
+            C, np.eye(2 * l + 1) * 0.5 / math.sqrt(math.pi), atol=1e-6
+        )
+    # selection rule: odd total parity vanishes
+    assert np.abs(NQ.gaunt_tensor(1, 1, 1)).max() < 1e-10
+
+
+def test_sph_harm_orthonormal():
+    """Quadrature check: <Y_lm, Y_l'm'> = delta."""
+    t, w = np.polynomial.legendre.leggauss(16)
+    phi = (np.arange(32) + 0.5) * (2 * np.pi / 32)
+    st_ = np.sqrt(1 - t**2)
+    xyz = np.stack([
+        st_[:, None] * np.cos(phi), st_[:, None] * np.sin(phi),
+        np.broadcast_to(t[:, None], (16, 32)),
+    ], -1)
+    ws = np.broadcast_to(w[:, None] * (2 * np.pi / 32), (16, 32))
+    Ys = [NQ.sph_harm_np(l, xyz) for l in range(3)]
+    allY = np.concatenate(Ys, -1)  # (T, P, 9)
+    gram = np.einsum("tpa,tpb,tp->ab", allY, allY, ws)
+    np.testing.assert_allclose(gram, np.eye(9), atol=1e-6)
+
+
+def test_sph_harm_jnp_matches_np():
+    xyz = np.random.RandomState(0).randn(50, 3)
+    xyz /= np.linalg.norm(xyz, axis=1, keepdims=True)
+    for l in range(3):
+        np.testing.assert_allclose(
+            np.asarray(NQ.sph_harm(l, jnp.asarray(xyz, jnp.float32))),
+            NQ.sph_harm_np(l, xyz), rtol=1e-5, atol=1e-6,
+        )
+
+
+@given(seed=st.integers(0, 1000))
+def test_energy_rotation_translation_invariance(model, seed):
+    cfg, params = model
+    batch = _random_graph(jax.random.PRNGKey(seed))
+    R = jnp.asarray(
+        sst.Rotation.random(random_state=seed).as_matrix(), jnp.float32
+    )
+    e0 = NQ.forward(params, batch, cfg)
+    b2 = dict(batch)
+    b2["positions"] = batch["positions"] @ R.T + 3.7
+    e1 = NQ.forward(params, b2, cfg)
+    np.testing.assert_allclose(
+        np.asarray(e0), np.asarray(e1), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_force_equivariance(model):
+    cfg, params = model
+    batch = _random_graph(jax.random.PRNGKey(7))
+    R = jnp.asarray(
+        sst.Rotation.random(random_state=1).as_matrix(), jnp.float32
+    )
+    _, f0 = NQ.energy_and_forces(params, batch, cfg)
+    b2 = dict(batch)
+    b2["positions"] = batch["positions"] @ R.T
+    _, f1 = NQ.energy_and_forces(params, b2, cfg)
+    np.testing.assert_allclose(
+        np.asarray(f1), np.asarray(f0 @ R.T), atol=1e-5
+    )
+
+
+def test_permutation_invariance(model):
+    cfg, params = model
+    batch = _random_graph(jax.random.PRNGKey(9), N=8, E=20)
+    perm = jnp.asarray(np.random.RandomState(0).permutation(8))
+    inv = jnp.argsort(perm)
+    b2 = {
+        "positions": batch["positions"][perm],
+        "species": batch["species"][perm],
+        "edge_src": inv[batch["edge_src"]],
+        "edge_dst": inv[batch["edge_dst"]],
+    }
+    e0 = NQ.forward(params, batch, cfg)
+    e1 = NQ.forward(params, b2, cfg)
+    np.testing.assert_allclose(np.asarray(e0), np.asarray(e1), rtol=1e-4)
+
+
+def test_cutoff_locality(model):
+    """Atoms beyond the cutoff radius contribute nothing."""
+    cfg, params = model
+    batch = _random_graph(jax.random.PRNGKey(3), N=6, E=10)
+    far = dict(batch)
+    # push node 0 outside everyone's cutoff
+    far["positions"] = batch["positions"].at[0].set(
+        jnp.array([100.0, 100.0, 100.0])
+    )
+    e = NQ.forward(params, far, cfg)
+    # removing node-0 edges entirely gives the same energy
+    mask = (batch["edge_src"] != 0) & (batch["edge_dst"] != 0)
+    pruned = dict(far)
+    pruned["edge_mask"] = mask
+    e2 = NQ.forward(params, pruned, cfg)
+    np.testing.assert_allclose(np.asarray(e), np.asarray(e2), rtol=1e-4)
+
+
+def test_padding_masks_are_neutral(model):
+    cfg, params = model
+    batch = _random_graph(jax.random.PRNGKey(5), N=8, E=16)
+    e0 = NQ.forward(params, batch, cfg)
+    padded = {
+        "positions": jnp.pad(batch["positions"], ((0, 4), (0, 0))),
+        "species": jnp.pad(batch["species"], (0, 4)),
+        "edge_src": jnp.pad(batch["edge_src"], (0, 6)),
+        "edge_dst": jnp.pad(batch["edge_dst"], (0, 6)),
+        "edge_mask": jnp.pad(jnp.ones(16, bool), (0, 6)),
+        "node_mask": jnp.pad(jnp.ones(8, bool), (0, 4)),
+    }
+    e1 = NQ.forward(params, padded, cfg)
+    np.testing.assert_allclose(
+        np.asarray(e0), np.asarray(e1), rtol=1e-3, atol=1e-3
+    )
+
+
+def test_bessel_and_cutoff():
+    r = jnp.linspace(0.01, 6.0, 50)
+    env = NQ.poly_cutoff(r, 5.0)
+    assert float(env[0]) > 0.99
+    assert float(env[-1]) == 0.0
+    assert np.all(np.diff(np.asarray(env)) <= 1e-6)
+    basis = NQ.bessel_basis(r, 8, 5.0)
+    assert basis.shape == (50, 8)
+    assert not bool(jnp.any(jnp.isnan(basis)))

@@ -1,0 +1,117 @@
+"""The paper's comparative claims, validated as tests on synthetic
+embedding-like data (relative orderings — see DESIGN.md §6 item 2).
+
+Small-scale mirrors of the EXPERIMENTS.md reproduction sections.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    ASHConfig, encode, prepare_queries, random_model, score_dot, train,
+)
+from repro.data.synthetic import embedding_dataset
+from repro.index import metrics as MET
+
+D = 64
+
+
+@pytest.fixture(scope="module")
+def data():
+    key = jax.random.PRNGKey(77)
+    kx, kq = jax.random.split(key)
+    X = embedding_dataset(kx, 4000, D)
+    Qm = embedding_dataset(kq, 32, D)
+    gt = MET.exact_topk(Qm, X, k=10)[1]
+    return X, Qm, gt
+
+
+def _recall(model, X, Qm, gt, R=30):
+    pay = encode(model, X)
+    prep = prepare_queries(model, Qm)
+    ids = jax.lax.top_k(score_dot(model, prep, pay), R)[1]
+    return float(MET.recall_at(ids, gt))
+
+
+def test_fig1_learned_beats_random_and_gap_widens(data):
+    """Fig. 1: learned-W recall > random-W recall; the gap grows as
+    d shrinks below D."""
+    X, Qm, gt = data
+    gaps = []
+    for d in (D, D // 2):
+        cfg = ASHConfig(b=2, d=d, n_landmarks=1)
+        r_l = _recall(train(jax.random.PRNGKey(0), X, cfg)[0], X, Qm, gt)
+        r_r = _recall(
+            random_model(jax.random.PRNGKey(0), D, cfg,
+                         X_for_landmarks=X), X, Qm, gt,
+        )
+        gaps.append(r_l - r_r)
+    assert gaps[0] >= -0.02  # d=D: learned at least matches
+    assert gaps[1] > 0.02  # d=D/2: clear win
+    assert gaps[1] >= gaps[0] - 0.02  # gap widens (within noise)
+
+
+def test_fig1_b2_halfdim_beats_b1_fulldim(data):
+    """The headline: at iso-B, (b=2, d=D/2) >= (b=1, d=D), learned."""
+    X, Qm, gt = data
+    r_b1 = _recall(
+        train(jax.random.PRNGKey(0), X,
+              ASHConfig(b=1, d=D, n_landmarks=1))[0], X, Qm, gt,
+    )
+    r_b2 = _recall(
+        train(jax.random.PRNGKey(0), X,
+              ASHConfig(b=2, d=D // 2, n_landmarks=1))[0], X, Qm, gt,
+    )
+    assert r_b2 >= r_b1 - 0.02, (r_b1, r_b2)
+
+
+def test_fig2_learned_beats_rabitq_expectation(data):
+    """Fig. 2: ITQ-learned E[<x, quant_1(Wx)>] beats the random-rotation
+    closed form (Eq. 33)."""
+    from repro.baselines.rabitq import expected_dot_1bit
+
+    X, _, _ = data
+    _, hist = train(jax.random.PRNGKey(1), X,
+                    ASHConfig(b=1, d=D, n_landmarks=1))
+    learned_cos = -hist[-1]
+    assert learned_cos > float(expected_dot_1bit(D))
+
+
+def test_fp16_query_negligible(data):
+    """Table 6: bf16 queries change recall by ~nothing."""
+    X, Qm, gt = data
+    model, _ = train(jax.random.PRNGKey(2), X,
+                     ASHConfig(b=2, d=D, n_landmarks=16))
+    pay = encode(model, X)
+    prep = prepare_queries(model, Qm)
+    prep_lo = jax.tree_util.tree_map(
+        lambda a: a.astype(jnp.bfloat16).astype(jnp.float32), prep
+    )
+    ids_hi = jax.lax.top_k(score_dot(model, prep, pay), 30)[1]
+    ids_lo = jax.lax.top_k(score_dot(model, prep_lo, pay), 30)[1]
+    r_hi = float(MET.recall_at(ids_hi, gt))
+    r_lo = float(MET.recall_at(ids_lo, gt))
+    assert abs(r_hi - r_lo) < 0.02
+
+
+def test_error_purely_angular(data):
+    """Sec. 2: ASH reconstruction preserves the residual norm exactly
+    (error is angular) — unlike e.g. LVQ whose min-max scaling distorts
+    norms."""
+    from repro.core import decode
+    from repro.core import learning as L
+
+    X, _, _ = data
+    model, _ = train(jax.random.PRNGKey(3), X,
+                     ASHConfig(b=2, d=D, n_landmarks=4,
+                               store_fp16=False))
+    pay = encode(model, X)
+    Xhat = decode(model, pay)
+    mu = model.landmarks[pay.cluster]
+    r_true = jnp.linalg.norm(X - mu, axis=1)
+    r_hat = jnp.linalg.norm(Xhat - mu, axis=1)
+    import numpy as np
+
+    np.testing.assert_allclose(
+        np.asarray(r_hat), np.asarray(r_true), rtol=1e-4
+    )

@@ -1,0 +1,99 @@
+"""quant_b correctness: exact sweep vs brute force, packing, properties."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import quantization as Q
+
+
+def _brute_force(u_row: np.ndarray, b: int) -> np.ndarray:
+    grid = np.array([2 * c - (2**b - 1) for c in range(2**b)], np.float64)
+    combos = np.array(
+        list(itertools.product(grid, repeat=len(u_row))), np.float64
+    )
+    cos = (combos @ u_row) / np.linalg.norm(combos, axis=1)
+    return combos[np.argmax(cos)]
+
+
+@pytest.mark.parametrize("b", [1, 2, 3])
+def test_exact_matches_brute_force(b):
+    key = jax.random.PRNGKey(b)
+    u = jax.random.normal(key, (12, 5))
+    got = np.asarray(Q.quant_exact(u, b), np.float64)
+    un = np.asarray(u, np.float64)
+    for i in range(u.shape[0]):
+        best = _brute_force(un[i], b)
+        cos_got = got[i] @ un[i] / np.linalg.norm(got[i])
+        cos_best = best @ un[i] / np.linalg.norm(best)
+        assert cos_got >= cos_best - 1e-9
+
+
+@pytest.mark.parametrize("b", [2, 4])
+def test_exact_at_least_as_good_as_grid(b):
+    key = jax.random.PRNGKey(b)
+    u = jax.random.normal(key, (64, 48))
+    ve = np.asarray(Q.quant_exact(u, b), np.float64)
+    vg = np.asarray(Q.quant_grid(u, b, n_scales=256), np.float64)
+    un = np.asarray(u, np.float64)
+    ce = np.einsum("nd,nd->n", ve, un) / np.linalg.norm(ve, axis=1)
+    cg = np.einsum("nd,nd->n", vg, un) / np.linalg.norm(vg, axis=1)
+    # fp32 cumsums in the sweep can mis-rank near-ties by ~1e-5
+    assert np.all(ce >= cg - 5e-5)
+    # and the 256-scale grid search is within a few % of optimal
+    assert np.max((ce - cg) / np.abs(ce)) < 0.05
+
+
+@pytest.mark.parametrize("b", [1, 2, 4, 8])
+@pytest.mark.parametrize("d", [1, 7, 32, 37, 128])
+def test_pack_unpack_roundtrip(b, d):
+    key = jax.random.PRNGKey(d * 10 + b)
+    v = Q.quant(jax.random.normal(key, (9, d)), b)
+    w = Q.pack_codes(v, b)
+    assert w.dtype == jnp.uint32
+    assert w.shape == (9, Q.packed_width(d, b))
+    v2 = Q.unpack_codes(w, d, b)
+    assert jnp.array_equal(v, v2)
+
+
+@given(
+    b=st.sampled_from([1, 2, 4]),
+    d=st.integers(2, 24),
+    seed=st.integers(0, 2**30),
+)
+def test_quant_output_on_grid(b, d, seed):
+    u = jax.random.normal(jax.random.PRNGKey(seed), (3, d))
+    v = np.asarray(Q.quant(u, b))
+    assert v.min() >= -(2**b - 1) and v.max() <= 2**b - 1
+    assert np.all(v % 2 != 0)  # odd-integer grid
+    # sign agreement wherever u != 0
+    un = np.asarray(u)
+    nz = np.abs(un) > 1e-6
+    assert np.all(np.sign(v[nz]) == np.sign(un[nz]))
+
+
+@given(
+    scale=st.floats(0.01, 100.0),
+    seed=st.integers(0, 2**30),
+)
+def test_quant_scale_invariance(scale, seed):
+    u = jax.random.normal(jax.random.PRNGKey(seed), (4, 16))
+    v1 = Q.quant(u, 2)
+    v2 = Q.quant(u * scale, 2)
+    assert jnp.array_equal(v1, v2)
+
+
+def test_quant_b1_is_sign():
+    u = jnp.array([[0.5, -0.1, 0.0, -3.0]])
+    v = Q.quant(u, 1)
+    assert jnp.array_equal(v, jnp.array([[1, -1, 1, -1]]))
+
+
+def test_levels_values_involution():
+    for b in (1, 2, 4, 8):
+        vals = Q.grid_values(b)
+        lv = Q.values_to_levels(vals, b)
+        assert jnp.array_equal(Q.levels_to_values(lv, b), vals)

@@ -1,0 +1,207 @@
+"""Training substrate: optimizers, microbatching, checkpoint/FT,
+gradient compression."""
+import functools
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.data.synthetic import IteratorState, TokenStream
+from repro.models.transformer import TransformerConfig, init_params, loss_fn
+from repro.train import optim as O
+from repro.train.checkpoint import CheckpointManager
+from repro.train.compression import (
+    CompressionConfig, compress_decompress, _hadamard,
+)
+from repro.train.trainer import TrainConfig, init_state, make_train_step
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = TransformerConfig(
+        name="t", n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
+        d_ff=64, vocab=128, dtype=jnp.float32, param_dtype=jnp.float32,
+        remat=False, q_chunk=0,
+    )
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.mark.parametrize("opt,lr", [("adamw", 1e-3), ("adafactor", 1e-2),
+                                    ("muon", 2e-3)])
+def test_optimizers_decrease_loss(tiny, opt, lr):
+    cfg, params = tiny
+    tcfg = TrainConfig(opt=O.OptConfig(name=opt, lr=lr, warmup_steps=2,
+                                       total_steps=200))
+    state = init_state(jax.random.PRNGKey(0), params, tcfg)
+    step = jax.jit(make_train_step(
+        functools.partial(loss_fn, cfg=cfg), tcfg
+    ))
+    stream = TokenStream(IteratorState(seed=5), 8, 16, 128)
+    losses = []
+    for _ in range(30):
+        state, m = step(state, stream.next())
+        losses.append(float(m["loss"]))
+    first, last = sum(losses[:5]) / 5, sum(losses[-5:]) / 5
+    assert last < first, (opt, first, last)
+
+
+def test_adafactor_momentum_free_state(tiny):
+    cfg, params = tiny
+    tcfg = TrainConfig(opt=O.OptConfig(name="adafactor", b1=0.0))
+    state = init_state(jax.random.PRNGKey(0), params, tcfg)
+    # b1=0: mu buffers are dummy (1,)-shaped — the 1T memory saving
+    for leaf in jax.tree_util.tree_leaves(state.opt_state.mu):
+        assert leaf.shape == (1,)
+
+
+def test_microbatch_grad_equivalence(tiny):
+    """k=1 vs k=4 gradient accumulation: same update (fp32, lr=0 wd=0)."""
+    cfg, params = tiny
+    stream = TokenStream(IteratorState(seed=9), 8, 16, 128)
+    batch = stream.next()
+
+    def grads_with(k):
+        tcfg = TrainConfig(opt=O.OptConfig(lr=1e-3), microbatches=k)
+        state = init_state(jax.random.PRNGKey(0), params, tcfg)
+        step = jax.jit(make_train_step(
+            functools.partial(loss_fn, cfg=cfg), tcfg
+        ))
+        new_state, m = step(state, batch)
+        return new_state.params, float(m["loss"])
+
+    p1, l1 = grads_with(1)
+    p4, l4 = grads_with(4)
+    assert abs(l1 - l4) < 1e-4
+    for a, b in zip(jax.tree_util.tree_leaves(p1),
+                    jax.tree_util.tree_leaves(p4)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-5)
+
+
+def test_checkpoint_restart_bitwise(tiny, tmp_path):
+    cfg, params = tiny
+    tcfg = TrainConfig(opt=O.OptConfig(lr=1e-3))
+    state = init_state(jax.random.PRNGKey(0), params, tcfg)
+    step = jax.jit(make_train_step(
+        functools.partial(loss_fn, cfg=cfg), tcfg
+    ))
+    stream = TokenStream(IteratorState(seed=3), 8, 16, 128)
+    mgr = CheckpointManager(str(tmp_path), keep_n=2, async_save=False)
+    for _ in range(3):
+        state, _ = step(state, stream.next())
+    mgr.save(3, state, extra=stream.state.to_dict())
+
+    cont = []
+    s2 = state
+    for _ in range(3):
+        s2, m = step(s2, stream.next())
+        cont.append(float(m["loss"]))
+
+    restored, extra = mgr.restore(state)
+    stream2 = TokenStream(IteratorState.from_dict(extra), 8, 16, 128)
+    replay = []
+    for _ in range(3):
+        restored, m = step(restored, stream2.next())
+        replay.append(float(m["loss"]))
+    assert cont == replay  # bitwise-deterministic restart
+
+
+def test_checkpoint_atomic_commit_and_gc(tiny, tmp_path):
+    cfg, params = tiny
+    tcfg = TrainConfig()
+    state = init_state(jax.random.PRNGKey(0), params, tcfg)
+    mgr = CheckpointManager(str(tmp_path), keep_n=2, async_save=False)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, state)
+    assert mgr.all_steps() == [3, 4]  # GC kept last 2
+    # a dir without COMMIT marker is invisible
+    import os, shutil
+
+    src = tmp_path / "step_0000000004"
+    dst = tmp_path / "step_0000000009"
+    shutil.copytree(src, dst)
+    os.remove(dst / "COMMIT")
+    assert mgr.latest_step() == 4
+
+
+def test_checkpoint_bfloat16_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(7, dtype=jnp.bfloat16) / 3,
+            "b": {"c": jnp.float32(2.5)}}
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, tree)
+    restored, _ = mgr.restore(tree)
+    assert restored["a"].dtype == jnp.bfloat16
+    assert jnp.array_equal(restored["a"], tree["a"])
+
+
+def test_failure_restart_via_launcher(tmp_path):
+    """Kill the training loop mid-run, restart, verify resume."""
+    from repro.launch import train as TL
+
+    args = ["--arch", "llama3.2-3b", "--reduced", "--steps", "8",
+            "--batch", "4", "--seq", "16",
+            "--ckpt-dir", str(tmp_path), "--ckpt-every", "2",
+            "--log-every", "1"]
+    with pytest.raises(SystemExit) as ei:
+        TL.main(args + ["--die-at-step", "5"])
+    assert ei.value.code == 42  # simulated node failure
+    assert TL.main(args) == 0  # restart resumes from step 4 and finishes
+
+
+def test_hadamard_orthogonal():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 256))
+    y = _hadamard(x)
+    np.testing.assert_allclose(
+        np.asarray(jnp.linalg.norm(y, axis=-1)),
+        np.asarray(jnp.linalg.norm(x, axis=-1)), rtol=1e-5,
+    )
+    # involution: H(H(x)) = x
+    np.testing.assert_allclose(
+        np.asarray(_hadamard(y)), np.asarray(x), atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("bits,max_rel", [(1, 0.75), (2, 0.45), (4, 0.15)])
+def test_compression_error_bounds(bits, max_rel):
+    g = jax.random.normal(jax.random.PRNGKey(1), (8192,))
+    ghat = compress_decompress(
+        jax.random.PRNGKey(77), g, CompressionConfig(bits=bits, enabled=True)
+    )
+    rel = float(jnp.linalg.norm(ghat - g) / jnp.linalg.norm(g))
+    assert rel < max_rel, rel
+
+
+def test_compression_with_error_feedback_converges(tiny):
+    """EF: repeated compression of a CONSTANT gradient converges to it."""
+    from repro.train.compression import EFState, compress_tree, ef_init
+
+    g = {"w": jax.random.normal(jax.random.PRNGKey(2), (2048,))}
+    cfg = CompressionConfig(bits=1, enabled=True, error_feedback=True)
+    ef = ef_init(g)
+    acc = jnp.zeros_like(g["w"])
+    n = 30
+    for i in range(n):
+        out, ef = compress_tree(jax.random.PRNGKey(i), g, ef, cfg)
+        acc = acc + out["w"]
+    mean = acc / n
+    rel = float(jnp.linalg.norm(mean - g["w"]) / jnp.linalg.norm(g["w"]))
+    assert rel < 0.15, rel  # EF kills the bias
+
+
+def test_lr_schedule_shape():
+    cfg = O.OptConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    lrs = [float(O.lr_at(cfg, jnp.int32(s))) for s in (0, 5, 10, 50, 100)]
+    assert lrs[0] < lrs[1] < lrs[2]  # warmup
+    assert lrs[2] >= lrs[3] >= lrs[4]  # cosine decay
+    assert lrs[4] >= 0.1 * 0.9  # floor
+
+
+def test_grad_clip():
+    tree = {"a": jnp.full((10,), 100.0)}
+    clipped, gn = O.clip_by_global_norm(tree, 1.0)
+    assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-5
+    assert float(gn) > 100.0

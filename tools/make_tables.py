@@ -1,0 +1,62 @@
+"""Assemble EXPERIMENTS.md tables from the dry-run / roofline jsonl."""
+import json
+import sys
+
+
+def load(path):
+    try:
+        return [json.loads(l) for l in open(path)]
+    except FileNotFoundError:
+        return []
+
+
+def dryrun_table(rows):
+    out = [
+        "| arch | cell | mesh | peak GiB/dev | TPU-adj GiB | fits 16G "
+        "(adj) | AG/AR/RS/CP | async |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        cc = r["collective_counts"]
+        out.append(
+            f"| {r['arch']} | {r['cell']} | {r['mesh']} "
+            f"| {r['peak_gib_per_dev']:.2f} "
+            f"| {r['peak_gib_per_dev_tpu_adj']:.2f} "
+            f"| {'Y' if r['fits_16g_hbm_tpu_adj'] else 'N'} "
+            f"| {cc['all-gather']}/{cc['all-reduce']}"
+            f"/{cc['reduce-scatter']}/{cc['collective-permute']} "
+            f"| {r['async_collectives']} |"
+        )
+    return "\n".join(out)
+
+
+def roofline_table(rows):
+    out = [
+        "| arch | cell | t_compute (ms) | t_memory (ms) | t_coll (ms) "
+        "| bottleneck | useful-FLOP frac | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if "t_compute_s" not in r:
+            continue
+        uf = r.get("useful_flops_frac")
+        rf = r.get("roofline_frac")
+        out.append(
+            f"| {r['arch']} | {r['cell']} "
+            f"| {1e3 * r['t_compute_s']:.2f} "
+            f"| {1e3 * r['t_memory_s']:.2f} "
+            f"| {1e3 * r['t_collective_s']:.2f} "
+            f"| **{r['bottleneck']}** "
+            f"| {uf if uf is None else round(uf, 3)} "
+            f"| {rf if rf is None else round(rf, 4)} |"
+        )
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    kind = sys.argv[1]
+    rows = load(sys.argv[2])
+    if kind == "dryrun":
+        print(dryrun_table(rows))
+    else:
+        print(roofline_table(rows))
