@@ -17,11 +17,8 @@ from repro.baselines import eden, leanvec, lopq, pq, rabitq
 from repro.core import (
     ASHConfig, encode, prepare_queries, random_model, score_dot, train,
 )
-from repro.core import learning as L
 from repro.core import scoring as S
-from repro.core.ash import reconstruction_error
-from repro.index import flat, ivf
-from repro.index import metrics as MET
+from repro.index import AshIndex
 
 
 def _search_recall(model, X, Qm, gt, R=10):
@@ -194,10 +191,11 @@ def fig9_pareto():
     rows = []
     for b, dd in ((2, D // 2), (4, D // 2)):
         cfg = ASHConfig(b=b, d=dd, n_landmarks=64)
-        index = ivf.build(jax.random.PRNGKey(0), X, cfg)
+        index = AshIndex.build(jax.random.PRNGKey(0), X, cfg,
+                               backend="ivf")
         for nprobe in (2, 8, 32):
             (sc, ids), us = timed(
-                ivf.search, index, Qm, 10, nprobe, repeats=2
+                index.search, Qm, 10, nprobe=nprobe, repeats=2
             )
             qps = 1e6 * Qm.shape[0] / us
             rows.append(row(

@@ -6,11 +6,10 @@ from an ASH-compressed IVF index, with exact-rerank and latency stats.
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import ASHConfig
 from repro.data.synthetic import embedding_dataset, isotropy_diagnostics
-from repro.index import ivf, metrics
+from repro.index import AshIndex, metrics
 
 
 def main():
@@ -23,9 +22,8 @@ def main():
 
     cfg = ASHConfig(b=2, d=64, n_landmarks=128)  # nlist = 128
     t0 = time.time()
-    index = ivf.build(kb, X, cfg, keep_raw=True)
-    print(f"index built in {time.time() - t0:.1f}s "
-          f"(nlist=128, {cfg.payload_bits()} bits/vec)")
+    index = AshIndex.build(kb, X, cfg, backend="ivf", keep_raw=True)
+    print(f"index built in {time.time() - t0:.1f}s ({index!r})")
 
     # batched request stream
     batches = [embedding_dataset(jax.random.fold_in(kq, i), 32, D)
@@ -34,12 +32,12 @@ def main():
 
     for nprobe in (4, 16, 64):
         # warmup then serve
-        ivf.search(index, batches[0], k=10, nprobe=nprobe, rerank=50)
+        index.search(batches[0], k=10, nprobe=nprobe, rerank=50)
         lat, rec = [], []
         for b, g in zip(batches, gt):
             t0 = time.perf_counter()
             _, ids = jax.block_until_ready(
-                ivf.search(index, b, k=10, nprobe=nprobe, rerank=50)
+                index.search(b, k=10, nprobe=nprobe, rerank=50)
             )
             lat.append((time.perf_counter() - t0) * 1e3)
             rec.append(float(metrics.recall_at(ids, g)))

@@ -29,22 +29,23 @@ def main():
 
     # Compress the 100k-item catalog with learned ASH (4 bits, d/2):
     t0 = time.time()
-    model, payload = RET.build_candidate_index(
+    index = RET.build_index(
         jax.random.PRNGKey(1), params["item_emb"], bits=4, reduce=2,
         n_landmarks=32,
     )
+    payload = index.payload
     fp32_bytes = params["item_emb"].size * 4
     ash_bytes = payload.codes.size * 4 + payload.scale.size * 2 \
         + payload.offset.size * 2 + payload.cluster.size
     print(f"catalog compressed {fp32_bytes/ash_bytes:.1f}x "
-          f"in {time.time()-t0:.1f}s")
+          f"in {time.time()-t0:.1f}s ({index!r})")
 
     # Serve: user sequences -> user state -> ASH MIPS over the catalog
     seq = jax.random.randint(jax.random.PRNGKey(2), (64, 20), 1,
                              cfg.n_items)
     t0 = time.perf_counter()
     scores, ids = jax.block_until_ready(
-        RET.sasrec_retrieve(params, seq, model, payload, cfg, k=10)
+        RET.sasrec_retrieve(params, seq, index, cfg, k=10)
     )
     dt = time.perf_counter() - t0
     # recall vs exact full-precision MIPS

@@ -34,15 +34,20 @@ def train(
     config: ASHConfig,
     *,
     train_sample: Optional[int] = None,
+    landmark_sample: Optional[int] = None,
     max_iters: int = 25,
     use_newton_schulz: bool = False,
     kmeans_iters: int = 25,
 ) -> tuple[ASHModel, list[float]]:
     """Learn landmarks + W = R P from data.
 
-    Follows the paper: train on a subsample of ~10*D vectors (10x
-    oversampling of the covariance), PCA init for P, random-rotation init
-    for R, <= 25 alternation iterations with early stopping.
+    Follows the paper: W is learned on a subsample of ~10*D vectors
+    (10x oversampling of the covariance), PCA init for P,
+    random-rotation init for R, <= 25 alternation iterations with early
+    stopping.  The landmark k-means runs on the full set by default
+    (``landmark_sample`` caps it for very large corpora) — landmark
+    quality bounds the residual norms every downstream bit quantizes,
+    and Lloyd iterations are cheap relative to encoding.
     """
     n, D = X.shape
     d = config.d if config.d > 0 else D
@@ -51,23 +56,36 @@ def train(
         b=config.b, d=d, n_landmarks=config.n_landmarks,
         store_fp16=config.store_fp16,
     )
-    k_sub, k_km, k_rot = jax.random.split(key, 3)
+    k_sub, k_lm, k_km, k_rot = jax.random.split(key, 4)
+
+    # Subsample BEFORE casting so a capped run on a huge low-precision
+    # corpus never materializes a full fp32 copy.
+    X32 = None  # full fp32 view, created lazily
+    if landmark_sample is not None and landmark_sample < n:
+        idx_lm = jax.random.choice(
+            k_lm, n, shape=(landmark_sample,), replace=False
+        )
+        X_lm = X[idx_lm].astype(jnp.float32)
+    else:
+        X32 = X.astype(jnp.float32)
+        X_lm = X32
+    centroids, _ = L.kmeans(
+        k_km, X_lm, config.n_landmarks, iters=kmeans_iters
+    )
 
     if train_sample is None:
-        train_sample = min(n, 10 * D)
+        # 10x covariance oversampling per the paper, but never
+        # subsample tiny corpora — the cap exists to bound training
+        # cost, and below ~4k rows there is no cost to bound.
+        train_sample = min(n, max(10 * D, 4096))
     if train_sample < n:
         idx = jax.random.choice(
             k_sub, n, shape=(train_sample,), replace=False
         )
-        Xt = X[idx]
+        Xt = X[idx].astype(jnp.float32)
     else:
-        Xt = X
-
-    X32 = Xt.astype(jnp.float32)
-    centroids, assign = L.kmeans(
-        k_km, X32, config.n_landmarks, iters=kmeans_iters
-    )
-    x_tilde, _, _ = L.normalized_residuals(X32, centroids, assign)
+        Xt = X32 if X32 is not None else X.astype(jnp.float32)
+    x_tilde, _, _ = L.normalized_residuals(Xt, centroids)
     P = L.pca_topd(x_tilde, d)  # (d, D)
     Z = x_tilde @ P.T  # (n_t, d)
     R, history = L.learn_rotation(
@@ -144,7 +162,16 @@ def encode(model: ASHModel, X: jax.Array, exact: bool = True) -> ASHPayload:
     offset = (
         ip_x_mu - scale * ip_Wmu_v - model.landmark_sq_norms[assign]
     )
-    hdr_dtype = jnp.bfloat16 if cfg.store_fp16 else jnp.float32
+    # IEEE fp16 (10-bit mantissa), matching Table 1's 16-bit header;
+    # bf16 would cost ~3 bits of SCALE/OFFSET precision.  Clip into the
+    # fp16-finite range so extreme-norm corpora degrade in precision
+    # instead of overflowing to inf (which would poison every score of
+    # the affected rows).
+    hdr_dtype = jnp.float16 if cfg.store_fp16 else jnp.float32
+    if cfg.store_fp16:
+        lim = float(jnp.finfo(jnp.float16).max)
+        scale = jnp.clip(scale, 0.0, lim)
+        offset = jnp.clip(offset, -lim, lim)
     return ASHPayload(
         b=cfg.b,
         d=cfg.d,

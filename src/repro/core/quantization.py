@@ -108,11 +108,17 @@ def quant_grid(u: jax.Array, b: int, n_scales: int = 64) -> jax.Array:
     gmax = 2**b - 1
 
     def one(uv):
-        a_max = jnp.maximum(jnp.max(jnp.abs(uv)), _EPS)
-        # t such that t*a_max spans [~0.5, gmax + 1]
-        ts = jnp.logspace(
-            jnp.log10(0.5), jnp.log10(gmax + 1.0), n_scales
-        ) / a_max
+        a = jnp.abs(uv)
+        a_max = jnp.maximum(jnp.max(a), _EPS)
+        # Breakpoints live at t = 2m/a_j, m <= 2^(b-1)-1: the scan must
+        # reach the largest breakpoint of the smallest *relevant*
+        # coordinate or small-|u_j| dims can never upgrade past mag 1.
+        # Near-zero dims are ignored (their breakpoints sit at absurd
+        # scales and contribute ~nothing to cosSim).
+        a_min = jnp.min(jnp.where(a > 1e-4 * a_max, a, a_max))
+        lo = 0.5 / a_max
+        hi = (gmax + 1.0) / jnp.maximum(a_min, _EPS)
+        ts = jnp.logspace(jnp.log10(lo), jnp.log10(hi), n_scales)
         def eval_t(t):
             scaled = uv * t
             mag = jnp.clip(

@@ -38,8 +38,8 @@ class ASHConfig:
       b: bitrate per dimension (1, 2, 4, 8).
       d: target (reduced) dimensionality, d <= D.
       n_landmarks: number of landmark (coarse-quantizer) vectors C.
-      store_fp16: downcast per-vector headers (SCALE/OFFSET) to bf16,
-        matching the paper's 16-bit header payload (Table 1).
+      store_fp16: downcast per-vector headers (SCALE/OFFSET) to IEEE
+        fp16, matching the paper's 16-bit header payload (Table 1).
     """
 
     b: int = 2

@@ -1,6 +1,13 @@
-"""ANN index structures over ASH payloads."""
-from repro.index import flat, ivf, metrics, distributed
+"""ANN index structures over ASH payloads.
+
+``AshIndex`` is the unified build/search/persist surface; the
+``flat``/``ivf`` module-level builders are deprecated shims kept for
+one release.
+"""
+from repro.index import common, flat, ivf, metrics, distributed
+from repro.index.api import AshIndex, available_backends, register_backend
 from repro.index.metrics import exact_topk, recall_at, recall_curve
 
-__all__ = ["flat", "ivf", "metrics", "distributed",
+__all__ = ["AshIndex", "available_backends", "register_backend",
+           "common", "flat", "ivf", "metrics", "distributed",
            "exact_topk", "recall_at", "recall_curve"]

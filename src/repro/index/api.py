@@ -1,0 +1,545 @@
+"""Unified ``AshIndex`` facade: one build/search/persist surface over
+the flat, IVF and sharded backends.
+
+The paper's value proposition is a single encoder-decoder payload
+(Table 1) serving dot/L2/cosine search at every scale; this module is
+the single entry point over it::
+
+    index = AshIndex.build(key, X, ASHConfig(b=2, d=64, n_landmarks=64),
+                           backend="ivf", metric="l2", keep_raw=True)
+    scores, ids = index.search(queries, k=10, nprobe=16, rerank=100)
+    index.add(X_new)                    # incremental ingestion
+    index.save("/tmp/idx")              # npz arrays + JSON config
+    index = AshIndex.load("/tmp/idx")   # bit-identical search results
+
+Backends are pluggable via :func:`register_backend`; all share the
+metric dispatcher and exact-rerank pipeline of ``repro.index.common``,
+so every backend returns higher-is-better scores and id ``-1`` for
+missing candidates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import pathlib
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ash as A
+from repro.core.types import ASHConfig, ASHModel, ASHPayload
+from repro.index import common as C
+from repro.index import distributed as DX
+from repro.index import flat as F
+from repro.index import ivf as IV
+
+FORMAT_VERSION = 1
+
+_BACKENDS: dict[str, type] = {}
+
+
+def register_backend(cls):
+    """Class decorator: register an index backend under ``cls.name``."""
+    _BACKENDS[cls.name] = cls
+    return cls
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_BACKENDS))
+
+
+def _get_backend(name: str):
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; available: {available_backends()}"
+        ) from None
+
+
+# ---------------------------------------------------------------------------
+# Array (de)serialization — numpy .npz with bf16 stored as uint16 views
+# ---------------------------------------------------------------------------
+
+_MODEL_FIELDS = (
+    "W", "landmarks", "W_landmarks", "landmark_sq_norms",
+    "bias_rho", "bias_beta",
+)
+_PAYLOAD_FIELDS = ("codes", "scale", "offset", "cluster")
+
+
+_BF16 = np.dtype(jnp.bfloat16)
+
+
+def _encode_array(a) -> tuple[np.ndarray, str]:
+    """jax/numpy array -> (savez-safe numpy array, dtype tag).
+
+    numpy can't serialize the ml_dtypes bfloat16 descr, so bf16 arrays
+    are stored as uint16 bit patterns and tagged for exact restore."""
+    a = np.asarray(a)
+    if a.dtype == _BF16:
+        return a.view(np.uint16), "bfloat16"
+    return a, str(a.dtype)
+
+
+def _decode_array(a: np.ndarray, tag: str) -> jax.Array:
+    if tag == "bfloat16":
+        return jnp.asarray(a.view(_BF16))
+    return jnp.asarray(a)
+
+
+def _model_arrays(model: ASHModel) -> dict[str, Any]:
+    return {f"model.{f}": getattr(model, f) for f in _MODEL_FIELDS}
+
+
+def _model_from_arrays(
+    arrays: dict[str, jax.Array], config: ASHConfig
+) -> ASHModel:
+    return ASHModel(
+        config=config,
+        **{f: arrays[f"model.{f}"] for f in _MODEL_FIELDS},
+    )
+
+
+def _payload_arrays(payload: ASHPayload) -> dict[str, Any]:
+    return {f"payload.{f}": getattr(payload, f) for f in _PAYLOAD_FIELDS}
+
+
+def _payload_from_arrays(
+    arrays: dict[str, jax.Array], config: ASHConfig
+) -> ASHPayload:
+    return ASHPayload(
+        b=config.b,
+        d=config.d,
+        **{f: arrays[f"payload.{f}"] for f in _PAYLOAD_FIELDS},
+    )
+
+
+def _train_or_reuse(
+    key, X, config, *, model=None, learned=True, **train_kw
+) -> ASHModel:
+    if model is not None:
+        return model
+    if learned:
+        model, _ = A.train(key, X, config, **train_kw)
+        return model
+    return A.random_model(key, X.shape[1], config, X_for_landmarks=X)
+
+
+# ---------------------------------------------------------------------------
+# Backends
+# ---------------------------------------------------------------------------
+
+
+@register_backend
+class FlatBackend:
+    """Exhaustive scan over the whole payload."""
+
+    name = "flat"
+
+    @staticmethod
+    def build(key, X, config, *, metric, **opts):
+        return F._build(key, X, config, metric=metric, **opts)
+
+    @staticmethod
+    def from_parts(model, payload, *, metric, raw=None):
+        return F.FlatIndex(
+            metric=metric, model=model, payload=payload, raw=raw
+        )
+
+    @staticmethod
+    def search(state, queries, *, k, nprobe=None, rerank=0, **opts):
+        del nprobe  # no coarse routing in a flat scan
+        return F._search(state, queries, k=k, rerank=rerank, **opts)
+
+    @staticmethod
+    def add(state, X_new):
+        return F._add(state, X_new)
+
+    @staticmethod
+    def model_of(state):
+        return state.model
+
+    @staticmethod
+    def payload_of(state):
+        return state.payload
+
+    @staticmethod
+    def to_arrays(state):
+        arrays = {
+            **_model_arrays(state.model),
+            **_payload_arrays(state.payload),
+        }
+        if state.raw is not None:
+            arrays["raw"] = state.raw
+        return arrays, {}
+
+    @staticmethod
+    def from_arrays(arrays, meta, config, metric, **opts):
+        return F.FlatIndex(
+            metric=metric,
+            model=_model_from_arrays(arrays, config),
+            payload=_payload_from_arrays(arrays, config),
+            raw=arrays.get("raw"),
+        )
+
+
+@register_backend
+class IVFBackend:
+    """Inverted-file routing over the landmark coarse quantizer."""
+
+    name = "ivf"
+    default_nprobe = 8
+
+    @staticmethod
+    def build(key, X, config, *, metric, **opts):
+        return IV._build(key, X, config, metric=metric, **opts)
+
+    @staticmethod
+    def from_parts(model, payload, *, metric, raw=None):
+        ids = jnp.arange(payload.n, dtype=jnp.int32)
+        return IV._assemble(metric, model, payload, ids, raw)
+
+    @staticmethod
+    def search(state, queries, *, k, nprobe=None, rerank=0, **opts):
+        if nprobe is None:
+            nprobe = IVFBackend.default_nprobe
+        nprobe = min(nprobe, state.invlists.shape[0])
+        return IV._search(
+            state, queries, k=k, nprobe=nprobe, rerank=rerank, **opts
+        )
+
+    @staticmethod
+    def add(state, X_new):
+        return IV._add(state, X_new)
+
+    @staticmethod
+    def model_of(state):
+        return state.model
+
+    @staticmethod
+    def payload_of(state):
+        return state.payload
+
+    @staticmethod
+    def to_arrays(state):
+        arrays = {
+            **_model_arrays(state.model),
+            **_payload_arrays(state.payload),
+            "ids": state.ids,
+            "invlists": state.invlists,
+        }
+        if state.raw is not None:
+            arrays["raw"] = state.raw
+        return arrays, {"max_list_len": state.max_list_len}
+
+    @staticmethod
+    def from_arrays(arrays, meta, config, metric, **opts):
+        return IV.IVFIndex(
+            metric=metric,
+            max_list_len=int(meta["max_list_len"]),
+            model=_model_from_arrays(arrays, config),
+            payload=_payload_from_arrays(arrays, config),
+            ids=arrays["ids"],
+            invlists=arrays["invlists"],
+            raw=arrays.get("raw"),
+        )
+
+
+@dataclasses.dataclass
+class ShardedState:
+    """Host copy of the payload + its device-sharded placement.
+
+    The host copy (unpadded) is kept for add()/save(); the padded,
+    row-sharded copy is what searches scan.  Compiled searchers are
+    cached per k and invalidated when the placement changes.
+    """
+
+    metric: str
+    model: ASHModel
+    payload: ASHPayload  # unpadded, host-side source of truth
+    mesh: Any
+    axes: tuple[str, ...]
+    sharded: ASHPayload = dataclasses.field(init=False)
+    searchers: dict = dataclasses.field(init=False, default_factory=dict)
+
+    def __post_init__(self):
+        self.place()
+
+    def place(self):
+        mult = math.prod(self.mesh.shape[a] for a in self.axes)
+        padded = DX.pad_to_multiple(self.payload, mult)
+        self.sharded = DX.shard_payload(self.mesh, padded, self.axes)
+        self.searchers = {}
+
+    def searcher(self, k: int):
+        if k not in self.searchers:
+            self.searchers[k] = DX.make_sharded_search(
+                self.mesh, self.model, self.axes, k,
+                metric=self.metric, n_real=self.payload.n,
+            )
+        return self.searchers[k]
+
+
+def _default_mesh(axes: tuple[str, ...]):
+    from jax.sharding import Mesh
+
+    devs = np.array(jax.devices())
+    shape = (len(devs),) + (1,) * (len(axes) - 1)
+    return Mesh(devs.reshape(shape), axes)
+
+
+@register_backend
+class ShardedBackend:
+    """Scatter-gather search over a device mesh (wraps
+    ``distributed.make_sharded_search`` behind the common signature)."""
+
+    name = "sharded"
+
+    @staticmethod
+    def _resolve_mesh(mesh, axes):
+        axes = tuple(axes) if axes is not None else ("data",)
+        if mesh is None:
+            mesh = _default_mesh(axes)
+        return mesh, axes
+
+    @staticmethod
+    def build(key, X, config, *, metric, mesh=None, axes=None,
+              model=None, learned=True, **train_kw):
+        mesh, axes = ShardedBackend._resolve_mesh(mesh, axes)
+        model = _train_or_reuse(
+            key, X, config, model=model, learned=learned, **train_kw
+        )
+        return ShardedState(
+            metric=metric, model=model, payload=A.encode(model, X),
+            mesh=mesh, axes=axes,
+        )
+
+    @staticmethod
+    def from_parts(model, payload, *, metric, raw=None, mesh=None,
+                   axes=None):
+        del raw  # exact rerank needs local raw vectors: unsupported
+        mesh, axes = ShardedBackend._resolve_mesh(mesh, axes)
+        return ShardedState(
+            metric=metric, model=model, payload=payload,
+            mesh=mesh, axes=axes,
+        )
+
+    @staticmethod
+    def search(state, queries, *, k, nprobe=None, rerank=0):
+        del nprobe  # no coarse routing in the scatter-gather scan
+        if rerank:
+            raise ValueError(
+                "rerank is not supported by the sharded backend "
+                "(raw vectors are not distributed with the payload)"
+            )
+        return state.searcher(k)(state.sharded, queries)
+
+    @staticmethod
+    def add(state, X_new):
+        payload_new = A.encode(state.model, X_new)
+        state.payload = C.concat_payloads(state.payload, payload_new)
+        state.place()
+        return state
+
+    @staticmethod
+    def model_of(state):
+        return state.model
+
+    @staticmethod
+    def payload_of(state):
+        return state.payload
+
+    @staticmethod
+    def to_arrays(state):
+        arrays = {
+            **_model_arrays(state.model),
+            **_payload_arrays(state.payload),
+        }
+        return arrays, {"axes": list(state.axes)}
+
+    @staticmethod
+    def from_arrays(arrays, meta, config, metric, *, mesh=None,
+                    axes=None):
+        axes = tuple(axes or meta.get("axes") or ("data",))
+        mesh, axes = ShardedBackend._resolve_mesh(mesh, axes)
+        return ShardedState(
+            metric=metric,
+            model=_model_from_arrays(arrays, config),
+            payload=_payload_from_arrays(arrays, config),
+            mesh=mesh,
+            axes=axes,
+        )
+
+
+# ---------------------------------------------------------------------------
+# The facade
+# ---------------------------------------------------------------------------
+
+
+class AshIndex:
+    """One lifecycle — build / search / add / save / load — over every
+    backend.  See the module docstring for the canonical usage."""
+
+    def __init__(self, backend: str, metric: str, state):
+        self._backend = _get_backend(backend)
+        self._backend_name = backend
+        self._metric = C.validate_metric(metric)
+        self._state = state
+
+    # -- construction -------------------------------------------------
+
+    @classmethod
+    def build(
+        cls,
+        key: jax.Array,
+        X: jax.Array,
+        config: ASHConfig,
+        *,
+        backend: str = "flat",
+        metric: str = "dot",
+        **opts,
+    ) -> "AshIndex":
+        """Train (or reuse ``model=``), encode ``X`` and assemble the
+        backend structure.  Backend-specific ``opts``: ``keep_raw``,
+        ``learned``, ``model``, ``train_sample``, ``mesh``, ``axes``
+        and any ``repro.core.ash.train`` keyword."""
+        impl = _get_backend(backend)
+        C.validate_metric(metric)
+        state = impl.build(key, X, config, metric=metric, **opts)
+        return cls(backend, metric, state)
+
+    @classmethod
+    def from_parts(
+        cls,
+        model: ASHModel,
+        payload: ASHPayload,
+        *,
+        backend: str = "flat",
+        metric: str = "dot",
+        raw: Optional[jax.Array] = None,
+        **opts,
+    ) -> "AshIndex":
+        """Wrap an already-encoded (model, payload) pair."""
+        impl = _get_backend(backend)
+        C.validate_metric(metric)
+        state = impl.from_parts(
+            model, payload, metric=metric, raw=raw, **opts
+        )
+        return cls(backend, metric, state)
+
+    # -- lifecycle ----------------------------------------------------
+
+    def search(
+        self,
+        queries: jax.Array,
+        k: int = 10,
+        *,
+        nprobe: Optional[int] = None,
+        rerank: int = 0,
+        **opts,
+    ) -> tuple[jax.Array, jax.Array]:
+        """Top-k search: (scores, ids), each (m, k), higher-is-better
+        scores for every metric; id -1 marks a missing candidate."""
+        return self._backend.search(
+            self._state, queries, k=k, nprobe=nprobe, rerank=rerank,
+            **opts,
+        )
+
+    def add(self, X_new: jax.Array) -> "AshIndex":
+        """Encode new vectors under the existing model and ingest them
+        (ids continue from the current size).  Returns self."""
+        self._state = self._backend.add(self._state, X_new)
+        return self
+
+    # -- persistence --------------------------------------------------
+
+    def save(self, path) -> None:
+        """Write ``arrays.npz`` + ``config.json`` under ``path/``."""
+        p = pathlib.Path(path)
+        p.mkdir(parents=True, exist_ok=True)
+        arrays, backend_meta = self._backend.to_arrays(self._state)
+        encoded, dtypes = {}, {}
+        for name, a in arrays.items():
+            encoded[name], dtypes[name] = _encode_array(a)
+        np.savez(p / "arrays.npz", **encoded)
+        cfg = self.config
+        meta = {
+            "format_version": FORMAT_VERSION,
+            "backend": self._backend_name,
+            "metric": self._metric,
+            "config": {
+                "b": cfg.b,
+                "d": cfg.d,
+                "n_landmarks": cfg.n_landmarks,
+                "store_fp16": cfg.store_fp16,
+            },
+            "dtypes": dtypes,
+            "backend_meta": backend_meta,
+        }
+        (p / "config.json").write_text(json.dumps(meta, indent=2))
+
+    @classmethod
+    def load(cls, path, **opts) -> "AshIndex":
+        """Inverse of :meth:`save`; search results are bit-identical to
+        the saved index.  ``opts`` (e.g. ``mesh=``/``axes=`` for the
+        sharded backend) override the backend placement."""
+        p = pathlib.Path(path)
+        meta = json.loads((p / "config.json").read_text())
+        if meta["format_version"] != FORMAT_VERSION:
+            raise ValueError(
+                f"index format {meta['format_version']} != "
+                f"{FORMAT_VERSION}"
+            )
+        with np.load(p / "arrays.npz") as npz:
+            arrays = {
+                name: _decode_array(npz[name], meta["dtypes"][name])
+                for name in npz.files
+            }
+        config = ASHConfig(**meta["config"])
+        impl = _get_backend(meta["backend"])
+        state = impl.from_arrays(
+            arrays, meta["backend_meta"], config, meta["metric"], **opts
+        )
+        return cls(meta["backend"], meta["metric"], state)
+
+    # -- introspection ------------------------------------------------
+
+    @property
+    def backend(self) -> str:
+        return self._backend_name
+
+    @property
+    def metric(self) -> str:
+        return self._metric
+
+    @property
+    def model(self) -> ASHModel:
+        return self._backend.model_of(self._state)
+
+    @property
+    def payload(self) -> ASHPayload:
+        return self._backend.payload_of(self._state)
+
+    @property
+    def config(self) -> ASHConfig:
+        return self.model.config
+
+    @property
+    def n(self) -> int:
+        return self.payload.n
+
+    def __len__(self) -> int:
+        return self.n
+
+    def __repr__(self) -> str:
+        cfg = self.config
+        return (
+            f"AshIndex(backend={self._backend_name!r}, "
+            f"metric={self._metric!r}, n={self.n}, b={cfg.b}, "
+            f"d={cfg.d}, C={cfg.n_landmarks}, "
+            f"payload={cfg.payload_bits()} bits/vec)"
+        )

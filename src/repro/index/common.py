@@ -1,0 +1,186 @@
+"""Shared machinery for every index backend.
+
+One metric dispatcher and one exact-rerank pipeline, used by the flat,
+IVF and sharded backends (and the serving layer) instead of each
+re-implementing score selection and shortlist rerank by hand.
+
+Score convention: **higher is better** for every metric — L2 scores are
+negated squared distances.  Invalid candidates carry ``NEG_INF`` scores
+and are reported with id ``-1`` (FAISS convention) rather than being
+silently aliased to row 0.
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import scoring as S
+from repro.core.types import ASHModel, ASHPayload, QueryPrep
+
+NEG_INF = -jnp.inf
+METRICS = ("dot", "l2", "cos")
+_EPS = 1e-12
+
+
+def warn_deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"{old} is deprecated; use {new}", DeprecationWarning, stacklevel=3
+    )
+
+
+def validate_metric(metric: str) -> str:
+    if metric not in METRICS:
+        raise ValueError(
+            f"unknown metric {metric!r}; expected one of {METRICS}"
+        )
+    return metric
+
+
+# ---------------------------------------------------------------------------
+# Approximate (payload) scoring — the single metric dispatcher
+# ---------------------------------------------------------------------------
+
+
+def approx_scores(
+    model: ASHModel,
+    prep: QueryPrep,
+    payload: ASHPayload,
+    metric: str,
+    *,
+    use_pallas: Optional[bool] = False,
+) -> jax.Array:
+    """ASH scores of all payload rows, (m, n), higher-is-better.
+
+    use_pallas: ``False`` → the pure-jnp reference scorers; ``True`` /
+    ``None`` → route the dot path through the fused kernel (``None`` =
+    auto: Pallas on TPU, oracle on CPU).  Only ``metric="dot"`` has a
+    fused kernel; other metrics always use the reference path.
+    """
+    if metric == "dot":
+        if use_pallas is False:
+            return S.score_dot(model, prep, payload)
+        from repro.kernels import ops as K
+
+        return K.ash_score(model, prep, payload, use_pallas=use_pallas)
+    if metric == "l2":
+        return -S.score_l2(model, prep, payload)
+    if metric == "cos":
+        return S.score_cosine(model, prep, payload)
+    raise ValueError(metric)
+
+
+# ---------------------------------------------------------------------------
+# Exact scoring + the shared rerank pipeline
+# ---------------------------------------------------------------------------
+
+
+def exact_scores(
+    prep: QueryPrep, cand: jax.Array, metric: str
+) -> jax.Array:
+    """Metric-aware exact scores of raw candidates.
+
+    cand: (m, R, D) candidate vectors per query.  Returns (m, R),
+    higher-is-better (same convention as :func:`approx_scores`).
+    """
+    ip = jnp.einsum("md,mrd->mr", prep.q, cand)
+    if metric == "dot":
+        return ip
+    if metric == "l2":
+        return -(
+            prep.q_sq_norm[:, None]
+            - 2.0 * ip
+            + jnp.sum(cand * cand, axis=-1)
+        )
+    if metric == "cos":
+        q_norm = jnp.sqrt(jnp.maximum(prep.q_sq_norm, _EPS))[:, None]
+        c_norm = jnp.maximum(
+            jnp.sqrt(jnp.sum(cand * cand, axis=-1)), _EPS
+        )
+        return ip / (q_norm * c_norm)
+    raise ValueError(metric)
+
+
+def exact_rerank(
+    prep: QueryPrep,
+    raw: jax.Array,
+    shortlist_scores: jax.Array,
+    shortlist_rows: jax.Array,
+    metric: str,
+    k: int,
+    ids: Optional[jax.Array] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Re-rank a shortlist with exact scores on the raw vectors.
+
+    shortlist_scores/rows: (m, R) approximate scores and row indices
+    into ``raw``; invalid entries must carry ``NEG_INF`` scores (their
+    rows may be ``-1``).  ``ids`` optionally maps raw rows to returned
+    ids (IVF stores rows sorted by list).  Returns (scores, ids) each
+    (m, k); entries without a valid candidate get score ``NEG_INF`` and
+    id ``-1``.
+    """
+    cand = raw[jnp.maximum(shortlist_rows, 0)].astype(jnp.float32)
+    exact = exact_scores(prep, cand, metric)
+    exact = jnp.where(jnp.isneginf(shortlist_scores), NEG_INF, exact)
+    rs, ri = jax.lax.top_k(exact, k)
+    rows_k = jnp.take_along_axis(shortlist_rows, ri, axis=1)
+    out = rows_k if ids is None else ids[jnp.maximum(rows_k, 0)]
+    return rs, jnp.where(jnp.isneginf(rs), -1, out)
+
+
+def masked_topk(
+    scores: jax.Array, ids: jax.Array, k: int
+) -> tuple[jax.Array, jax.Array]:
+    """Top-k of (m, n) scores; ``NEG_INF`` entries come back as id -1."""
+    ts, ti = jax.lax.top_k(scores, k)
+    out = jnp.take_along_axis(ids, ti, axis=1)
+    return ts, jnp.where(jnp.isneginf(ts), -1, out)
+
+
+# ---------------------------------------------------------------------------
+# Payload manipulation shared by backends
+# ---------------------------------------------------------------------------
+
+
+def gather_payload(payload: ASHPayload, rows: jax.Array) -> ASHPayload:
+    """Gather payload rows (any leading batch shape); -1 rows read row 0
+    (callers mask them by score)."""
+    safe = jnp.maximum(rows, 0)
+    return ASHPayload(
+        b=payload.b,
+        d=payload.d,
+        codes=payload.codes[safe],
+        scale=payload.scale[safe],
+        offset=payload.offset[safe],
+        cluster=payload.cluster[safe],
+    )
+
+
+def concat_payloads(a: ASHPayload, b: ASHPayload) -> ASHPayload:
+    """Row-concatenate two payloads encoded under the same model."""
+    if (a.b, a.d) != (b.b, b.d):
+        raise ValueError(
+            f"payload mismatch: (b={a.b}, d={a.d}) vs (b={b.b}, d={b.d})"
+        )
+    return ASHPayload(
+        b=a.b,
+        d=a.d,
+        codes=jnp.concatenate([a.codes, b.codes], axis=0),
+        scale=jnp.concatenate([a.scale, b.scale], axis=0),
+        offset=jnp.concatenate([a.offset, b.offset], axis=0),
+        cluster=jnp.concatenate([a.cluster, b.cluster], axis=0),
+    )
+
+
+def permute_payload(payload: ASHPayload, perm: jax.Array) -> ASHPayload:
+    """Reorder payload rows by ``perm`` (a permutation of arange(n))."""
+    return ASHPayload(
+        b=payload.b,
+        d=payload.d,
+        codes=payload.codes[perm],
+        scale=payload.scale[perm],
+        offset=payload.offset[perm],
+        cluster=payload.cluster[perm],
+    )

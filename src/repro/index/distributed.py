@@ -13,14 +13,13 @@ launch/mesh.py.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import scoring as S
 from repro.core.types import ASHModel, ASHPayload
+from repro.index import common as C
 
 
 def shard_payload(
@@ -66,12 +65,26 @@ def make_sharded_search(
     model: ASHModel,
     axes: tuple[str, ...],
     k: int = 10,
+    *,
+    metric: str = "dot",
+    n_real: int | None = None,
 ):
     """Build a jitted (payload, queries) -> (scores, global_ids) searcher.
 
     ``axes``: mesh axes the database rows are sharded over (e.g.
     ("pod", "data", "model") shards over all 512 devices).
+
+    ``n_real``: rows beyond this global index are padding (from
+    :func:`pad_to_multiple`) and are masked to score ``-inf`` / id -1.
+    Required for ``metric != "dot"`` — the l2/cos estimators don't
+    respect the dot-only ``offset=-inf`` pad sentinel.
     """
+    C.validate_metric(metric)
+    if metric != "dot" and n_real is None:
+        raise ValueError(
+            "n_real is required for metric != 'dot': the l2/cos "
+            "estimators don't respect the pad sentinel"
+        )
     n_shards = 1
     for a in axes:
         n_shards *= mesh.shape[a]
@@ -79,8 +92,9 @@ def make_sharded_search(
     def local_then_merge(payload: ASHPayload, queries: jax.Array):
         # ---- local scan (per shard) ----
         prep = S.prepare_queries(model, queries)
-        local_scores = S.score_dot(model, prep, payload)  # (m, n_local)
-        ls, li = jax.lax.top_k(local_scores, k)  # (m, k)
+        local_scores = C.approx_scores(
+            model, prep, payload, metric
+        )  # (m, n_local)
         n_local = payload.codes.shape[0]
         # global row ids: shard linear index * n_local + local id
         shard_lin = jnp.int32(0)
@@ -88,19 +102,31 @@ def make_sharded_search(
         for a in reversed(axes):
             shard_lin = shard_lin + jax.lax.axis_index(a) * mul
             mul *= mesh.shape[a]
+        if n_real is not None:
+            gid = shard_lin * n_local + jnp.arange(n_local)
+            local_scores = jnp.where(
+                (gid < n_real)[None, :], local_scores, C.NEG_INF
+            )
+        ls, li = jax.lax.top_k(local_scores, k)  # (m, k)
         gi = li + shard_lin * n_local
         # ---- merge: gather k-per-shard along every sharded axis ----
         for a in axes:
             ls = jax.lax.all_gather(ls, a, axis=1, tiled=True)
             gi = jax.lax.all_gather(gi, a, axis=1, tiled=True)
         fs, fi = jax.lax.top_k(ls, k)
-        return fs, jnp.take_along_axis(gi, fi, axis=1)
+        gids = jnp.take_along_axis(gi, fi, axis=1)
+        return fs, jnp.where(jnp.isneginf(fs), -1, gids)
 
-    fn = jax.shard_map(
-        local_then_merge,
-        mesh=mesh,
-        in_specs=(P(axes), P()),  # pytree prefix: all payload leaves row-sharded
-        out_specs=(P(), P()),
-        check_vma=False,
-    )
+    # pytree prefix: all payload leaves row-sharded
+    specs = dict(in_specs=(P(axes), P()), out_specs=(P(), P()))
+    if hasattr(jax, "shard_map"):  # jax >= 0.6: top-level, check_vma
+        fn = jax.shard_map(
+            local_then_merge, mesh=mesh, check_vma=False, **specs
+        )
+    else:
+        from jax.experimental.shard_map import shard_map
+
+        fn = shard_map(
+            local_then_merge, mesh=mesh, check_rep=False, **specs
+        )
     return jax.jit(fn)

@@ -1,4 +1,10 @@
-"""Flat (exhaustive-scan) ASH index with optional exact re-ranking."""
+"""Flat (exhaustive-scan) ASH index with optional exact re-ranking.
+
+The module-level ``build``/``search`` functions are deprecation shims
+kept for one release; new code goes through ``repro.index.AshIndex``
+with ``backend="flat"``.  Metric dispatch and the rerank pipeline live
+in ``repro.index.common`` (shared with the IVF and sharded backends).
+"""
 from __future__ import annotations
 
 import functools
@@ -10,6 +16,7 @@ import jax.numpy as jnp
 from repro.core import ash as A
 from repro.core import scoring as S
 from repro.core.types import ASHConfig, ASHModel, ASHPayload, pytree_dataclass
+from repro.index import common as C
 
 
 @pytree_dataclass(meta_fields=("metric",))
@@ -22,7 +29,7 @@ class FlatIndex:
     raw: Optional[jax.Array]
 
 
-def build(
+def _build(
     key: jax.Array,
     X: jax.Array,
     config: ASHConfig,
@@ -30,42 +37,80 @@ def build(
     metric: str = "dot",
     learned: bool = True,
     keep_raw: bool = False,
+    model: Optional[ASHModel] = None,
     **train_kw,
 ) -> FlatIndex:
-    if learned:
-        model, _ = A.train(key, X, config, **train_kw)
-    else:
-        model = A.random_model(key, X.shape[1], config, X_for_landmarks=X)
+    C.validate_metric(metric)
+    if model is None:
+        if learned:
+            model, _ = A.train(key, X, config, **train_kw)
+        else:
+            model = A.random_model(
+                key, X.shape[1], config, X_for_landmarks=X
+            )
     payload = A.encode(model, X)
     raw = X.astype(jnp.bfloat16) if keep_raw else None
     return FlatIndex(metric=metric, model=model, payload=payload, raw=raw)
 
 
-def _scores(index: FlatIndex, prep) -> jax.Array:
-    if index.metric == "dot":
-        return S.score_dot(index.model, prep, index.payload)
-    if index.metric == "l2":
-        return -S.score_l2(index.model, prep, index.payload)
-    if index.metric == "cos":
-        return S.score_cosine(index.model, prep, index.payload)
-    raise ValueError(index.metric)
-
-
-@functools.partial(jax.jit, static_argnames=("k", "rerank"))
-def search(
-    index: FlatIndex, queries: jax.Array, k: int = 10, rerank: int = 0
+@functools.partial(
+    jax.jit, static_argnames=("k", "rerank", "use_pallas")
+)
+def _search(
+    index: FlatIndex,
+    queries: jax.Array,
+    k: int = 10,
+    rerank: int = 0,
+    use_pallas: Optional[bool] = False,
 ) -> tuple[jax.Array, jax.Array]:
     """Top-k search. Returns (scores, indices), each (m, k).
 
     rerank > 0: retrieve a shortlist of that size by ASH scores and
-    re-rank it with exact (bf16) dot products (requires raw vectors).
+    re-rank it with exact (bf16) metric-aware scores (requires raw
+    vectors).
     """
     prep = S.prepare_queries(index.model, queries)
-    approx = _scores(index, prep)
+    approx = C.approx_scores(
+        index.model, prep, index.payload, index.metric,
+        use_pallas=use_pallas,
+    )
     if rerank and index.raw is not None:
-        short_s, short_i = jax.lax.top_k(approx, max(rerank, k))
-        cand = index.raw[short_i].astype(jnp.float32)  # (m, R, D)
-        exact = jnp.einsum("md,mrd->mr", prep.q, cand)
-        rs, ri = jax.lax.top_k(exact, k)
-        return rs, jnp.take_along_axis(short_i, ri, axis=1)
+        R = min(max(rerank, k), approx.shape[-1])
+        short_s, short_i = jax.lax.top_k(approx, R)
+        return C.exact_rerank(
+            prep, index.raw, short_s, short_i, index.metric, k
+        )
     return jax.lax.top_k(approx, k)
+
+
+def _add(index: FlatIndex, X_new: jax.Array) -> FlatIndex:
+    """Encode new rows under the existing model and append them."""
+    payload_new = A.encode(index.model, X_new)
+    raw = index.raw
+    if raw is not None:
+        raw = jnp.concatenate(
+            [raw, X_new.astype(jnp.bfloat16)], axis=0
+        )
+    return FlatIndex(
+        metric=index.metric,
+        model=index.model,
+        payload=C.concat_payloads(index.payload, payload_new),
+        raw=raw,
+    )
+
+
+def build(key, X, config, **kw) -> FlatIndex:
+    """Deprecated: use ``AshIndex.build(..., backend="flat")``."""
+    C.warn_deprecated(
+        "repro.index.flat.build",
+        'repro.index.AshIndex.build(..., backend="flat")',
+    )
+    return _build(key, X, config, **kw)
+
+
+def search(index, queries, k: int = 10, rerank: int = 0):
+    """Deprecated: use ``AshIndex.search``."""
+    C.warn_deprecated(
+        "repro.index.flat.search", "repro.index.AshIndex.search"
+    )
+    return _search(index, queries, k=k, rerank=rerank)

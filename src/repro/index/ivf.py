@@ -7,6 +7,12 @@ structure, so OFFSET/SCALE come for free per list.
 JAX needs static shapes, so inverted lists are stored padded to the
 longest list; search gathers ``nprobe`` padded lists per query, scores
 them with the asymmetric estimator, masks padding, and top-k's.
+Queries with fewer than k valid candidates pad results with score
+``-inf`` / id ``-1`` (never aliased to row 0).
+
+The module-level ``build``/``search`` functions are deprecation shims
+kept for one release; new code goes through ``repro.index.AshIndex``
+with ``backend="ivf"``.
 """
 from __future__ import annotations
 
@@ -19,8 +25,9 @@ import jax.numpy as jnp
 from repro.core import ash as A
 from repro.core import scoring as S
 from repro.core.types import ASHConfig, ASHModel, ASHPayload, pytree_dataclass
+from repro.index import common as C
 
-NEG_INF = -jnp.inf
+NEG_INF = C.NEG_INF
 
 
 @pytree_dataclass(meta_fields=("metric", "max_list_len"))
@@ -34,27 +41,26 @@ class IVFIndex:
     raw: Optional[jax.Array]  # optional bf16 vectors (sorted) for rerank
 
 
-def build(
-    key: jax.Array,
-    X: jax.Array,
-    config: ASHConfig,
-    *,
-    metric: str = "dot",
-    keep_raw: bool = False,
-    train_sample: Optional[int] = None,
-    **train_kw,
+def _assemble(
+    metric: str,
+    model: ASHModel,
+    payload: ASHPayload,
+    ids: jax.Array,
+    raw: Optional[jax.Array],
 ) -> IVFIndex:
-    """nlist = config.n_landmarks."""
-    model, _ = A.train(key, X, config, train_sample=train_sample, **train_kw)
-    payload = A.encode(model, X)
+    """Sort rows by cluster and build the padded inverted lists.
+
+    payload/ids/raw are row-aligned in any order; ``ids`` holds the
+    original (user-facing) id of each row.  Used by both build and
+    incremental add — a stable sort keeps add() results identical to a
+    from-scratch assembly over the concatenated rows.
+    """
     import numpy as np
 
     cluster = np.asarray(payload.cluster)
-    n = cluster.shape[0]
     nlist = model.landmarks.shape[0]
     order = np.argsort(cluster, kind="stable")
-    sorted_cluster = cluster[order]
-    counts = np.bincount(sorted_cluster, minlength=nlist)
+    counts = np.bincount(cluster[order], minlength=nlist)
     max_len = int(counts.max())
     invlists = np.full((nlist, max_len), -1, dtype=np.int32)
     starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
@@ -64,39 +70,65 @@ def build(
         )
 
     perm = jnp.asarray(order)
-    payload_sorted = jax.tree_util.tree_map(
-        lambda a: a[perm] if hasattr(a, "shape") and a.ndim >= 1
-        and a.shape[0] == n else a,
-        payload,
-    )
-    raw = X.astype(jnp.bfloat16)[perm] if keep_raw else None
     return IVFIndex(
         metric=metric,
         max_list_len=max_len,
         model=model,
-        payload=payload_sorted,
-        ids=perm.astype(jnp.int32),
+        payload=C.permute_payload(payload, perm),
+        ids=jnp.asarray(ids)[perm].astype(jnp.int32),
         invlists=jnp.asarray(invlists),
-        raw=raw,
+        raw=None if raw is None else raw[perm],
     )
 
 
-def _gather_payload(payload: ASHPayload, rows: jax.Array) -> ASHPayload:
-    """Gather payload rows (any leading batch shape); -1 rows read row 0
-    (masked later)."""
-    safe = jnp.maximum(rows, 0)
-    return ASHPayload(
-        b=payload.b,
-        d=payload.d,
-        codes=payload.codes[safe],
-        scale=payload.scale[safe],
-        offset=payload.offset[safe],
-        cluster=payload.cluster[safe],
+def _build(
+    key: jax.Array,
+    X: jax.Array,
+    config: ASHConfig,
+    *,
+    metric: str = "dot",
+    keep_raw: bool = False,
+    model: Optional[ASHModel] = None,
+    train_sample: Optional[int] = None,
+    **train_kw,
+) -> IVFIndex:
+    """nlist = config.n_landmarks."""
+    C.validate_metric(metric)
+    if model is None:
+        model, _ = A.train(
+            key, X, config, train_sample=train_sample, **train_kw
+        )
+    payload = A.encode(model, X)
+    raw = X.astype(jnp.bfloat16) if keep_raw else None
+    ids = jnp.arange(payload.n, dtype=jnp.int32)
+    return _assemble(metric, model, payload, ids, raw)
+
+
+def _add(index: IVFIndex, X_new: jax.Array) -> IVFIndex:
+    """Encode new rows under the existing model and merge them into the
+    inverted lists.  New rows get ids ``n, ..., n + n_new - 1``."""
+    payload_new = A.encode(index.model, X_new)
+    n_old = index.ids.shape[0]
+    ids = jnp.concatenate(
+        [index.ids,
+         n_old + jnp.arange(payload_new.n, dtype=jnp.int32)]
+    )
+    raw = index.raw
+    if raw is not None:
+        raw = jnp.concatenate(
+            [raw, X_new.astype(jnp.bfloat16)], axis=0
+        )
+    return _assemble(
+        index.metric,
+        index.model,
+        C.concat_payloads(index.payload, payload_new),
+        ids,
+        raw,
     )
 
 
 @functools.partial(jax.jit, static_argnames=("k", "nprobe", "rerank"))
-def search(
+def _search(
     index: IVFIndex,
     queries: jax.Array,
     k: int = 10,
@@ -116,29 +148,39 @@ def search(
     valid = cand_rows >= 0
 
     def score_one(prep_q, rows_q, valid_q):
-        sub = _gather_payload(index.payload, rows_q)
+        sub = C.gather_payload(index.payload, rows_q)
         one = jax.tree_util.tree_map(
             lambda a: a[None] if hasattr(a, "ndim") else a, prep_q
         )
-        if index.metric == "dot":
-            sc = S.score_dot(index.model, one, sub)[0]
-        elif index.metric == "l2":
-            sc = -S.score_l2(index.model, one, sub)[0]
-        else:
-            sc = S.score_cosine(index.model, one, sub)[0]
+        sc = C.approx_scores(index.model, one, sub, index.metric)[0]
         return jnp.where(valid_q, sc, NEG_INF)
 
     scores = jax.vmap(score_one)(prep, cand_rows, valid)  # (m, nprobe*L)
     if rerank and index.raw is not None:
-        R = max(rerank, k)
+        R = min(max(rerank, k), cand_rows.shape[1])
         ss, si = jax.lax.top_k(scores, R)
         rows = jnp.take_along_axis(cand_rows, si, axis=1)
-        cand = index.raw[jnp.maximum(rows, 0)].astype(jnp.float32)
-        exact = jnp.einsum("md,mrd->mr", prep.q, cand)
-        exact = jnp.where(ss > NEG_INF, exact, NEG_INF)
-        rs, ri = jax.lax.top_k(exact, k)
-        rows_k = jnp.take_along_axis(rows, ri, axis=1)
-        return rs, index.ids[jnp.maximum(rows_k, 0)]
-    ts, ti = jax.lax.top_k(scores, k)
-    rows_k = jnp.take_along_axis(cand_rows, ti, axis=1)
-    return ts, index.ids[jnp.maximum(rows_k, 0)]
+        return C.exact_rerank(
+            prep, index.raw, ss, rows, index.metric, k, ids=index.ids
+        )
+    return C.masked_topk(
+        scores, index.ids[jnp.maximum(cand_rows, 0)], k
+    )
+
+
+def build(key, X, config, **kw) -> IVFIndex:
+    """Deprecated: use ``AshIndex.build(..., backend="ivf")``."""
+    C.warn_deprecated(
+        "repro.index.ivf.build",
+        'repro.index.AshIndex.build(..., backend="ivf")',
+    )
+    return _build(key, X, config, **kw)
+
+
+def search(index, queries, k: int = 10, nprobe: int = 8,
+           rerank: int = 0):
+    """Deprecated: use ``AshIndex.search``."""
+    C.warn_deprecated(
+        "repro.index.ivf.search", "repro.index.AshIndex.search"
+    )
+    return _search(index, queries, k=k, nprobe=nprobe, rerank=rerank)

@@ -20,8 +20,7 @@ import jax.numpy as jnp
 
 from repro.core import ASHConfig
 from repro.data.synthetic import embedding_dataset, isotropy_diagnostics
-from repro.index import flat as FLAT
-from repro.index import ivf as IVF
+from repro.index import AshIndex
 from repro.index import metrics as MET
 
 
@@ -35,9 +34,14 @@ def main(argv=None):
     p.add_argument("--reduce", type=int, default=2,
                    help="dimensionality reduction factor (d = D / r)")
     p.add_argument("--landmarks", type=int, default=64)
-    p.add_argument("--engine", choices=("flat", "ivf"), default="flat")
+    p.add_argument("--engine", choices=("flat", "ivf", "sharded"),
+                   default="flat")
+    p.add_argument("--metric", choices=("dot", "l2", "cos"),
+                   default="dot")
     p.add_argument("--nprobe", type=int, default=8)
     p.add_argument("--rerank", type=int, default=0)
+    p.add_argument("--save-dir", default=None,
+                   help="persist the built index (npz + JSON) here")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
@@ -56,20 +60,23 @@ def main(argv=None):
           f"({32 * args.dim / cfg.payload_bits():.1f}x compression)")
 
     t0 = time.time()
-    if args.engine == "flat":
-        index = FLAT.build(kb, X, cfg, keep_raw=args.rerank > 0)
-    else:
-        index = IVF.build(kb, X, cfg, keep_raw=args.rerank > 0)
-    print(f"[build] {time.time() - t0:.2f}s")
+    opts = {}
+    if args.engine != "sharded":
+        opts["keep_raw"] = args.rerank > 0
+    index = AshIndex.build(
+        kb, X, cfg, backend=args.engine, metric=args.metric, **opts
+    )
+    print(f"[build] {time.time() - t0:.2f}s  {index!r}")
+    if args.save_dir:
+        index.save(args.save_dir)
+        print(f"[save] {args.save_dir}")
 
-    gt_s, gt_i = MET.exact_topk(Q, X, k=10)
+    gt_s, gt_i = MET.exact_topk(Q, X, k=10, metric=args.metric)
 
     # warmup + timed batched serving
     def run(queries):
-        if args.engine == "flat":
-            return FLAT.search(index, queries, k=100, rerank=args.rerank)
-        return IVF.search(index, queries, k=100, nprobe=args.nprobe,
-                          rerank=args.rerank)
+        return index.search(queries, k=100, nprobe=args.nprobe,
+                            rerank=args.rerank)
 
     _ = jax.block_until_ready(run(Q[: args.batch]))
     t0 = time.time()

@@ -6,22 +6,24 @@ offline; per request the user-state vector scores all candidates through
 the fused asymmetric kernel (Pallas on TPU, oracle on CPU), followed by
 top-k.  Payload is 32D/(bd)x smaller than the fp32 table, and the
 scoring matmul reads packed codes only.
+
+This module is now a thin layer over ``repro.index.AshIndex``:
+:func:`build_index` returns an ``AshIndex`` (flat backend, fused dot
+kernel at search time); ``build_candidate_index``/:func:`retrieve` are
+deprecation shims over the same path kept for one release.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import ASHConfig, ASHModel, ASHPayload
-from repro.core import ash as A
-from repro.core import scoring as S
-from repro.kernels import ops as K
+from repro.index import AshIndex
+from repro.index import common as C
 
 
-def build_candidate_index(
+def build_index(
     key: jax.Array,
     embeddings: jax.Array,  # (n_items, e)
     *,
@@ -29,41 +31,87 @@ def build_candidate_index(
     reduce: int = 1,
     n_landmarks: int = 16,
     learned: bool = True,
-) -> tuple[ASHModel, ASHPayload]:
+    backend: str = "flat",
+    metric: str = "dot",
+) -> AshIndex:
+    """Compress a candidate catalog into a searchable ``AshIndex``."""
     e = embeddings.shape[1]
     cfg = ASHConfig(b=bits, d=e // reduce, n_landmarks=n_landmarks)
-    if learned:
-        model, _ = A.train(key, embeddings, cfg)
-    else:
-        model = A.random_model(key, e, cfg, X_for_landmarks=embeddings)
-    return model, A.encode(model, embeddings)
+    return AshIndex.build(
+        key, embeddings, cfg, backend=backend, metric=metric,
+        learned=learned,
+    )
 
 
-@functools.partial(jax.jit, static_argnames=("k", "use_pallas"))
+def serve_topk(
+    index: AshIndex,
+    user_vecs: jax.Array,  # (B, e)
+    k: int = 10,
+    use_pallas: Optional[bool] = None,  # auto: kernel on TPU, oracle on CPU
+) -> tuple[jax.Array, jax.Array]:
+    """Top-k ASH MIPS through the fused scoring kernel."""
+    return index.search(user_vecs, k=k, use_pallas=use_pallas)
+
+
+def sasrec_retrieve(params: dict, seq: jax.Array, index, *args, k=10):
+    """End-to-end SASRec next-item retrieval over the compressed
+    catalog.
+
+    New call shape: ``sasrec_retrieve(params, seq, index, cfg, k=...)``
+    with an ``AshIndex``.  The legacy
+    ``sasrec_retrieve(params, seq, model, payload, cfg, k=...)`` shape
+    still works for one release.
+    """
+    from repro.models import sasrec as SR
+
+    if isinstance(index, AshIndex):
+        (cfg,) = args
+    else:  # legacy (model, payload, cfg)
+        payload, cfg = args
+        index = AshIndex.from_parts(index, payload)
+    u = SR.user_state(params, seq, cfg)
+    return serve_topk(index, u, k=k)
+
+
+# ---------------------------------------------------------------------------
+# Deprecated shims (one release)
+# ---------------------------------------------------------------------------
+
+
+def build_candidate_index(
+    key: jax.Array,
+    embeddings: jax.Array,
+    *,
+    bits: int = 4,
+    reduce: int = 1,
+    n_landmarks: int = 16,
+    learned: bool = True,
+) -> tuple[ASHModel, ASHPayload]:
+    """Deprecated: use :func:`build_index` (returns an ``AshIndex``)."""
+    C.warn_deprecated(
+        "repro.serving.retrieval.build_candidate_index",
+        "repro.serving.retrieval.build_index",
+    )
+    index = build_index(
+        key, embeddings, bits=bits, reduce=reduce,
+        n_landmarks=n_landmarks, learned=learned,
+    )
+    return index.model, index.payload
+
+
 def retrieve(
     model: ASHModel,
     payload: ASHPayload,
-    user_vecs: jax.Array,  # (B, e)
+    user_vecs: jax.Array,
     k: int = 10,
-    use_pallas: bool | None = None,  # auto: kernel on TPU, oracle on CPU
+    use_pallas: Optional[bool] = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Top-k ASH MIPS: returns (scores, item ids), each (B, k)."""
-    prep = S.prepare_queries(model, user_vecs)
-    scores = K.ash_score(model, prep, payload, use_pallas=use_pallas)
-    return jax.lax.top_k(scores, k)
-
-
-def sasrec_retrieve(
-    params: dict,
-    seq: jax.Array,
-    model: ASHModel,
-    payload: ASHPayload,
-    cfg,
-    k: int = 10,
-):
-    """End-to-end SASRec next-item retrieval over the compressed
-    catalog."""
-    from repro.models import sasrec as SR
-
-    u = SR.user_state(params, seq, cfg)
-    return retrieve(model, payload, u, k=k)
+    """Deprecated: use ``AshIndex.search(..., use_pallas=...)``."""
+    C.warn_deprecated(
+        "repro.serving.retrieval.retrieve",
+        "repro.index.AshIndex.search",
+    )
+    return serve_topk(
+        AshIndex.from_parts(model, payload), user_vecs, k=k,
+        use_pallas=use_pallas,
+    )

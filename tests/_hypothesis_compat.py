@@ -1,0 +1,96 @@
+"""Use hypothesis when installed; otherwise fall back to a tiny
+deterministic sampler so the suite runs in minimal environments.
+
+The fallback implements just the strategy surface this suite uses
+(``sampled_from``, ``integers``, ``floats``) and a ``given`` decorator
+that replays a fixed number of seeded examples.  Property coverage is
+thinner than real hypothesis but the tests stay executable and
+deterministic.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - prefer the real library when available
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # minimal stand-in
+    import functools
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _N_EXAMPLES = 25
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def sample(self, rng: random.Random):
+            return self._sample(rng)
+
+    class strategies:  # noqa: N801 - mirrors `hypothesis.strategies`
+        @staticmethod
+        def sampled_from(options):
+            options = list(options)
+            return _Strategy(lambda rng: rng.choice(options))
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: rng.uniform(min_value, max_value)
+            )
+
+    def given(**strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def run(*args, **kw):
+                rng = random.Random(0xA54)
+                for _ in range(_N_EXAMPLES):
+                    drawn = {k: s.sample(rng) for k, s in strats.items()}
+                    fn(*args, **kw, **drawn)
+
+            # Hide the strategy-drawn params from pytest's fixture
+            # resolution (real hypothesis does the same); remaining
+            # params (e.g. pytest fixtures) stay visible.
+            sig = inspect.signature(fn)
+            run.__signature__ = sig.replace(
+                parameters=[
+                    p for name, p in sig.parameters.items()
+                    if name not in strats
+                ]
+            )
+            return run
+
+        return deco
+
+    class HealthCheck:
+        too_slow = "too_slow"
+        data_too_large = "data_too_large"
+
+    class _Settings:
+        """No-op `settings` shim (profiles only matter to hypothesis)."""
+
+        def __init__(self, *a, **kw):
+            pass
+
+        @staticmethod
+        def register_profile(name, *a, **kw):
+            pass
+
+        @staticmethod
+        def load_profile(name):
+            pass
+
+    settings = _Settings
+
+st = strategies
+
+__all__ = [
+    "HAVE_HYPOTHESIS", "HealthCheck", "given", "settings",
+    "strategies", "st",
+]

@@ -6,7 +6,8 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import jax
 import pytest
-from hypothesis import settings, HealthCheck
+
+from _hypothesis_compat import HealthCheck, settings
 
 settings.register_profile(
     "ci",

@@ -1,0 +1,215 @@
+"""Unified AshIndex API: backend parity, persistence, incremental add,
+rerank metric-awareness, and invalid-id masking."""
+import jax
+import jax.numpy as jnp
+import numpy as onp
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import ASHConfig
+from repro.data.synthetic import embedding_dataset
+from repro.index import AshIndex, available_backends, flat, metrics
+from repro.index import distributed as DX
+
+METRICS = ("dot", "l2", "cos")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(77)
+    kx, kq, kb = jax.random.split(key, 3)
+    X = embedding_dataset(kx, 3000, 32)
+    Qm = embedding_dataset(kq, 12, 32)
+    cfg = ASHConfig(b=2, d=16, n_landmarks=16)
+    # Train once; every test reuses the model so index assembly is the
+    # only variable under test (and stays fast).
+    model = AshIndex.build(kb, X, cfg, backend="flat").model
+    return X, Qm, cfg, model, kb
+
+
+def _build(setup, backend, metric, **opts):
+    X, Qm, cfg, model, kb = setup
+    return AshIndex.build(
+        kb, X, cfg, backend=backend, metric=metric, model=model, **opts
+    )
+
+
+def test_available_backends():
+    assert {"flat", "ivf", "sharded"} <= set(available_backends())
+
+
+def test_unknown_backend_and_metric_raise(setup):
+    X, Qm, cfg, model, kb = setup
+    with pytest.raises(ValueError, match="unknown backend"):
+        AshIndex.build(kb, X, cfg, backend="hnsw")
+    with pytest.raises(ValueError, match="unknown metric"):
+        AshIndex.build(kb, X, cfg, metric="hamming")
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_backend_parity_full_probe(setup, metric):
+    """flat, ivf(nprobe=nlist) and sharded agree on top-k for every
+    metric — same candidates scored by the same shared dispatcher."""
+    X, Qm, cfg, model, kb = setup
+    fi = _build(setup, "flat", metric)
+    ii = _build(setup, "ivf", metric)
+    si = _build(setup, "sharded", metric)
+    fs, fids = fi.search(Qm, k=20)
+    is_, iids = ii.search(Qm, k=20, nprobe=cfg.n_landmarks)
+    ss, sids = si.search(Qm, k=20)
+    assert jnp.array_equal(jnp.sort(fids, 1), jnp.sort(iids, 1))
+    assert jnp.array_equal(jnp.sort(fids, 1), jnp.sort(sids, 1))
+    assert jnp.allclose(jnp.sort(fs, 1), jnp.sort(is_, 1), atol=1e-4)
+
+
+@pytest.mark.parametrize("backend", ("flat", "ivf", "sharded"))
+def test_save_load_bit_identical(setup, backend, tmp_path):
+    X, Qm, cfg, model, kb = setup
+    opts = {} if backend == "sharded" else {"keep_raw": True}
+    idx = _build(setup, backend, "l2", **opts)
+    idx.save(tmp_path / backend)
+    idx2 = AshIndex.load(tmp_path / backend)
+    s1, i1 = idx.search(Qm, k=10)
+    s2, i2 = idx2.search(Qm, k=10)
+    assert jnp.array_equal(s1, s2)
+    assert jnp.array_equal(i1, i2)
+    assert idx2.backend == backend and idx2.metric == "l2"
+    assert idx2.config.payload_bits() == cfg.payload_bits()
+    if backend != "sharded":  # rerank path survives the round trip too
+        r1 = idx.search(Qm, k=5, rerank=50)
+        r2 = idx2.search(Qm, k=5, rerank=50)
+        assert jnp.array_equal(r1[1], r2[1])
+
+
+@pytest.mark.parametrize("backend", ("flat", "ivf", "sharded"))
+def test_add_matches_scratch_rebuild(setup, backend):
+    """build(X1) + add(X2) must search identically to a from-scratch
+    assembly over X1+X2 under the same model."""
+    X, Qm, cfg, model, kb = setup
+    n1 = 2000
+    a = _build(setup, backend, "dot")
+    # rebuild `a` on the prefix only, then ingest the rest
+    opts = dict(metric="dot", model=model)
+    a = AshIndex.build(kb, X[:n1], cfg, backend=backend, **opts)
+    a.add(X[n1:])
+    b = AshIndex.build(kb, X, cfg, backend=backend, **opts)
+    s1, i1 = a.search(Qm, k=10)
+    s2, i2 = b.search(Qm, k=10)
+    assert a.n == X.shape[0]
+    assert jnp.array_equal(i1, i2)
+    assert jnp.array_equal(s1, s2)
+
+
+def test_ivf_short_probe_list_pads_with_minus_one():
+    """A probed list shorter than k/rerank must pad results with id -1,
+    never duplicate row 0 (regression for the padded-id bug)."""
+    rng = onp.random.RandomState(0)
+    base = rng.randn(60, 8).astype(onp.float32)
+    tiny = rng.randn(3, 8).astype(onp.float32) * 0.1 + 50.0
+    X = jnp.asarray(onp.concatenate([base, tiny]))
+    cfg = ASHConfig(b=2, d=8, n_landmarks=4)
+    idx = AshIndex.build(
+        jax.random.PRNGKey(0), X, cfg, backend="ivf", keep_raw=True
+    )
+    q = jnp.full((1, 8), 50.0)
+    for rerank in (0, 32):
+        s, ids = idx.search(q, k=10, nprobe=1, rerank=rerank)
+        ids_np = onp.asarray(ids[0])
+        valid = ids_np[ids_np >= 0]
+        # the far-off tiny cluster is its own list: exactly 3 valid hits
+        assert set(valid.tolist()) == {60, 61, 62}, (rerank, ids_np)
+        assert len(valid) == len(set(valid.tolist()))
+        assert (ids_np[len(valid):] == -1).all()
+        assert onp.isneginf(onp.asarray(s[0])[len(valid):]).all()
+
+
+@pytest.mark.parametrize("backend", ("flat", "ivf"))
+def test_rerank_is_metric_aware(backend):
+    """Exact rerank must honor the index metric: under l2/cos the
+    nearest vector wins even when a scaled copy has a larger dot."""
+    rng = onp.random.RandomState(1)
+    D = 8
+    e1 = onp.zeros(D, onp.float32)
+    e1[0] = 1.0
+    e2 = onp.zeros(D, onp.float32)
+    e2[1] = 1.0
+    noise = rng.randn(61, D).astype(onp.float32) * 0.1
+    # id 0: dot winner (scaled copy, off-axis); id 1: the query itself
+    X = jnp.asarray(onp.stack([8.0 * e1 + 0.5 * e2, e1] + list(noise)))
+    q = jnp.asarray(e1)[None, :]
+    cfg = ASHConfig(b=4, d=D, n_landmarks=2)
+    expected = {"dot": 0, "l2": 1, "cos": 1}
+    for metric, want in expected.items():
+        idx = AshIndex.build(
+            jax.random.PRNGKey(0), X, cfg, backend=backend,
+            metric=metric, keep_raw=True,
+        )
+        nprobe = cfg.n_landmarks if backend == "ivf" else None
+        _, ids = idx.search(q, k=1, rerank=X.shape[0], nprobe=nprobe)
+        assert int(ids[0, 0]) == want, (backend, metric, ids)
+
+
+def test_sharded_pad_masking_l2(setup):
+    """Padded rows must be masked via n_real for non-dot metrics (the
+    offset=-inf sentinel only silences the dot estimator)."""
+    X, Qm, cfg, model, kb = setup
+    fi = _build(setup, "flat", "l2")
+    mesh = Mesh(onp.array(jax.devices())[:1], ("data",))
+    padded = DX.pad_to_multiple(fi.payload, 64)
+    assert padded.n > fi.payload.n
+    fn = DX.make_sharded_search(
+        mesh, model, ("data",), k=10, metric="l2", n_real=fi.payload.n
+    )
+    s, ids = fn(DX.shard_payload(mesh, padded, ("data",)), Qm)
+    _, fids = fi.search(Qm, k=10)
+    assert jnp.array_equal(jnp.sort(ids, 1), jnp.sort(fids, 1))
+    assert bool(jnp.all(jnp.isfinite(s)))
+
+
+def test_flat_rerank_larger_than_index():
+    """rerank > n must clamp the shortlist, not crash top_k."""
+    X = embedding_dataset(jax.random.PRNGKey(3), 40, 16)
+    idx = AshIndex.build(
+        jax.random.PRNGKey(0), X, ASHConfig(b=2, d=8, n_landmarks=2),
+        keep_raw=True,
+    )
+    s, ids = idx.search(X[:2], k=5, rerank=100)
+    assert ids.shape == (2, 5)
+    assert bool(jnp.all(ids >= 0))
+
+
+def test_sharded_requires_n_real_for_l2(setup):
+    X, Qm, cfg, model, kb = setup
+    mesh = Mesh(onp.array(jax.devices())[:1], ("data",))
+    with pytest.raises(ValueError, match="n_real"):
+        DX.make_sharded_search(mesh, model, ("data",), k=5, metric="l2")
+
+
+def test_sharded_rejects_rerank(setup):
+    si = _build(setup, "sharded", "dot")
+    X, Qm, cfg, model, kb = setup
+    with pytest.raises(ValueError, match="rerank"):
+        si.search(Qm, k=5, rerank=20)
+
+
+def test_deprecated_shims_still_work(setup):
+    X, Qm, cfg, model, kb = setup
+    with pytest.warns(DeprecationWarning):
+        legacy = flat.build(kb, X, cfg, model=model)
+    with pytest.warns(DeprecationWarning):
+        ls, lids = flat.search(legacy, Qm, k=10)
+    s, ids = _build(setup, "flat", "dot").search(Qm, k=10)
+    assert jnp.array_equal(lids, ids)
+
+
+def test_search_recall_sanity(setup):
+    """The facade path preserves retrieval quality end to end."""
+    X, Qm, cfg, model, kb = setup
+    gt = metrics.exact_topk(Qm, X, k=10)[1]
+    idx = _build(setup, "ivf", "dot", keep_raw=True)
+    _, ids_few = idx.search(Qm, k=100, nprobe=4)
+    _, ids = idx.search(Qm, k=100, nprobe=cfg.n_landmarks)
+    r_few = float(metrics.recall_at(ids_few, gt))
+    r_full = float(metrics.recall_at(ids, gt))
+    assert r_full >= r_few  # more probes never hurt
+    assert r_full > 0.85, r_full

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 import scipy.spatial.transform as sst
-from hypothesis import given, strategies as st
+from _hypothesis_compat import given, st
 
 from repro.models import nequip as NQ
 

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from _hypothesis_compat import given, st
 
 from repro.data.synthetic import IteratorState, TokenStream
 from repro.models.transformer import TransformerConfig, init_params, loss_fn
