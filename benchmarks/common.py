@@ -1,7 +1,13 @@
-"""Shared benchmark fixtures: dataset, ground truth, timing, CSV rows."""
+"""Shared benchmark fixtures: dataset, ground truth, timing, CSV rows.
+
+``ASH_BENCH_QUICK=1`` (set by ``benchmarks.run --quick``) shrinks the
+problem size so the whole suite runs in CI-smoke time; emitted JSON is
+tagged with the mode so trajectories aren't compared across sizes.
+"""
 from __future__ import annotations
 
 import functools
+import os
 import time
 
 import jax
@@ -10,9 +16,10 @@ import jax.numpy as jnp
 from repro.data.synthetic import embedding_dataset
 from repro.index import metrics as MET
 
-D = 96
-N = 20_000
-NQ = 200
+QUICK = os.environ.get("ASH_BENCH_QUICK", "") not in ("", "0")
+D = 48 if QUICK else 96
+N = 4_000 if QUICK else 20_000
+NQ = 64 if QUICK else 200
 
 
 @functools.lru_cache(maxsize=None)

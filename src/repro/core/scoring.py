@@ -63,16 +63,29 @@ def recovered_terms(model: ASHModel, payload: ASHPayload):
 # ---------------------------------------------------------------------------
 
 
-@jax.jit
+@functools.partial(jax.jit, static_argnames=("rowwise",))
 def score_dot(
-    model: ASHModel, prep: QueryPrep, payload: ASHPayload
+    model: ASHModel, prep: QueryPrep, payload: ASHPayload,
+    *, rowwise: bool = False,
 ) -> jax.Array:
     """<q, x_i> approximation, Eq. (20), for a batch of queries against
-    all payload rows.  Returns (n_queries, n_db)."""
+    all payload rows.  Returns (n_queries, n_db).
+
+    rowwise=True swaps the dense matmul for a broadcast-multiply +
+    last-axis reduce.  Same values up to reduction order — but the
+    reduction order no longer depends on the query-batch size, so row i
+    is bit-identical whether scored alone or inside any batch.  Used by
+    the gathered (IVF) and shortlist paths, where XLA's batched-matmul
+    lowering is batch-size dependent; the dense scan keeps the
+    MXU-friendly matmul.
+    """
     V = Q.unpack_codes(payload.codes, payload.d, payload.b).astype(
         jnp.float32
     )
-    dot = prep.q_proj @ V.T  # (m, n) — DOT-PROD term (MXU on TPU)
+    if rowwise:
+        dot = jnp.sum(prep.q_proj[..., None, :] * V, axis=-1)
+    else:
+        dot = prep.q_proj @ V.T  # (m, n) — DOT-PROD term (MXU on TPU)
     scale = payload.scale.astype(jnp.float32)[None, :]
     offset = payload.offset.astype(jnp.float32)[None, :]
     query_compute = prep.ip_q_landmarks[..., payload.cluster]  # (m, n)
@@ -120,13 +133,14 @@ def score_dot_1bit(
     return scale * masked_add + query_compute + offset_terms[None, :]
 
 
-@jax.jit
+@functools.partial(jax.jit, static_argnames=("rowwise",))
 def score_l2(
-    model: ASHModel, prep: QueryPrep, payload: ASHPayload
+    model: ASHModel, prep: QueryPrep, payload: ASHPayload,
+    *, rowwise: bool = False,
 ) -> jax.Array:
     """||q - x_i||^2 approximation (Appendix A), (m, n)."""
     _, _, res_norm, ip_x_mu = recovered_terms(model, payload)
-    ip_qx = score_dot(model, prep, payload)
+    ip_qx = score_dot(model, prep, payload, rowwise=rowwise)
     mu_sq = model.landmark_sq_norms[payload.cluster]  # (n,)
     ip_q_mu = prep.ip_q_landmarks[..., payload.cluster]  # (m, n)
     q_sq_mu = (
@@ -139,13 +153,14 @@ def score_l2(
     )
 
 
-@jax.jit
+@functools.partial(jax.jit, static_argnames=("rowwise",))
 def score_cosine(
-    model: ASHModel, prep: QueryPrep, payload: ASHPayload
+    model: ASHModel, prep: QueryPrep, payload: ASHPayload,
+    *, rowwise: bool = False,
 ) -> jax.Array:
     """cosSim(q, x_i) using the norm estimate of Eq. (A.5), (m, n)."""
     V, vnorm, res_norm, _ = recovered_terms(model, payload)
-    ip_qx = score_dot(model, prep, payload)
+    ip_qx = score_dot(model, prep, payload, rowwise=rowwise)
     ip_Wmu_v = jnp.sum(model.W_landmarks[payload.cluster] * V, axis=-1)
     x_sq = (
         res_norm**2

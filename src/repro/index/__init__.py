@@ -1,8 +1,8 @@
 """ANN index structures over ASH payloads.
 
-``AshIndex`` is the unified build/search/persist surface; the
-``flat``/``ivf`` module-level builders are deprecated shims kept for
-one release.
+``AshIndex`` is the unified build/search/persist surface over the
+flat, IVF and sharded backends; ``repro.serving.engine`` batches
+requests on top of it.
 """
 from repro.index import common, flat, ivf, metrics, distributed
 from repro.index.api import AshIndex, available_backends, register_backend

@@ -30,7 +30,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ash as A
-from repro.core.types import ASHConfig, ASHModel, ASHPayload
+from repro.core import scoring as S
+from repro.core.types import ASHConfig, ASHModel, ASHPayload, QueryPrep
 from repro.index import common as C
 from repro.index import distributed as DX
 from repro.index import flat as F
@@ -156,6 +157,11 @@ class FlatBackend:
         return F._search(state, queries, k=k, rerank=rerank, **opts)
 
     @staticmethod
+    def search_prepped(state, prep, *, k, nprobe=None, rerank=0, **opts):
+        del nprobe
+        return F._search_prepped(state, prep, k=k, rerank=rerank, **opts)
+
+    @staticmethod
     def add(state, X_new):
         return F._add(state, X_new)
 
@@ -204,12 +210,23 @@ class IVFBackend:
         return IV._assemble(metric, model, payload, ids, raw)
 
     @staticmethod
-    def search(state, queries, *, k, nprobe=None, rerank=0, **opts):
+    def _resolve_nprobe(state, nprobe):
         if nprobe is None:
             nprobe = IVFBackend.default_nprobe
-        nprobe = min(nprobe, state.invlists.shape[0])
+        return min(nprobe, state.invlists.shape[0])
+
+    @staticmethod
+    def search(state, queries, *, k, nprobe=None, rerank=0, **opts):
+        nprobe = IVFBackend._resolve_nprobe(state, nprobe)
         return IV._search(
             state, queries, k=k, nprobe=nprobe, rerank=rerank, **opts
+        )
+
+    @staticmethod
+    def search_prepped(state, prep, *, k, nprobe=None, rerank=0, **opts):
+        nprobe = IVFBackend._resolve_nprobe(state, nprobe)
+        return IV._search_prepped(
+            state, prep, k=k, nprobe=nprobe, rerank=rerank, **opts
         )
 
     @staticmethod
@@ -276,8 +293,13 @@ class ShardedState:
         self.searchers = {}
 
     def searcher(self, k: int):
+        """(payload, QueryPrep) -> (scores, ids) searcher, cached per k.
+
+        Prep-based so the direct and engine paths share one compiled
+        function (queries are prepped outside the shard_map, once,
+        instead of redundantly on every shard)."""
         if k not in self.searchers:
-            self.searchers[k] = DX.make_sharded_search(
+            self.searchers[k] = DX.make_sharded_search_prepped(
                 self.mesh, self.model, self.axes, k,
                 metric=self.metric, n_real=self.payload.n,
             )
@@ -330,13 +352,20 @@ class ShardedBackend:
 
     @staticmethod
     def search(state, queries, *, k, nprobe=None, rerank=0):
+        prep = S.prepare_queries(state.model, queries)
+        return ShardedBackend.search_prepped(
+            state, prep, k=k, nprobe=nprobe, rerank=rerank
+        )
+
+    @staticmethod
+    def search_prepped(state, prep, *, k, nprobe=None, rerank=0):
         del nprobe  # no coarse routing in the scatter-gather scan
         if rerank:
             raise ValueError(
                 "rerank is not supported by the sharded backend "
                 "(raw vectors are not distributed with the payload)"
             )
-        return state.searcher(k)(state.sharded, queries)
+        return state.searcher(k)(state.sharded, prep)
 
     @staticmethod
     def add(state, X_new):
@@ -446,6 +475,29 @@ class AshIndex:
         scores for every metric; id -1 marks a missing candidate."""
         return self._backend.search(
             self._state, queries, k=k, nprobe=nprobe, rerank=rerank,
+            **opts,
+        )
+
+    def prepare(self, queries: jax.Array) -> QueryPrep:
+        """Precompute the QUERY-COMPUTE projections (Eq. 20) for
+        ``queries``; feed to :meth:`search_prepped`.  Row i of the prep
+        depends only on row i of ``queries``, so prep rows are cacheable
+        and batchable across requests (the serving engine does both)."""
+        return S.prepare_queries(self.model, queries)
+
+    def search_prepped(
+        self,
+        prep: QueryPrep,
+        k: int = 10,
+        *,
+        nprobe: Optional[int] = None,
+        rerank: int = 0,
+        **opts,
+    ) -> tuple[jax.Array, jax.Array]:
+        """:meth:`search` from precomputed projections — bit-identical
+        to ``search(queries, ...)`` for the same query rows."""
+        return self._backend.search_prepped(
+            self._state, prep, k=k, nprobe=nprobe, rerank=rerank,
             **opts,
         )
 

@@ -11,7 +11,6 @@ silently aliased to row 0.
 """
 from __future__ import annotations
 
-import warnings
 from typing import Optional
 
 import jax
@@ -23,12 +22,6 @@ from repro.core.types import ASHModel, ASHPayload, QueryPrep
 NEG_INF = -jnp.inf
 METRICS = ("dot", "l2", "cos")
 _EPS = 1e-12
-
-
-def warn_deprecated(old: str, new: str) -> None:
-    warnings.warn(
-        f"{old} is deprecated; use {new}", DeprecationWarning, stacklevel=3
-    )
 
 
 def validate_metric(metric: str) -> str:
@@ -51,6 +44,7 @@ def approx_scores(
     metric: str,
     *,
     use_pallas: Optional[bool] = False,
+    rowwise: bool = False,
 ) -> jax.Array:
     """ASH scores of all payload rows, (m, n), higher-is-better.
 
@@ -58,17 +52,22 @@ def approx_scores(
     ``None`` → route the dot path through the fused kernel (``None`` =
     auto: Pallas on TPU, oracle on CPU).  Only ``metric="dot"`` has a
     fused kernel; other metrics always use the reference path.
+
+    rowwise: batch-size-invariant reduction order for the DOT-PROD term
+    (see ``scoring.score_dot``) — required on gathered/vmapped candidate
+    sets so scores stay bit-identical across serving batch shapes;
+    incompatible with the fused kernel.
     """
     if metric == "dot":
-        if use_pallas is False:
-            return S.score_dot(model, prep, payload)
+        if use_pallas is False or rowwise:
+            return S.score_dot(model, prep, payload, rowwise=rowwise)
         from repro.kernels import ops as K
 
         return K.ash_score(model, prep, payload, use_pallas=use_pallas)
     if metric == "l2":
-        return -S.score_l2(model, prep, payload)
+        return -S.score_l2(model, prep, payload, rowwise=rowwise)
     if metric == "cos":
-        return S.score_cosine(model, prep, payload)
+        return S.score_cosine(model, prep, payload, rowwise=rowwise)
     raise ValueError(metric)
 
 
@@ -84,8 +83,13 @@ def exact_scores(
 
     cand: (m, R, D) candidate vectors per query.  Returns (m, R),
     higher-is-better (same convention as :func:`approx_scores`).
+
+    The inner products use a broadcast-multiply + last-axis reduce
+    rather than a batched matmul: XLA's batched-dot lowering varies
+    with m, and rerank scores must be bit-identical whether a query is
+    served alone or inside an engine bucket.
     """
-    ip = jnp.einsum("md,mrd->mr", prep.q, cand)
+    ip = jnp.sum(prep.q[:, None, :] * cand, axis=-1)
     if metric == "dot":
         return ip
     if metric == "l2":

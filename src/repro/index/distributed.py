@@ -60,25 +60,16 @@ def pad_to_multiple(payload: ASHPayload, multiple: int) -> ASHPayload:
     )
 
 
-def make_sharded_search(
+def _make_searcher(
     mesh: Mesh,
     model: ASHModel,
     axes: tuple[str, ...],
-    k: int = 10,
+    k: int,
     *,
-    metric: str = "dot",
-    n_real: int | None = None,
+    metric: str,
+    n_real: int | None,
+    from_prep: bool,
 ):
-    """Build a jitted (payload, queries) -> (scores, global_ids) searcher.
-
-    ``axes``: mesh axes the database rows are sharded over (e.g.
-    ("pod", "data", "model") shards over all 512 devices).
-
-    ``n_real``: rows beyond this global index are padding (from
-    :func:`pad_to_multiple`) and are masked to score ``-inf`` / id -1.
-    Required for ``metric != "dot"`` — the l2/cos estimators don't
-    respect the dot-only ``offset=-inf`` pad sentinel.
-    """
     C.validate_metric(metric)
     if metric != "dot" and n_real is None:
         raise ValueError(
@@ -89,9 +80,12 @@ def make_sharded_search(
     for a in axes:
         n_shards *= mesh.shape[a]
 
-    def local_then_merge(payload: ASHPayload, queries: jax.Array):
+    def local_then_merge(payload: ASHPayload, queries):
         # ---- local scan (per shard) ----
-        prep = S.prepare_queries(model, queries)
+        prep = (
+            queries if from_prep
+            else S.prepare_queries(model, queries)
+        )
         local_scores = C.approx_scores(
             model, prep, payload, metric
         )  # (m, n_local)
@@ -130,3 +124,48 @@ def make_sharded_search(
             local_then_merge, mesh=mesh, check_rep=False, **specs
         )
     return jax.jit(fn)
+
+
+def make_sharded_search(
+    mesh: Mesh,
+    model: ASHModel,
+    axes: tuple[str, ...],
+    k: int = 10,
+    *,
+    metric: str = "dot",
+    n_real: int | None = None,
+):
+    """Build a jitted (payload, queries) -> (scores, global_ids) searcher.
+
+    ``axes``: mesh axes the database rows are sharded over (e.g.
+    ("pod", "data", "model") shards over all 512 devices).
+
+    ``n_real``: rows beyond this global index are padding (from
+    :func:`pad_to_multiple`) and are masked to score ``-inf`` / id -1.
+    Required for ``metric != "dot"`` — the l2/cos estimators don't
+    respect the dot-only ``offset=-inf`` pad sentinel.
+    """
+    return _make_searcher(
+        mesh, model, axes, k, metric=metric, n_real=n_real,
+        from_prep=False,
+    )
+
+
+def make_sharded_search_prepped(
+    mesh: Mesh,
+    model: ASHModel,
+    axes: tuple[str, ...],
+    k: int = 10,
+    *,
+    metric: str = "dot",
+    n_real: int | None = None,
+):
+    """Like :func:`make_sharded_search` but takes a precomputed
+    ``QueryPrep`` (replicated) instead of raw queries, so the
+    QUERY-COMPUTE projections run once on the host instead of
+    redundantly on every shard — and so the serving engine's prep cache
+    can feed this backend too."""
+    return _make_searcher(
+        mesh, model, axes, k, metric=metric, n_real=n_real,
+        from_prep=True,
+    )

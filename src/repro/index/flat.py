@@ -1,8 +1,8 @@
 """Flat (exhaustive-scan) ASH index with optional exact re-ranking.
 
-The module-level ``build``/``search`` functions are deprecation shims
-kept for one release; new code goes through ``repro.index.AshIndex``
-with ``backend="flat"``.  Metric dispatch and the rerank pipeline live
+Entry point is ``repro.index.AshIndex`` with ``backend="flat"``; the
+``_search_prepped`` path lets the serving engine reuse cached
+``QueryPrep`` projections.  Metric dispatch and the rerank pipeline live
 in ``repro.index.common`` (shared with the IVF and sharded backends).
 """
 from __future__ import annotations
@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.core import ash as A
 from repro.core import scoring as S
-from repro.core.types import ASHConfig, ASHModel, ASHPayload, pytree_dataclass
+from repro.core.types import ASHConfig, ASHModel, ASHPayload, QueryPrep, pytree_dataclass
 from repro.index import common as C
 
 
@@ -56,20 +56,19 @@ def _build(
 @functools.partial(
     jax.jit, static_argnames=("k", "rerank", "use_pallas")
 )
-def _search(
+def _search_prepped(
     index: FlatIndex,
-    queries: jax.Array,
+    prep: QueryPrep,
     k: int = 10,
     rerank: int = 0,
     use_pallas: Optional[bool] = False,
 ) -> tuple[jax.Array, jax.Array]:
-    """Top-k search. Returns (scores, indices), each (m, k).
+    """Top-k search from precomputed query projections.
 
-    rerank > 0: retrieve a shortlist of that size by ASH scores and
-    re-rank it with exact (bf16) metric-aware scores (requires raw
-    vectors).
+    Returns (scores, indices), each (m, k).  rerank > 0: retrieve a
+    shortlist of that size by ASH scores and re-rank it with exact
+    (bf16) metric-aware scores (requires raw vectors).
     """
-    prep = S.prepare_queries(index.model, queries)
     approx = C.approx_scores(
         index.model, prep, index.payload, index.metric,
         use_pallas=use_pallas,
@@ -81,6 +80,22 @@ def _search(
             prep, index.raw, short_s, short_i, index.metric, k
         )
     return jax.lax.top_k(approx, k)
+
+
+def _search(
+    index: FlatIndex,
+    queries: jax.Array,
+    k: int = 10,
+    rerank: int = 0,
+    use_pallas: Optional[bool] = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Top-k search; composition of ``prepare_queries`` and
+    :func:`_search_prepped` so the batched engine path and the direct
+    path share the exact same compiled arithmetic (bit-identical)."""
+    prep = S.prepare_queries(index.model, queries)
+    return _search_prepped(
+        index, prep, k=k, rerank=rerank, use_pallas=use_pallas
+    )
 
 
 def _add(index: FlatIndex, X_new: jax.Array) -> FlatIndex:
@@ -97,20 +112,3 @@ def _add(index: FlatIndex, X_new: jax.Array) -> FlatIndex:
         payload=C.concat_payloads(index.payload, payload_new),
         raw=raw,
     )
-
-
-def build(key, X, config, **kw) -> FlatIndex:
-    """Deprecated: use ``AshIndex.build(..., backend="flat")``."""
-    C.warn_deprecated(
-        "repro.index.flat.build",
-        'repro.index.AshIndex.build(..., backend="flat")',
-    )
-    return _build(key, X, config, **kw)
-
-
-def search(index, queries, k: int = 10, rerank: int = 0):
-    """Deprecated: use ``AshIndex.search``."""
-    C.warn_deprecated(
-        "repro.index.flat.search", "repro.index.AshIndex.search"
-    )
-    return _search(index, queries, k=k, rerank=rerank)

@@ -10,9 +10,9 @@ them with the asymmetric estimator, masks padding, and top-k's.
 Queries with fewer than k valid candidates pad results with score
 ``-inf`` / id ``-1`` (never aliased to row 0).
 
-The module-level ``build``/``search`` functions are deprecation shims
-kept for one release; new code goes through ``repro.index.AshIndex``
-with ``backend="ivf"``.
+Entry point is ``repro.index.AshIndex`` with ``backend="ivf"``; the
+``_search_prepped`` path lets the serving engine reuse cached
+``QueryPrep`` projections.
 """
 from __future__ import annotations
 
@@ -24,7 +24,7 @@ import jax.numpy as jnp
 
 from repro.core import ash as A
 from repro.core import scoring as S
-from repro.core.types import ASHConfig, ASHModel, ASHPayload, pytree_dataclass
+from repro.core.types import ASHConfig, ASHModel, ASHPayload, QueryPrep, pytree_dataclass
 from repro.index import common as C
 
 NEG_INF = C.NEG_INF
@@ -128,16 +128,36 @@ def _add(index: IVFIndex, X_new: jax.Array) -> IVFIndex:
 
 
 @functools.partial(jax.jit, static_argnames=("k", "nprobe", "rerank"))
-def _search(
+def _search_prepped(
     index: IVFIndex,
-    queries: jax.Array,
+    prep: QueryPrep,
     k: int = 10,
     nprobe: int = 8,
     rerank: int = 0,
 ) -> tuple[jax.Array, jax.Array]:
-    """Returns (scores (m,k), original ids (m,k))."""
-    m = queries.shape[0]
-    prep = S.prepare_queries(index.model, queries)
+    """Top-k from precomputed query projections: (scores, ids), (m,k)."""
+    if prep.q.shape[0] == 1:
+        # XLA lowers the degenerate single-query batch differently from
+        # every m >= 2 (last-ulp score drift), which would break the
+        # serving engine's bit-identity guarantee between per-request
+        # and bucketed calls; compute at m=2 and slice.
+        prep = jax.tree_util.tree_map(
+            lambda a: jnp.concatenate([a, jnp.zeros_like(a)], axis=0),
+            prep,
+        )
+        s, i = _score_gathered(index, prep, k, nprobe, rerank)
+        return s[:1], i[:1]
+    return _score_gathered(index, prep, k, nprobe, rerank)
+
+
+def _score_gathered(
+    index: IVFIndex,
+    prep: QueryPrep,
+    k: int,
+    nprobe: int,
+    rerank: int,
+) -> tuple[jax.Array, jax.Array]:
+    m = prep.q.shape[0]
     # coarse routing: nearest centroids by L2 (== max <q,mu> - ||mu||^2/2)
     coarse = (
         prep.ip_q_landmarks
@@ -152,7 +172,9 @@ def _search(
         one = jax.tree_util.tree_map(
             lambda a: a[None] if hasattr(a, "ndim") else a, prep_q
         )
-        sc = C.approx_scores(index.model, one, sub, index.metric)[0]
+        sc = C.approx_scores(
+            index.model, one, sub, index.metric, rowwise=True
+        )[0]
         return jnp.where(valid_q, sc, NEG_INF)
 
     scores = jax.vmap(score_one)(prep, cand_rows, valid)  # (m, nprobe*L)
@@ -168,19 +190,14 @@ def _search(
     )
 
 
-def build(key, X, config, **kw) -> IVFIndex:
-    """Deprecated: use ``AshIndex.build(..., backend="ivf")``."""
-    C.warn_deprecated(
-        "repro.index.ivf.build",
-        'repro.index.AshIndex.build(..., backend="ivf")',
-    )
-    return _build(key, X, config, **kw)
-
-
-def search(index, queries, k: int = 10, nprobe: int = 8,
-           rerank: int = 0):
-    """Deprecated: use ``AshIndex.search``."""
-    C.warn_deprecated(
-        "repro.index.ivf.search", "repro.index.AshIndex.search"
-    )
-    return _search(index, queries, k=k, nprobe=nprobe, rerank=rerank)
+def _search(
+    index: IVFIndex,
+    queries: jax.Array,
+    k: int = 10,
+    nprobe: int = 8,
+    rerank: int = 0,
+) -> tuple[jax.Array, jax.Array]:
+    """Composition of ``prepare_queries`` and :func:`_search_prepped`,
+    so engine (prep-cached) and direct paths share compiled arithmetic."""
+    prep = S.prepare_queries(index.model, queries)
+    return _search_prepped(index, prep, k=k, nprobe=nprobe, rerank=rerank)

@@ -1,13 +1,17 @@
 """ANN serving launcher: build an ASH index over a synthetic embedding
-set and serve batched queries — the paper's end-to-end scenario.
+set and serve a request stream through the micro-batching engine — the
+paper's end-to-end scenario.
 
   PYTHONPATH=src python -m repro.launch.serve --n 100000 --dim 256 \
-      --bits 2 --reduce 2 --landmarks 64 --queries 1000 --batch 64
+      --bits 2 --reduce 2 --landmarks 64 --queries 1000 --req-batch 8
 
-Reports build time, encode time, QPS (this CPU), and 10-recall@{10,100}
-against exact ground truth.  ``--engine ivf`` serves through the
-inverted-file index with an nprobe sweep (the paper's Fig. 9 setup);
-``--engine flat`` scans everything (graph-index regime).
+Requests of ``--req-batch`` rows stream through a ``QueryEngine``
+(flush-on-size/timeout, bucketed jit traces, prep cache); the launcher
+reports build time, QPS, p50/p99 request latency, engine stats, and
+10-recall@{10,100} against exact ground truth.  ``--engine ivf`` serves
+through the inverted-file index with coarse routing (the paper's Fig. 9
+setup); ``--engine flat`` scans everything; ``--engine sharded``
+scatter-gathers over the device mesh.
 """
 from __future__ import annotations
 
@@ -16,12 +20,13 @@ import sys
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.core import ASHConfig
 from repro.data.synthetic import embedding_dataset, isotropy_diagnostics
 from repro.index import AshIndex
 from repro.index import metrics as MET
+from repro.serving.engine import QueryEngine
 
 
 def main(argv=None):
@@ -29,7 +34,12 @@ def main(argv=None):
     p.add_argument("--n", type=int, default=100_000)
     p.add_argument("--dim", type=int, default=256)
     p.add_argument("--queries", type=int, default=1000)
-    p.add_argument("--batch", type=int, default=64)
+    p.add_argument("--req-batch", type=int, default=8,
+                   help="rows per request submitted to the engine")
+    p.add_argument("--buckets", default="8,32,128",
+                   help="engine batch buckets (padded shapes)")
+    p.add_argument("--max-wait-ms", type=float, default=2.0,
+                   help="engine flush-on-timeout age")
     p.add_argument("--bits", type=int, default=2)
     p.add_argument("--reduce", type=int, default=2,
                    help="dimensionality reduction factor (d = D / r)")
@@ -73,24 +83,43 @@ def main(argv=None):
 
     gt_s, gt_i = MET.exact_topk(Q, X, k=10, metric=args.metric)
 
-    # warmup + timed batched serving
-    def run(queries):
-        return index.search(queries, k=100, nprobe=args.nprobe,
-                            rerank=args.rerank)
+    buckets = tuple(int(b) for b in args.buckets.split(","))
+    engine = QueryEngine(
+        index, batch_buckets=buckets,
+        max_wait_s=args.max_wait_ms / 1e3,
+    )
+    search_kw = dict(nprobe=args.nprobe, rerank=args.rerank)
 
-    _ = jax.block_until_ready(run(Q[: args.batch]))
+    # warmup on a throwaway engine: compiles the size-flush trace (the
+    # steady-state shape) without pre-warming the timed engine's prep
+    # cache or polluting its stats
+    warm = QueryEngine(
+        index, batch_buckets=buckets,
+        max_wait_s=args.max_wait_ms / 1e3,
+    )
+    for _ in range(max(1, buckets[-1] // args.req_batch)):
+        warm.submit(Q[: args.req_batch], k=100, **search_kw)
+    warm.flush()
+    # ... and the small bucket the stream's remainder lands in
+    warm.search(Q[: args.req_batch], k=100, **search_kw)
     t0 = time.time()
-    ids = []
-    for i in range(0, args.queries - args.batch + 1, args.batch):
-        s, idx = run(Q[i:i + args.batch])
-        ids.append(idx)
-    jax.block_until_ready(ids[-1])
+    tickets = [
+        engine.submit(Q[i:i + args.req_batch], k=100, **search_kw)
+        for i in range(0, args.queries, args.req_batch)
+    ]
+    engine.flush()
     dt = time.time() - t0
-    served = len(ids) * args.batch
-    ids = jnp.concatenate(ids, axis=0)
-    rec = MET.recall_curve(ids, gt_i[:served], Rs=(10, 100))
-    print(f"[serve] {served} queries in {dt:.2f}s "
-          f"({served / dt:.0f} QPS on this CPU)")
+    ids = np.concatenate([t.result()[1] for t in tickets], axis=0)
+
+    p50, p99 = np.percentile([t.stats.latency_s for t in tickets],
+                             [50, 99])
+    rec = MET.recall_curve(ids, gt_i, Rs=(10, 100))
+    print(f"[serve] {args.queries} queries "
+          f"({len(tickets)} requests x {args.req_batch}) in {dt:.2f}s "
+          f"({args.queries / dt:.0f} QPS on this CPU)")
+    print(f"[latency] p50={1e3 * p50:.1f}ms "
+          f"p99={1e3 * p99:.1f}ms per request")
+    print(f"[engine] {engine.stats.snapshot()}")
     print(f"[recall] 10-recall@10={rec.get(10):.4f} "
           f"10-recall@100={rec.get(100):.4f}")
     return 0

@@ -1,4 +1,7 @@
 """Serving integrations of the ASH technique."""
-from repro.serving import retrieval
+from repro.serving import engine, retrieval
+from repro.serving.engine import EngineConfig, QueryEngine, Ticket
 
-__all__ = ["retrieval"]
+__all__ = [
+    "engine", "retrieval", "EngineConfig", "QueryEngine", "Ticket",
+]

@@ -1,0 +1,513 @@
+"""Micro-batching query engine over ``AshIndex`` — the serving layer.
+
+The asymmetric design exists so batched scoring stays one dense
+MXU/SIMD-friendly matmul; this engine keeps production traffic on that
+path.  Individual (or small-batch) requests are queued, grouped by
+search parameters, padded into a small closed set of batch shapes
+("buckets") and served by ONE fused scoring call per bucket — so jit
+traces are reused across requests instead of re-tracing per novel
+request shape, and per-request results are scattered back out
+bit-identical to what a direct ``AshIndex.search`` would have returned.
+
+    engine = QueryEngine({"items": index_a, "docs": index_b})
+    t1 = engine.submit(q1, k=10, index="items")       # single query
+    t2 = engine.submit(q_batch, k=100, index="docs")  # small batch
+    engine.flush()                  # or: automatic on size / timeout
+    scores, ids = t1.result()
+    t1.stats                        # queue wait, bucket, scoring us
+
+Mechanics:
+
+* **Buckets** — pending rows of a group are padded to the smallest
+  configured batch bucket (queries pad with zeros, results for pad rows
+  are discarded); requested ``k`` is padded to a ``k`` bucket and each
+  request takes its first ``k`` columns (top-k prefixes are exact).
+  Mixed-``k`` requests therefore share one bucket and one trace.
+* **Queue** — bounded by ``max_pending`` rows; a group flushes when it
+  can fill the largest bucket ("size"), when its oldest request exceeds
+  ``max_wait_s`` ("timeout", checked on submit/poll), or explicitly
+  ("manual").
+* **Prep cache** — per-query-row LRU over the QUERY-COMPUTE projections
+  (``prepare_queries``): repeated queries skip the projection matmuls
+  entirely.  Keyed by (index name, query-row hash); row preps are exact,
+  so cache hits stay bit-identical.
+* **Registry** — one engine fronts several ``AshIndex`` backends (flat,
+  IVF, sharded) for tenant/namespace routing via ``index=``.
+* **k > n** — clamped to the index size and padded back out with score
+  ``-inf`` / id ``-1`` (the repo-wide missing-candidate convention).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from collections import OrderedDict
+from typing import Any, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import QueryPrep
+from repro.index.api import AshIndex, IVFBackend
+
+NEG_INF = float("-inf")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Tuning knobs of a :class:`QueryEngine`.
+
+    batch_buckets / k_buckets: ascending padded shapes; values above
+    the largest bucket round up to a multiple of it (so shapes stay a
+    closed set and traces stay bounded).
+    """
+
+    batch_buckets: Tuple[int, ...] = (8, 32, 128)
+    k_buckets: Tuple[int, ...] = (10, 100)
+    max_pending: int = 1024  # queue bound, in query rows
+    max_wait_s: float = 0.002  # flush-on-timeout age
+    prep_cache_entries: int = 8192  # LRU rows; 0 disables the cache
+
+    def __post_init__(self):
+        if not self.batch_buckets or not self.k_buckets:
+            raise ValueError("batch_buckets and k_buckets must be non-empty")
+        for name in ("batch_buckets", "k_buckets"):
+            v = getattr(self, name)
+            if tuple(sorted(v)) != tuple(v) or min(v) < 1:
+                raise ValueError(f"{name} must be ascending positive: {v}")
+
+
+def _bucketize(buckets: Tuple[int, ...], n: int) -> int:
+    """Smallest bucket >= n, else n rounded up to a multiple of the
+    largest bucket (keeps the shape set closed for any request size)."""
+    for b in buckets:
+        if n <= b:
+            return b
+    big = buckets[-1]
+    return ((n + big - 1) // big) * big
+
+
+def _pad_rows(rows: np.ndarray, bucket: int) -> np.ndarray:
+    """Zero-pad (n, D) query rows up to the bucket's row count."""
+    if bucket <= rows.shape[0]:
+        return rows
+    pad = np.zeros((bucket - rows.shape[0], rows.shape[1]), np.float32)
+    return np.concatenate([rows, pad], axis=0)
+
+
+@dataclasses.dataclass
+class RequestStats:
+    """Per-request serving stats, filled when the request completes."""
+
+    queue_wait_s: float = 0.0  # submit -> scoring start
+    latency_s: float = 0.0  # submit -> result scattered back
+    batch_rows: int = 0  # real rows in the fused call
+    bucket_rows: int = 0  # padded rows (the trace shape)
+    scoring_us: float = 0.0  # fused scoring call, whole bucket
+    prep_hits: int = 0  # this request's rows found in the prep cache
+    prep_misses: int = 0
+    flush_reason: str = ""  # "size" | "timeout" | "manual"
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Aggregate counters across the engine lifetime."""
+
+    requests: int = 0
+    batches: int = 0  # fused scoring calls
+    batched_rows: int = 0  # real rows served
+    padded_rows: int = 0  # zero rows added by bucketing
+    prep_hits: int = 0
+    prep_misses: int = 0
+    flushes: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {"size": 0, "timeout": 0, "manual": 0}
+    )
+    # distinct (index, bucket, k, params) combinations that ran — the
+    # engine-side upper bound on jit traces of the scoring call
+    compiled_buckets: set = dataclasses.field(default_factory=set)
+
+    def snapshot(self) -> Dict[str, Any]:
+        fill = self.batched_rows / max(
+            1, self.batched_rows + self.padded_rows
+        )
+        return {
+            "requests": self.requests,
+            "batches": self.batches,
+            "rows": self.batched_rows,
+            "bucket_fill": round(fill, 3),
+            "prep_hits": self.prep_hits,
+            "prep_misses": self.prep_misses,
+            "flushes": dict(self.flushes),
+            "unique_buckets": len(self.compiled_buckets),
+        }
+
+
+class Ticket:
+    """Handle for a submitted request; resolves when its group flushes."""
+
+    def __init__(self, engine: "QueryEngine", group: tuple, k: int,
+                 n_rows: int):
+        self._engine = engine
+        self._group = group
+        self.k = k
+        self.n_rows = n_rows
+        self.stats = RequestStats()
+        self._result: Optional[Tuple[np.ndarray, np.ndarray]] = None
+        self._error: Optional[BaseException] = None
+
+    @property
+    def done(self) -> bool:
+        return self._result is not None or self._error is not None
+
+    def result(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(scores, ids), numpy arrays, each (n_rows, k).  Flushes the
+        request's group if it is still queued.  If the fused call for
+        this request's batch failed (e.g. an option the backend
+        rejects), re-raises that error here as well as at the flush
+        site."""
+        if not self.done:
+            self._engine._flush_group(self._group, "manual")
+        if self._error is not None:
+            raise RuntimeError(
+                "request failed during its batch's fused scoring call"
+            ) from self._error
+        assert self._result is not None
+        return self._result
+
+
+@dataclasses.dataclass
+class _Request:
+    queries: np.ndarray  # (m, D) float32, contiguous
+    k: int
+    ticket: Ticket
+    t_enqueue: float
+
+
+class QueryEngine:
+    """See the module docstring.  Single-threaded core: ``submit`` /
+    ``poll`` / ``flush`` are meant to be driven by one serving loop
+    (async transport is a ROADMAP follow-up)."""
+
+    def __init__(
+        self,
+        indexes: Union[AshIndex, Dict[str, AshIndex], None] = None,
+        config: Optional[EngineConfig] = None,
+        **overrides,
+    ):
+        if config is None:
+            config = EngineConfig(**overrides)
+        elif overrides:
+            config = dataclasses.replace(config, **overrides)
+        self.config = config
+        self._indexes: Dict[str, AshIndex] = {}
+        self._pending: "OrderedDict[tuple, list[_Request]]" = OrderedDict()
+        self._pending_rows = 0
+        self._prep_cache: "OrderedDict[tuple, tuple]" = OrderedDict()
+        self.stats = EngineStats()
+        if isinstance(indexes, AshIndex):
+            self.register("default", indexes)
+        elif indexes:
+            for name, idx in indexes.items():
+                self.register(name, idx)
+
+    # -- registry -----------------------------------------------------
+
+    def register(self, name: str, index: AshIndex) -> "QueryEngine":
+        """Route ``submit(..., index=name)`` to ``index``.  Re-binding a
+        name drops its cached preps (a new index means a new model)."""
+        if name in self._indexes:
+            self.invalidate_prep_cache(name)
+        self._indexes[name] = index
+        return self
+
+    def index(self, name: str = "default") -> AshIndex:
+        return self._indexes[name]
+
+    @property
+    def index_names(self) -> Tuple[str, ...]:
+        return tuple(self._indexes)
+
+    def invalidate_prep_cache(self, name: Optional[str] = None) -> None:
+        if name is None:
+            self._prep_cache.clear()
+            return
+        for key in [k for k in self._prep_cache if k[0] == name]:
+            del self._prep_cache[key]
+
+    # -- request intake -----------------------------------------------
+
+    def submit(
+        self,
+        queries,
+        k: int = 10,
+        *,
+        index: str = "default",
+        nprobe: Optional[int] = None,
+        rerank: int = 0,
+        **opts,
+    ) -> Ticket:
+        """Queue a request; returns a :class:`Ticket`.  May flush (this
+        group on size, any group on timeout or queue pressure)."""
+        if index not in self._indexes:
+            raise KeyError(
+                f"unknown index {index!r}; registered: {self.index_names}"
+            )
+        idx = self._indexes[index]
+        q = np.ascontiguousarray(np.asarray(queries), dtype=np.float32)
+        if q.ndim == 1:
+            q = q[None, :]
+        if q.ndim != 2:
+            raise ValueError(f"queries must be (m, D) or (D,): {q.shape}")
+        if k < 1:
+            raise ValueError(f"k must be >= 1: {k}")
+        backend = idx.backend
+        if backend == "sharded" and rerank:
+            raise ValueError(
+                "rerank is not supported by the sharded backend"
+            )
+        if backend != "ivf":
+            nprobe = None  # only IVF routes coarsely; don't split groups
+        elif nprobe is None:
+            # normalize to the backend default so nprobe=None and an
+            # explicit default value share one group/bucket/trace
+            nprobe = IVFBackend.default_nprobe
+        group = (index, nprobe, rerank, tuple(sorted(opts.items())))
+
+        # bounded queue: free space by serving, never by dropping
+        if (
+            self._pending_rows + q.shape[0] > self.config.max_pending
+            and self._pending_rows > 0
+        ):
+            self.flush()
+
+        ticket = Ticket(self, group, k, q.shape[0])
+        self._pending.setdefault(group, []).append(
+            _Request(q, k, ticket, time.perf_counter())
+        )
+        self._pending_rows += q.shape[0]
+        self.stats.requests += 1
+
+        if (
+            self._group_rows(group) >= self.config.batch_buckets[-1]
+            or self._pending_rows > self.config.max_pending
+        ):
+            # bucket fillable, or a single request alone exceeds the
+            # queue bound: serve now rather than sit past max_pending
+            self._flush_group(group, "size")
+        else:
+            self.poll()
+        return ticket
+
+    def search(self, queries, k: int = 10, **kw):
+        """Synchronous convenience: submit + resolve immediately.
+        (scores, ids) numpy arrays, each (m, k)."""
+        return self.submit(queries, k, **kw).result()
+
+    # -- flushing -----------------------------------------------------
+
+    def poll(self) -> int:
+        """Flush groups whose oldest request exceeded ``max_wait_s``.
+        Call this from the serving loop's idle path.  Returns the number
+        of requests completed."""
+        now = time.perf_counter()
+        done = 0
+        for group in list(self._pending):
+            reqs = self._pending.get(group)
+            if reqs and now - reqs[0].t_enqueue >= self.config.max_wait_s:
+                done += self._flush_group(group, "timeout")
+        return done
+
+    def flush(self) -> int:
+        """Serve everything queued, now.  Returns requests completed;
+        an empty flush is a no-op returning 0."""
+        done = 0
+        for group in list(self._pending):
+            done += self._flush_group(group, "manual")
+        return done
+
+    @property
+    def pending_requests(self) -> int:
+        return sum(len(v) for v in self._pending.values())
+
+    def _group_rows(self, group: tuple) -> int:
+        return sum(
+            r.queries.shape[0] for r in self._pending.get(group, ())
+        )
+
+    def _flush_group(self, group: tuple, reason: str) -> int:
+        reqs = self._pending.pop(group, None)
+        if not reqs:
+            return 0
+        self._pending_rows -= sum(r.queries.shape[0] for r in reqs)
+        self.stats.flushes[reason] += 1
+        # chunk FIFO so no batch exceeds the largest bucket (a single
+        # oversized request still rides alone, padded to a multiple)
+        big = self.config.batch_buckets[-1]
+        chunks: list[list[_Request]] = [[]]
+        rows = 0
+        for r in reqs:
+            m = r.queries.shape[0]
+            if chunks[-1] and rows + m > big:
+                chunks.append([])
+                rows = 0
+            chunks[-1].append(r)
+            rows += m
+        for i, chunk in enumerate(chunks):
+            try:
+                self._run_batch(group, chunk, reason)
+            except Exception as e:
+                # the failed chunk's tickets carry the error already
+                # (_run_batch); later chunks were popped off the queue
+                # too, so resolve them with it as well — no request may
+                # end up neither served nor errored
+                for later in chunks[i + 1:]:
+                    for r in later:
+                        r.ticket._error = e
+                raise
+        return len(reqs)
+
+    # -- the fused scoring call ---------------------------------------
+
+    def _run_batch(
+        self, group: tuple, reqs: "list[_Request]", reason: str
+    ) -> None:
+        name, nprobe, rerank, opts = group
+        idx = self._indexes[name]
+        rows = np.concatenate([r.queries for r in reqs], axis=0)
+        n_real = rows.shape[0]
+        bucket = _bucketize(self.config.batch_buckets, n_real)
+        rows = _pad_rows(rows, bucket)
+        k_max = max(r.k for r in reqs)
+        k_run = min(_bucketize(self.config.k_buckets, k_max), idx.n)
+
+        try:
+            prep, hit_rows = self._prep_for(name, idx, rows, n_real)
+            t_score = time.perf_counter()  # after prep/hash: the stat
+            scores, ids = jax.block_until_ready(  # is the fused call
+                idx.search_prepped(
+                    prep, k=k_run, nprobe=nprobe, rerank=rerank,
+                    **dict(opts),
+                )
+            )
+        except Exception as e:
+            # resolve every ticket with the error (a later result()
+            # re-raises it) before surfacing at the flush site — which
+            # may be an unrelated caller's submit()/poll()
+            for r in reqs:
+                r.ticket._error = e
+            raise
+        scoring_us = (time.perf_counter() - t_score) * 1e6
+        scores = np.asarray(scores)
+        ids = np.asarray(ids)
+
+        self.stats.batches += 1
+        self.stats.batched_rows += n_real
+        self.stats.padded_rows += bucket - n_real
+        self.stats.compiled_buckets.add(
+            (name, idx.backend, bucket, k_run, nprobe, rerank, opts)
+        )
+
+        offset = 0
+        for r in reqs:
+            m = r.queries.shape[0]
+            s = scores[offset:offset + m]
+            i = ids[offset:offset + m]
+            if r.k <= k_run:  # top-k prefix of the bucket's top-k_run
+                s, i = s[:, : r.k], i[:, : r.k]
+            else:  # k > n: pad out with the missing-candidate sentinel
+                pad = r.k - k_run
+                s = np.concatenate(
+                    [s, np.full((m, pad), NEG_INF, s.dtype)], axis=1
+                )
+                i = np.concatenate(
+                    [i, np.full((m, pad), -1, i.dtype)], axis=1
+                )
+            st = r.ticket.stats
+            st.queue_wait_s = t_score - r.t_enqueue
+            st.latency_s = time.perf_counter() - r.t_enqueue
+            st.batch_rows = n_real
+            st.bucket_rows = bucket
+            st.scoring_us = scoring_us
+            st.prep_hits = int(hit_rows[offset:offset + m].sum())
+            st.prep_misses = m - st.prep_hits
+            st.flush_reason = reason
+            r.ticket._result = (s, i)
+            offset += m
+
+    # -- prep cache ---------------------------------------------------
+
+    def _prep_for(
+        self, name: str, idx: AshIndex, rows: np.ndarray, n_real: int
+    ) -> Tuple[QueryPrep, np.ndarray]:
+        """QueryPrep for the padded bucket ``rows``, reusing cached
+        per-row projections.  Returns (prep, per-row hit flags for the
+        real rows)."""
+        bucket = rows.shape[0]
+        hit_rows = np.zeros(n_real, dtype=bool)
+        if self.config.prep_cache_entries <= 0:
+            self.stats.prep_misses += n_real
+            return idx.prepare(jnp.asarray(rows)), hit_rows
+
+        keys = [
+            (name, hashlib.blake2b(rows[i].tobytes(),
+                                   digest_size=16).digest())
+            for i in range(bucket)
+        ]
+        row_preps: list = [None] * bucket
+        miss = []
+        for i, key in enumerate(keys):
+            cached = self._prep_cache.get(key)
+            if cached is not None:
+                self._prep_cache.move_to_end(key)
+                row_preps[i] = cached
+                if i < n_real:
+                    hit_rows[i] = True
+            else:
+                miss.append(i)
+        self.stats.prep_hits += int(hit_rows.sum())
+        self.stats.prep_misses += n_real - int(hit_rows.sum())
+
+        if not miss:
+            return self._stack_prep(row_preps), hit_rows
+        if len(miss) == bucket:
+            # cold bucket: one prepare over the padded rows, no restack
+            prep = jax.block_until_ready(idx.prepare(jnp.asarray(rows)))
+            self._cache_prep_rows(keys, prep, range(bucket))
+            return prep, hit_rows
+        # warm bucket: prepare only the misses (padded to a bucket shape
+        # so prepare traces stay bounded), then merge with cached rows
+        mb = _bucketize(self.config.batch_buckets, len(miss))
+        miss_rows = _pad_rows(rows[miss], mb)
+        mp = jax.block_until_ready(idx.prepare(jnp.asarray(miss_rows)))
+        mp_np = tuple(np.asarray(a) for a in
+                      (mp.q, mp.q_proj, mp.ip_q_landmarks, mp.q_sq_norm))
+        for j, i in enumerate(miss):
+            row_preps[i] = tuple(a[j] for a in mp_np)
+        self._prep_cache.update(
+            (keys[i], row_preps[i]) for i in miss
+        )
+        self._evict()
+        return self._stack_prep(row_preps), hit_rows
+
+    def _cache_prep_rows(self, keys, prep: QueryPrep, idxs) -> None:
+        arrs = tuple(np.asarray(a) for a in
+                     (prep.q, prep.q_proj, prep.ip_q_landmarks,
+                      prep.q_sq_norm))
+        for i in idxs:
+            self._prep_cache[keys[i]] = tuple(a[i] for a in arrs)
+        self._evict()
+
+    def _evict(self) -> None:
+        while len(self._prep_cache) > self.config.prep_cache_entries:
+            self._prep_cache.popitem(last=False)
+
+    @staticmethod
+    def _stack_prep(row_preps) -> QueryPrep:
+        q, q_proj, ipl, qsq = (
+            jnp.asarray(np.stack([r[f] for r in row_preps]))
+            for f in range(4)
+        )
+        return QueryPrep(
+            q=q, q_proj=q_proj, ip_q_landmarks=ipl, q_sq_norm=qsq
+        )

@@ -7,20 +7,21 @@ the fused asymmetric kernel (Pallas on TPU, oracle on CPU), followed by
 top-k.  Payload is 32D/(bd)x smaller than the fp32 table, and the
 scoring matmul reads packed codes only.
 
-This module is now a thin layer over ``repro.index.AshIndex``:
-:func:`build_index` returns an ``AshIndex`` (flat backend, fused dot
-kernel at search time); ``build_candidate_index``/:func:`retrieve` are
-deprecation shims over the same path kept for one release.
+Requests route through the micro-batching :class:`QueryEngine`
+(``repro.serving.engine``): one engine per index (cached here), so
+repeated user vectors hit the prep cache and request shapes collapse
+onto the engine's bucketed jit traces.
 """
 from __future__ import annotations
 
 from typing import Optional
 
 import jax
+import numpy as np
 
-from repro.core import ASHConfig, ASHModel, ASHPayload
+from repro.core import ASHConfig
 from repro.index import AshIndex
-from repro.index import common as C
+from repro.serving.engine import QueryEngine
 
 
 def build_index(
@@ -43,75 +44,50 @@ def build_index(
     )
 
 
+def engine_for(index: AshIndex, **overrides) -> QueryEngine:
+    """The (cached) serving engine fronting ``index``.  Overrides only
+    apply on first construction for a given index.
+
+    Cached on the index instance itself so the engine (and its prep
+    cache) lives exactly as long as the index it fronts.  The default
+    bucket ladder is power-of-two dense: synchronous one-shot callers
+    with power-of-two batch sizes (the common recsys request shapes)
+    pad by at most 2x and usually not at all.
+    """
+    engine = getattr(index, "_serving_engine", None)
+    if engine is None:
+        overrides.setdefault("batch_buckets", (8, 16, 32, 64, 128))
+        engine = QueryEngine(index, **overrides)
+        index._serving_engine = engine
+    return engine
+
+
 def serve_topk(
     index: AshIndex,
     user_vecs: jax.Array,  # (B, e)
     k: int = 10,
     use_pallas: Optional[bool] = None,  # auto: kernel on TPU, oracle on CPU
-) -> tuple[jax.Array, jax.Array]:
-    """Top-k ASH MIPS through the fused scoring kernel."""
-    return index.search(user_vecs, k=k, use_pallas=use_pallas)
+    *,
+    engine: Optional[QueryEngine] = None,
+) -> "tuple[np.ndarray, np.ndarray]":
+    """Top-k ASH MIPS through the engine's fused scoring path.
+    Returns host-side (numpy) scores and ids, each (B, k)."""
+    eng = engine if engine is not None else engine_for(index)
+    return eng.search(user_vecs, k=k, use_pallas=use_pallas)
 
 
-def sasrec_retrieve(params: dict, seq: jax.Array, index, *args, k=10):
+def sasrec_retrieve(
+    params: dict,
+    seq: jax.Array,
+    index: AshIndex,
+    cfg,
+    k: int = 10,
+    *,
+    engine: Optional[QueryEngine] = None,
+) -> "tuple[np.ndarray, np.ndarray]":
     """End-to-end SASRec next-item retrieval over the compressed
-    catalog.
-
-    New call shape: ``sasrec_retrieve(params, seq, index, cfg, k=...)``
-    with an ``AshIndex``.  The legacy
-    ``sasrec_retrieve(params, seq, model, payload, cfg, k=...)`` shape
-    still works for one release.
-    """
+    catalog: user sequences -> user state -> engine-batched ASH MIPS."""
     from repro.models import sasrec as SR
 
-    if isinstance(index, AshIndex):
-        (cfg,) = args
-    else:  # legacy (model, payload, cfg)
-        payload, cfg = args
-        index = AshIndex.from_parts(index, payload)
     u = SR.user_state(params, seq, cfg)
-    return serve_topk(index, u, k=k)
-
-
-# ---------------------------------------------------------------------------
-# Deprecated shims (one release)
-# ---------------------------------------------------------------------------
-
-
-def build_candidate_index(
-    key: jax.Array,
-    embeddings: jax.Array,
-    *,
-    bits: int = 4,
-    reduce: int = 1,
-    n_landmarks: int = 16,
-    learned: bool = True,
-) -> tuple[ASHModel, ASHPayload]:
-    """Deprecated: use :func:`build_index` (returns an ``AshIndex``)."""
-    C.warn_deprecated(
-        "repro.serving.retrieval.build_candidate_index",
-        "repro.serving.retrieval.build_index",
-    )
-    index = build_index(
-        key, embeddings, bits=bits, reduce=reduce,
-        n_landmarks=n_landmarks, learned=learned,
-    )
-    return index.model, index.payload
-
-
-def retrieve(
-    model: ASHModel,
-    payload: ASHPayload,
-    user_vecs: jax.Array,
-    k: int = 10,
-    use_pallas: Optional[bool] = None,
-) -> tuple[jax.Array, jax.Array]:
-    """Deprecated: use ``AshIndex.search(..., use_pallas=...)``."""
-    C.warn_deprecated(
-        "repro.serving.retrieval.retrieve",
-        "repro.index.AshIndex.search",
-    )
-    return serve_topk(
-        AshIndex.from_parts(model, payload), user_vecs, k=k,
-        use_pallas=use_pallas,
-    )
+    return serve_topk(index, u, k=k, engine=engine)

@@ -8,7 +8,7 @@ from jax.sharding import Mesh
 
 from repro.core import ASHConfig
 from repro.data.synthetic import embedding_dataset
-from repro.index import AshIndex, available_backends, flat, metrics
+from repro.index import AshIndex, available_backends, metrics
 from repro.index import distributed as DX
 
 METRICS = ("dot", "l2", "cos")
@@ -192,14 +192,16 @@ def test_sharded_rejects_rerank(setup):
         si.search(Qm, k=5, rerank=20)
 
 
-def test_deprecated_shims_still_work(setup):
+@pytest.mark.parametrize("backend", ("flat", "ivf", "sharded"))
+def test_search_prepped_matches_search(setup, backend):
+    """search(Q) and search_prepped(prepare(Q)) are the same compiled
+    arithmetic — bit-identical (the serving engine relies on this)."""
     X, Qm, cfg, model, kb = setup
-    with pytest.warns(DeprecationWarning):
-        legacy = flat.build(kb, X, cfg, model=model)
-    with pytest.warns(DeprecationWarning):
-        ls, lids = flat.search(legacy, Qm, k=10)
-    s, ids = _build(setup, "flat", "dot").search(Qm, k=10)
-    assert jnp.array_equal(lids, ids)
+    idx = _build(setup, backend, "l2")
+    s1, i1 = idx.search(Qm, k=10)
+    s2, i2 = idx.search_prepped(idx.prepare(Qm), k=10)
+    assert jnp.array_equal(s1, s2)
+    assert jnp.array_equal(i1, i2)
 
 
 def test_search_recall_sanity(setup):

@@ -1,0 +1,278 @@
+"""Micro-batching QueryEngine: bit-identical parity vs direct search,
+bucket/flush semantics, prep-cache accounting, trace reuse."""
+import jax
+import jax.numpy as jnp
+import numpy as onp
+import pytest
+
+from repro.core import ASHConfig
+from repro.data.synthetic import embedding_dataset
+from repro.index import AshIndex
+from repro.index import flat as F
+from repro.serving.engine import EngineConfig, QueryEngine
+
+BACKENDS = ("flat", "ivf", "sharded")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(99)
+    kx, kq, kb = jax.random.split(key, 3)
+    X = embedding_dataset(kx, 2500, 32)
+    Qm = embedding_dataset(kq, 48, 32)
+    cfg = ASHConfig(b=2, d=16, n_landmarks=8)
+    model = AshIndex.build(kb, X, cfg, backend="flat").model
+    indexes = {
+        "flat": AshIndex.build(kb, X, cfg, backend="flat", model=model,
+                               keep_raw=True),
+        "ivf": AshIndex.build(kb, X, cfg, backend="ivf", model=model,
+                              keep_raw=True),
+        "sharded": AshIndex.build(kb, X, cfg, backend="sharded",
+                                  model=model),
+    }
+    return X, Qm, indexes
+
+
+def _engine(indexes, **kw):
+    kw.setdefault("batch_buckets", (4, 16))
+    kw.setdefault("k_buckets", (8,))
+    kw.setdefault("max_wait_s", 60.0)  # flush explicitly in tests
+    return QueryEngine(indexes, **kw)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_parity_bit_identical(setup, backend):
+    """Batched+padded engine results == per-request direct search,
+    bit-for-bit (scores AND ids), cold and warm prep cache."""
+    X, Qm, indexes = setup
+    idx = indexes[backend]
+    kw = {"nprobe": 4} if backend == "ivf" else {}
+    eng = _engine({backend: idx})
+    for round_ in range(2):  # round 2 serves fully from the prep cache
+        sizes = [1, 3, 2, 5, 1]
+        offs = onp.cumsum([0] + sizes)
+        tickets = [
+            eng.submit(Qm[offs[i]:offs[i + 1]], k=7, index=backend, **kw)
+            for i in range(len(sizes))
+        ]
+        eng.flush()
+        for i, t in enumerate(tickets):
+            s, ids = t.result()
+            ds, di = idx.search(Qm[offs[i]:offs[i + 1]], k=7, **kw)
+            assert jnp.array_equal(jnp.asarray(s), ds), (backend, round_, i)
+            assert jnp.array_equal(jnp.asarray(ids), di), (backend, round_, i)
+    assert eng.stats.prep_hits > 0  # round 2 actually hit the cache
+
+
+@pytest.mark.parametrize("backend", ("flat", "ivf"))
+def test_parity_with_rerank(setup, backend):
+    X, Qm, indexes = setup
+    idx = indexes[backend]
+    kw = {"rerank": 30}
+    if backend == "ivf":
+        kw["nprobe"] = 4
+    eng = _engine({backend: idx})
+    t1 = eng.submit(Qm[:1], k=5, index=backend, **kw)
+    t2 = eng.submit(Qm[1:4], k=5, index=backend, **kw)
+    eng.flush()
+    for t, sl in ((t1, slice(0, 1)), (t2, slice(1, 4))):
+        s, ids = t.result()
+        ds, di = idx.search(Qm[sl], k=5, **kw)
+        assert jnp.array_equal(jnp.asarray(s), ds)
+        assert jnp.array_equal(jnp.asarray(ids), di)
+
+
+def test_mixed_k_share_one_bucket(setup):
+    """Different requested k ride one bucket (k padded to a k-bucket,
+    per-request prefix sliced) — one fused call, exact results."""
+    X, Qm, indexes = setup
+    eng = _engine({"flat": indexes["flat"]}, batch_buckets=(16,))
+    t1 = eng.submit(Qm[:2], k=3, index="flat")
+    t2 = eng.submit(Qm[2:5], k=8, index="flat")
+    eng.flush()
+    assert eng.stats.batches == 1
+    assert t1.result()[0].shape == (2, 3)
+    assert jnp.array_equal(
+        jnp.asarray(t1.result()[1]), indexes["flat"].search(Qm[:2], k=3)[1]
+    )
+    assert jnp.array_equal(
+        jnp.asarray(t2.result()[1]),
+        indexes["flat"].search(Qm[2:5], k=8)[1],
+    )
+
+
+def test_k_larger_than_n():
+    """k > index size clamps the fused call and pads results with the
+    missing-candidate sentinel (score -inf, id -1)."""
+    X = embedding_dataset(jax.random.PRNGKey(5), 30, 16)
+    idx = AshIndex.build(
+        jax.random.PRNGKey(0), X, ASHConfig(b=2, d=8, n_landmarks=2)
+    )
+    eng = _engine({"tiny": idx}, batch_buckets=(4,), k_buckets=(8,))
+    s, ids = eng.search(X[:2], k=50, index="tiny")
+    assert s.shape == (2, 50) and ids.shape == (2, 50)
+    assert (ids[:, 30:] == -1).all()
+    assert onp.isneginf(s[:, 30:]).all()
+    ds, di = idx.search(X[:2], k=30)
+    assert jnp.array_equal(jnp.asarray(ids[:, :30]), di)
+    assert jnp.array_equal(jnp.asarray(s[:, :30]), ds)
+
+
+def test_empty_flush_and_poll(setup):
+    X, Qm, indexes = setup
+    eng = _engine(indexes)
+    assert eng.flush() == 0
+    assert eng.poll() == 0
+    assert eng.pending_requests == 0
+
+
+def test_flush_on_size(setup):
+    X, Qm, indexes = setup
+    eng = _engine({"flat": indexes["flat"]}, batch_buckets=(4,))
+    tickets = [eng.submit(Qm[i:i + 1], k=5, index="flat")
+               for i in range(4)]
+    # 4 rows == largest bucket: flushed inside the last submit
+    assert all(t.done for t in tickets)
+    assert tickets[0].stats.flush_reason == "size"
+    assert tickets[0].stats.bucket_rows == 4
+
+
+def test_flush_on_timeout(setup):
+    X, Qm, indexes = setup
+    eng = _engine({"flat": indexes["flat"]}, batch_buckets=(64,),
+                  max_wait_s=0.0)
+    t = eng.submit(Qm[:1], k=5, index="flat")
+    eng.poll()
+    assert t.done
+    assert t.stats.flush_reason == "timeout"
+
+
+def test_bounded_queue_applies_backpressure(setup):
+    """Exceeding max_pending rows forces a serve — requests are never
+    dropped and the queue never grows past the bound."""
+    X, Qm, indexes = setup
+    eng = _engine({"flat": indexes["flat"]}, batch_buckets=(64,),
+                  max_pending=8)
+    t1 = eng.submit(Qm[:4], k=5, index="flat")
+    t2 = eng.submit(Qm[4:8], k=5, index="flat")
+    assert not t1.done  # still queued: bound not exceeded yet
+    t3 = eng.submit(Qm[8:12], k=5, index="flat")
+    assert t1.done and t2.done  # backpressure flush served the backlog
+    eng.flush()
+    assert t3.done
+
+
+def test_prep_cache_hit_miss_counts(setup):
+    X, Qm, indexes = setup
+    eng = _engine({"flat": indexes["flat"]}, batch_buckets=(4,))
+    t1 = eng.submit(Qm[:2], k=5, index="flat")
+    eng.flush()
+    assert t1.stats.prep_hits == 0 and t1.stats.prep_misses == 2
+    t2 = eng.submit(Qm[:2], k=5, index="flat")  # identical rows
+    t3 = eng.submit(Qm[2:3], k=5, index="flat")  # fresh row
+    eng.flush()
+    assert t2.stats.prep_hits == 2 and t2.stats.prep_misses == 0
+    assert t3.stats.prep_hits == 0 and t3.stats.prep_misses == 1
+    assert eng.stats.prep_hits == 2
+    assert eng.stats.prep_misses == 3
+    # results served off cached preps are still exact
+    assert jnp.array_equal(
+        jnp.asarray(t2.result()[1]), jnp.asarray(t1.result()[1])
+    )
+
+
+def test_prep_cache_disabled_and_eviction(setup):
+    X, Qm, indexes = setup
+    eng = _engine({"flat": indexes["flat"]}, prep_cache_entries=0)
+    eng.search(Qm[:2], k=5, index="flat")
+    eng.search(Qm[:2], k=5, index="flat")
+    assert eng.stats.prep_hits == 0 and eng.stats.prep_misses == 4
+    eng = _engine({"flat": indexes["flat"]}, batch_buckets=(4,),
+                  prep_cache_entries=2)
+    eng.search(Qm[:4], k=5, index="flat")
+    assert len(eng._prep_cache) == 2  # LRU evicted down to the bound
+
+
+def test_trace_reuse_across_requests(setup):
+    """Many requests of novel shapes ride ONE jit trace per bucket: the
+    underlying compiled-call cache grows by at most the bucket count,
+    not per request."""
+    X, Qm, indexes = setup
+    eng = _engine({"flat": indexes["flat"]}, batch_buckets=(8,))
+    before = F._search_prepped._cache_size()
+    for i in range(12):  # request shapes 1..4 rows, all pad to bucket 8
+        eng.submit(Qm[i:i + 1 + (i % 4)], k=5, index="flat")
+    eng.flush()
+    after = F._search_prepped._cache_size()
+    assert eng.stats.batches >= 3  # several fused calls actually ran
+    assert after - before <= 1  # ... through at most ONE new trace
+    assert len(eng.stats.compiled_buckets) == 1
+
+
+def test_multi_index_routing(setup):
+    """One engine fronts several tenant indexes; requests route by
+    name and never cross-contaminate."""
+    X, Qm, indexes = setup
+    eng = _engine(indexes)
+    tf = eng.submit(Qm[:2], k=5, index="flat")
+    ti = eng.submit(Qm[:2], k=5, index="ivf", nprobe=4)
+    ts = eng.submit(Qm[:2], k=5, index="sharded")
+    eng.flush()
+    assert jnp.array_equal(
+        jnp.asarray(tf.result()[1]), indexes["flat"].search(Qm[:2], k=5)[1]
+    )
+    assert jnp.array_equal(
+        jnp.asarray(ti.result()[1]),
+        indexes["ivf"].search(Qm[:2], k=5, nprobe=4)[1],
+    )
+    assert jnp.array_equal(
+        jnp.asarray(ts.result()[1]),
+        indexes["sharded"].search(Qm[:2], k=5)[1],
+    )
+    with pytest.raises(KeyError, match="unknown index"):
+        eng.submit(Qm[:1], k=5, index="nope")
+
+
+def test_request_stats_populated(setup):
+    X, Qm, indexes = setup
+    eng = _engine({"flat": indexes["flat"]})
+    t = eng.submit(Qm[:3], k=5, index="flat")
+    eng.flush()
+    st = t.stats
+    assert st.queue_wait_s >= 0.0
+    assert st.batch_rows == 3 and st.bucket_rows == 4
+    assert st.scoring_us > 0.0
+    assert st.flush_reason == "manual"
+
+
+def test_oversized_request_rides_alone(setup):
+    """A request larger than the largest bucket pads to a multiple of
+    it (closed shape set) and still returns exact results."""
+    X, Qm, indexes = setup
+    idx = indexes["flat"]
+    eng = _engine({"flat": idx}, batch_buckets=(8,))
+    s, ids = eng.search(Qm[:20], k=5, index="flat")
+    ds, di = idx.search(Qm[:20], k=5)
+    assert jnp.array_equal(jnp.asarray(s), ds)
+    assert jnp.array_equal(jnp.asarray(ids), di)
+    assert t_bucket(eng) == 24
+    assert eng.stats.padded_rows == 4
+
+
+def t_bucket(eng):
+    (entry,) = eng.stats.compiled_buckets
+    return entry[2]
+
+
+def test_sharded_rejects_rerank_at_submit(setup):
+    X, Qm, indexes = setup
+    eng = _engine(indexes)
+    with pytest.raises(ValueError, match="rerank"):
+        eng.submit(Qm[:1], k=5, index="sharded", rerank=10)
+
+
+def test_engine_config_validation():
+    with pytest.raises(ValueError, match="ascending"):
+        EngineConfig(batch_buckets=(32, 8))
+    with pytest.raises(ValueError, match="non-empty"):
+        EngineConfig(batch_buckets=())

@@ -7,8 +7,8 @@ from jax.sharding import Mesh
 
 from repro.core import ASHConfig
 from repro.data.synthetic import embedding_dataset
+from repro.index import AshIndex, metrics
 from repro.index import distributed as DX
-from repro.index import flat, ivf, metrics
 
 
 @pytest.fixture(scope="module")
@@ -24,11 +24,11 @@ def setup():
 
 def test_flat_recall_and_rerank(setup):
     X, Qm, gt_i, cfg, kb = setup
-    idx = flat.build(kb, X, cfg, keep_raw=True)
-    s, i = flat.search(idx, Qm, k=100)
+    idx = AshIndex.build(kb, X, cfg, keep_raw=True)
+    s, i = idx.search(Qm, k=100)
     r100 = float(metrics.recall_at(i, gt_i))
     assert r100 > 0.9, r100
-    s, i = flat.search(idx, Qm, k=10, rerank=100)
+    s, i = idx.search(Qm, k=10, rerank=100)
     # exact rerank of the 100-shortlist recovers ~recall@100 at k=10
     # (bf16 raw vectors can flip near-ties)
     assert float(metrics.recall_at(i, gt_i)) >= r100 - 0.02
@@ -37,18 +37,18 @@ def test_flat_recall_and_rerank(setup):
 def test_flat_l2_and_cos_metrics(setup):
     X, Qm, gt_i, cfg, kb = setup
     for metric in ("l2", "cos"):
-        idx = flat.build(kb, X, cfg, metric=metric)
-        s, i = flat.search(idx, Qm, k=100)
+        idx = AshIndex.build(kb, X, cfg, metric=metric)
+        s, i = idx.search(Qm, k=100)
         gt = metrics.exact_topk(Qm, X, k=10, metric=metric)[1]
         assert float(metrics.recall_at(i, gt)) > 0.85
 
 
 def test_ivf_nprobe_monotone(setup):
     X, Qm, gt_i, cfg, kb = setup
-    idx = ivf.build(kb, X, cfg)
+    idx = AshIndex.build(kb, X, cfg, backend="ivf")
     recalls = []
     for nprobe in (2, 8, 32):
-        s, i = ivf.search(idx, Qm, k=100, nprobe=nprobe)
+        s, i = idx.search(Qm, k=100, nprobe=nprobe)
         recalls.append(float(metrics.recall_at(i, gt_i)))
     assert recalls == sorted(recalls), recalls
     assert recalls[-1] > 0.85
@@ -57,10 +57,10 @@ def test_ivf_nprobe_monotone(setup):
 def test_ivf_full_probe_matches_flat(setup):
     """nprobe == nlist must equal exhaustive scan recall."""
     X, Qm, gt_i, cfg, kb = setup
-    fidx = flat.build(kb, X, cfg)
-    iidx = ivf.build(kb, X, cfg)
-    _, fi = flat.search(fidx, Qm, k=50)
-    _, ii = ivf.search(iidx, Qm, k=50, nprobe=32)
+    fidx = AshIndex.build(kb, X, cfg)
+    iidx = AshIndex.build(kb, X, cfg, backend="ivf")
+    _, fi = fidx.search(Qm, k=50)
+    _, ii = iidx.search(Qm, k=50, nprobe=32)
     rf = float(metrics.recall_at(fi, gt_i))
     ri = float(metrics.recall_at(ii, gt_i))
     assert abs(rf - ri) < 0.05, (rf, ri)
@@ -68,8 +68,8 @@ def test_ivf_full_probe_matches_flat(setup):
 
 def test_distributed_search_matches_flat(setup):
     X, Qm, gt_i, cfg, kb = setup
-    fidx = flat.build(kb, X, cfg)
-    _, fi = flat.search(fidx, Qm, k=10)
+    fidx = AshIndex.build(kb, X, cfg)
+    _, fi = fidx.search(Qm, k=10)
     mesh = Mesh(onp.array(jax.devices()).reshape(1, 1), ("data", "model"))
     pay = DX.shard_payload(
         mesh, DX.pad_to_multiple(fidx.payload, 1), ("data", "model")
@@ -81,7 +81,7 @@ def test_distributed_search_matches_flat(setup):
 
 def test_pad_to_multiple_never_wins(setup):
     X, Qm, gt_i, cfg, kb = setup
-    fidx = flat.build(kb, X[:100], cfg)
+    fidx = AshIndex.build(kb, X[:100], cfg)
     padded = DX.pad_to_multiple(fidx.payload, 64)
     assert padded.n == 128
     from repro.core import prepare_queries, score_dot

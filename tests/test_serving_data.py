@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.data import graphs as G
 from repro.data.synthetic import (
@@ -17,17 +16,19 @@ def test_ash_retrieval_recall():
     key = jax.random.PRNGKey(0)
     items = embedding_dataset(key, 5000, 64, normalize=False)
     users = embedding_dataset(jax.random.PRNGKey(1), 16, 64)
-    model, payload = RET.build_candidate_index(
+    index = RET.build_index(
         jax.random.PRNGKey(2), items, bits=4, reduce=2, n_landmarks=16
     )
-    _, ids = RET.retrieve(model, payload, users, k=100, use_pallas=False)
+    _, ids = RET.serve_topk(index, users, k=100, use_pallas=False)
     _, gt = MET.exact_topk(users, items, k=10)
-    assert float(MET.recall_at(ids, gt)) > 0.9
+    assert float(MET.recall_at(jnp.asarray(ids), gt)) > 0.9
     # kernel path agrees
-    _, ids_k = RET.retrieve(model, payload, users, k=100, use_pallas=True)
-    r1 = float(MET.recall_at(ids, gt))
-    r2 = float(MET.recall_at(ids_k, gt))
+    _, ids_k = RET.serve_topk(index, users, k=100, use_pallas=True)
+    r1 = float(MET.recall_at(jnp.asarray(ids), gt))
+    r2 = float(MET.recall_at(jnp.asarray(ids_k), gt))
     assert abs(r1 - r2) < 0.02
+    # serve_topk routes through the cached per-index engine
+    assert RET.engine_for(index).stats.requests >= 2
 
 
 def test_sasrec_end_to_end_retrieval():
@@ -37,15 +38,14 @@ def test_sasrec_end_to_end_retrieval():
                           n_neg=32)
     params = SR.init_params(jax.random.PRNGKey(0), cfg)
     seq = jax.random.randint(jax.random.PRNGKey(1), (4, 10), 1, 2000)
-    model, payload = RET.build_candidate_index(
+    index = RET.build_index(
         jax.random.PRNGKey(2), params["item_emb"], bits=8, reduce=1,
         n_landmarks=8,
     )
-    scores, ids = RET.sasrec_retrieve(params, seq, model, payload, cfg,
-                                      k=50)
+    scores, ids = RET.sasrec_retrieve(params, seq, index, cfg, k=50)
     exact = SR.retrieval_score(params, seq, jnp.arange(2000), cfg)
     _, gt = jax.lax.top_k(exact, 10)
-    assert float(MET.recall_at(ids, gt)) > 0.85
+    assert float(MET.recall_at(jnp.asarray(ids), gt)) > 0.85
 
 
 def test_token_stream_determinism_and_structure():

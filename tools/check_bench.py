@@ -1,0 +1,71 @@
+"""CI gate over benchmark JSON emitted by ``benchmarks.run --json``.
+
+  python tools/check_bench.py bench.json BENCH_*.json
+
+Fails (exit 1) when a file is missing/malformed, contains no rows, or
+carries ERROR rows — so a benchmark function silently dying turns CI
+red instead of quietly truncating the perf trajectory.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+EXPECTED_SCHEMA = 1
+ROW_KEYS = {"name", "us_per_call", "derived", "error"}
+
+
+def _rows_of(doc: dict, path: str) -> list:
+    if "groups" in doc:  # combined file from --json OUT
+        rows = [r for g in doc["groups"].values() for r in g]
+    else:  # per-group BENCH_<group>.json
+        rows = doc.get("rows", [])
+    if not isinstance(rows, list):
+        raise ValueError(f"{path}: rows is not a list")
+    return rows
+
+
+def check(path: str) -> list[str]:
+    """Problems found in one bench JSON file ([] == healthy)."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable ({e})"]
+    problems = []
+    if doc.get("schema_version") != EXPECTED_SCHEMA:
+        problems.append(
+            f"{path}: schema_version {doc.get('schema_version')!r} "
+            f"!= {EXPECTED_SCHEMA}"
+        )
+    try:
+        rows = _rows_of(doc, path)
+    except ValueError as e:
+        return problems + [str(e)]
+    if not rows:
+        problems.append(f"{path}: no benchmark rows")
+    for r in rows:
+        if not isinstance(r, dict) or not ROW_KEYS <= set(r):
+            problems.append(f"{path}: malformed row {r!r}")
+        elif r["error"] is not None:
+            problems.append(
+                f"{path}: ERROR row {r['name']}: {r['error']}"
+            )
+    return problems
+
+
+def main(argv: list[str]) -> int:
+    paths = argv or ["bench.json"]
+    problems = []
+    for path in paths:
+        problems.extend(check(path))
+    for p in problems:
+        print(f"FAIL {p}")
+    if problems:
+        return 1
+    print(f"OK {len(paths)} file(s) clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
