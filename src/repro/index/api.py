@@ -210,21 +210,25 @@ class IVFBackend:
         return IV._assemble(metric, model, payload, ids, raw)
 
     @staticmethod
-    def _resolve_nprobe(state, nprobe):
+    def resolve_nprobe(state, nprobe):
+        """Effective nprobe: default applied, clamped to the invlist
+        count.  Public so the serving engine can normalize request
+        nprobe before grouping (distinct values above nlist route
+        identically and must share one group/trace)."""
         if nprobe is None:
             nprobe = IVFBackend.default_nprobe
         return min(nprobe, state.invlists.shape[0])
 
     @staticmethod
     def search(state, queries, *, k, nprobe=None, rerank=0, **opts):
-        nprobe = IVFBackend._resolve_nprobe(state, nprobe)
+        nprobe = IVFBackend.resolve_nprobe(state, nprobe)
         return IV._search(
             state, queries, k=k, nprobe=nprobe, rerank=rerank, **opts
         )
 
     @staticmethod
     def search_prepped(state, prep, *, k, nprobe=None, rerank=0, **opts):
-        nprobe = IVFBackend._resolve_nprobe(state, nprobe)
+        nprobe = IVFBackend.resolve_nprobe(state, nprobe)
         return IV._search_prepped(
             state, prep, k=k, nprobe=nprobe, rerank=rerank, **opts
         )

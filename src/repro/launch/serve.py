@@ -90,18 +90,17 @@ def main(argv=None):
     )
     search_kw = dict(nprobe=args.nprobe, rerank=args.rerank)
 
-    # warmup on a throwaway engine: compiles the size-flush trace (the
-    # steady-state shape) without pre-warming the timed engine's prep
-    # cache or polluting its stats
+    # warmup on a throwaway engine: compile EVERY bucket shape the
+    # stream can hit (steady-state size flushes AND whatever bucket the
+    # final remainder pads to) without pre-warming the timed engine's
+    # prep cache or polluting its stats — a trace compiled inside the
+    # timed window would be charged to QPS/p99
     warm = QueryEngine(
         index, batch_buckets=buckets,
         max_wait_s=args.max_wait_ms / 1e3,
     )
-    for _ in range(max(1, buckets[-1] // args.req_batch)):
-        warm.submit(Q[: args.req_batch], k=100, **search_kw)
-    warm.flush()
-    # ... and the small bucket the stream's remainder lands in
-    warm.search(Q[: args.req_batch], k=100, **search_kw)
+    for b in buckets:
+        warm.search(Q[: min(b, args.queries)], k=100, **search_kw)
     t0 = time.time()
     tickets = [
         engine.submit(Q[i:i + args.req_batch], k=100, **search_kw)

@@ -22,11 +22,18 @@ Mechanics:
   configured batch bucket (queries pad with zeros, results for pad rows
   are discarded); requested ``k`` is padded to a ``k`` bucket and each
   request takes its first ``k`` columns (top-k prefixes are exact).
-  Mixed-``k`` requests therefore share one bucket and one trace.
+  Mixed-``k`` requests therefore share one bucket and one trace — except
+  under ``rerank``, where the direct path's shortlist is
+  ``max(rerank, k)``: requests group by that size (and the padded ``k``
+  is clamped to it) so the fused call reranks the exact same candidate
+  set as a per-request call would.
 * **Queue** — bounded by ``max_pending`` rows; a group flushes when it
   can fill the largest bucket ("size"), when its oldest request exceeds
-  ``max_wait_s`` ("timeout", checked on submit/poll), or explicitly
-  ("manual").
+  ``max_wait_s`` ("timeout", checked on submit/poll), under queue
+  pressure ("pressure"), or explicitly ("manual").  Flushes triggered
+  inside ``submit`` never raise — a failing fused call resolves every
+  affected ticket with the error, re-raised by that ticket's
+  ``result()``.
 * **Prep cache** — per-query-row LRU over the QUERY-COMPUTE projections
   (``prepare_queries``): repeated queries skip the projection matmuls
   entirely.  Keyed by (index name, query-row hash); row preps are exact,
@@ -107,7 +114,7 @@ class RequestStats:
     scoring_us: float = 0.0  # fused scoring call, whole bucket
     prep_hits: int = 0  # this request's rows found in the prep cache
     prep_misses: int = 0
-    flush_reason: str = ""  # "size" | "timeout" | "manual"
+    flush_reason: str = ""  # "size" | "timeout" | "manual" | "pressure"
 
 
 @dataclasses.dataclass
@@ -121,7 +128,9 @@ class EngineStats:
     prep_hits: int = 0
     prep_misses: int = 0
     flushes: Dict[str, int] = dataclasses.field(
-        default_factory=lambda: {"size": 0, "timeout": 0, "manual": 0}
+        default_factory=lambda: {
+            "size": 0, "timeout": 0, "manual": 0, "pressure": 0
+        }
     )
     # distinct (index, bucket, k, params) combinations that ran — the
     # engine-side upper bound on jit traces of the scoring call
@@ -259,6 +268,13 @@ class QueryEngine:
             q = q[None, :]
         if q.ndim != 2:
             raise ValueError(f"queries must be (m, D) or (D,): {q.shape}")
+        dim = idx.model.landmarks.shape[1]
+        if q.shape[1] != dim:
+            # reject here: a mismatched row would join the group and
+            # blow up mid-flush, taking unrelated requests with it
+            raise ValueError(
+                f"query dim {q.shape[1]} != index {index!r} dim {dim}"
+            )
         if k < 1:
             raise ValueError(f"k must be >= 1: {k}")
         backend = idx.backend
@@ -268,18 +284,27 @@ class QueryEngine:
             )
         if backend != "ivf":
             nprobe = None  # only IVF routes coarsely; don't split groups
-        elif nprobe is None:
-            # normalize to the backend default so nprobe=None and an
-            # explicit default value share one group/bucket/trace
-            nprobe = IVFBackend.default_nprobe
-        group = (index, nprobe, rerank, tuple(sorted(opts.items())))
+        else:
+            # normalize to the effective value (default applied, clamped
+            # to the invlist count) so nprobe=None, the explicit default
+            # and any over-large value share one group/bucket/trace
+            nprobe = IVFBackend.resolve_nprobe(idx._state, nprobe)
+        # rerank requests must reproduce the direct path's shortlist of
+        # max(rerank, k) candidates, so that size is part of the group
+        # key and _run_batch clamps k_run to it.  Requests with
+        # rerank >= k all share one group (shortlist == rerank); a
+        # request with rerank < k gets its own (shortlist == its k) —
+        # mixed-k groups there cannot share a fused call bit-identically.
+        shortlist = max(rerank, k) if rerank else None
+        group = (index, nprobe, rerank, shortlist,
+                 tuple(sorted(opts.items())))
 
         # bounded queue: free space by serving, never by dropping
         if (
             self._pending_rows + q.shape[0] > self.config.max_pending
             and self._pending_rows > 0
         ):
-            self.flush()
+            self._try_flush(self._flush_all, "pressure")
 
         ticket = Ticket(self, group, k, q.shape[0])
         self._pending.setdefault(group, []).append(
@@ -294,9 +319,9 @@ class QueryEngine:
         ):
             # bucket fillable, or a single request alone exceeds the
             # queue bound: serve now rather than sit past max_pending
-            self._flush_group(group, "size")
+            self._try_flush(self._flush_group, group, "size")
         else:
-            self.poll()
+            self._try_flush(self.poll)
         return ticket
 
     def search(self, queries, k: int = 10, **kw):
@@ -321,10 +346,25 @@ class QueryEngine:
     def flush(self) -> int:
         """Serve everything queued, now.  Returns requests completed;
         an empty flush is a no-op returning 0."""
+        return self._flush_all("manual")
+
+    def _flush_all(self, reason: str) -> int:
         done = 0
         for group in list(self._pending):
-            done += self._flush_group(group, "manual")
+            done += self._flush_group(group, reason)
         return done
+
+    @staticmethod
+    def _try_flush(fn, *args) -> None:
+        """Run a flush triggered from inside ``submit`` without letting
+        its errors escape: the caller must always receive its Ticket,
+        and a failing fused call (possibly an unrelated group's) already
+        resolved every affected ticket with the error — delivered when
+        that ticket's ``result()`` is called."""
+        try:
+            fn(*args)
+        except Exception:
+            pass
 
     @property
     def pending_requests(self) -> int:
@@ -372,16 +412,27 @@ class QueryEngine:
     def _run_batch(
         self, group: tuple, reqs: "list[_Request]", reason: str
     ) -> None:
-        name, nprobe, rerank, opts = group
+        name, nprobe, rerank, shortlist, opts = group
         idx = self._indexes[name]
-        rows = np.concatenate([r.queries for r in reqs], axis=0)
-        n_real = rows.shape[0]
-        bucket = _bucketize(self.config.batch_buckets, n_real)
-        rows = _pad_rows(rows, bucket)
-        k_max = max(r.k for r in reqs)
-        k_run = min(_bucketize(self.config.k_buckets, k_max), idx.n)
-
         try:
+            rows = np.concatenate([r.queries for r in reqs], axis=0)
+            n_real = rows.shape[0]
+            bucket = _bucketize(self.config.batch_buckets, n_real)
+            rows = _pad_rows(rows, bucket)
+            k_max = max(r.k for r in reqs)
+            k_run = min(
+                _bucketize(self.config.k_buckets, k_max), idx.n
+            )
+            if shortlist is not None:
+                # rerank: the backend's shortlist is max(rerank, k_run);
+                # the direct path's is max(rerank, k).  Every request in
+                # this group shares shortlist == max(rerank, its k)
+                # >= k_max (the group key guarantees it), so clamping
+                # k_run keeps the fused call's shortlist — hence its
+                # rerank candidates and results — bit-identical to
+                # per-request search.
+                k_run = min(k_run, shortlist)
+
             prep, hit_rows = self._prep_for(name, idx, rows, n_real)
             t_score = time.perf_counter()  # after prep/hash: the stat
             scores, ids = jax.block_until_ready(  # is the fused call
@@ -392,8 +443,9 @@ class QueryEngine:
             )
         except Exception as e:
             # resolve every ticket with the error (a later result()
-            # re-raises it) before surfacing at the flush site — which
-            # may be an unrelated caller's submit()/poll()
+            # re-raises it) before surfacing at the flush site — an
+            # explicit flush()/poll(); submit-triggered flushes swallow
+            # it (_try_flush) so the caller still gets its Ticket
             for r in reqs:
                 r.ticket._error = e
             raise
@@ -472,8 +524,10 @@ class QueryEngine:
             return self._stack_prep(row_preps), hit_rows
         if len(miss) == bucket:
             # cold bucket: one prepare over the padded rows, no restack
+            # (only real rows are cached — pad rows recur only while
+            # buckets run underfilled and would waste LRU capacity)
             prep = jax.block_until_ready(idx.prepare(jnp.asarray(rows)))
-            self._cache_prep_rows(keys, prep, range(bucket))
+            self._cache_prep_rows(keys, prep, range(n_real))
             return prep, hit_rows
         # warm bucket: prepare only the misses (padded to a bucket shape
         # so prepare traces stay bounded), then merge with cached rows
@@ -485,7 +539,7 @@ class QueryEngine:
         for j, i in enumerate(miss):
             row_preps[i] = tuple(a[j] for a in mp_np)
         self._prep_cache.update(
-            (keys[i], row_preps[i]) for i in miss
+            (keys[i], row_preps[i]) for i in miss if i < n_real
         )
         self._evict()
         return self._stack_prep(row_preps), hit_rows

@@ -65,19 +65,48 @@ def test_parity_bit_identical(setup, backend):
 
 
 @pytest.mark.parametrize("backend", ("flat", "ivf"))
-def test_parity_with_rerank(setup, backend):
+@pytest.mark.parametrize(
+    "k,rerank,k_buckets",
+    [
+        (5, 30, (8,)),  # shortlist (rerank) beyond the k bucket
+        (5, 6, (8,)),  # shortlist below the k bucket
+        (20, 50, (10, 100)),  # k pads to 100 > rerank: the bucketized
+        # k must not widen the shortlist past the direct path's
+        # max(rerank, k) (regression: this returned different ids)
+    ],
+)
+def test_parity_with_rerank(setup, backend, k, rerank, k_buckets):
     X, Qm, indexes = setup
     idx = indexes[backend]
-    kw = {"rerank": 30}
+    kw = {"rerank": rerank}
     if backend == "ivf":
         kw["nprobe"] = 4
-    eng = _engine({backend: idx})
-    t1 = eng.submit(Qm[:1], k=5, index=backend, **kw)
-    t2 = eng.submit(Qm[1:4], k=5, index=backend, **kw)
+    eng = _engine({backend: idx}, k_buckets=k_buckets)
+    t1 = eng.submit(Qm[:1], k=k, index=backend, **kw)
+    t2 = eng.submit(Qm[1:4], k=k, index=backend, **kw)
     eng.flush()
+    assert eng.stats.batches == 1  # same shortlist: one fused call
     for t, sl in ((t1, slice(0, 1)), (t2, slice(1, 4))):
         s, ids = t.result()
-        ds, di = idx.search(Qm[sl], k=5, **kw)
+        ds, di = idx.search(Qm[sl], k=k, **kw)
+        assert jnp.array_equal(jnp.asarray(s), ds)
+        assert jnp.array_equal(jnp.asarray(ids), di)
+
+
+def test_rerank_mixed_k_groups_by_shortlist(setup):
+    """rerank < k requests need a shortlist of exactly their k, so each
+    distinct max(rerank, k) forms its own group/fused call — and every
+    request still matches per-request search bit-for-bit."""
+    X, Qm, indexes = setup
+    idx = indexes["flat"]
+    eng = _engine({"flat": idx})
+    t1 = eng.submit(Qm[:2], k=4, index="flat", rerank=2)
+    t2 = eng.submit(Qm[2:5], k=7, index="flat", rerank=2)
+    eng.flush()
+    assert eng.stats.batches == 2  # shortlists 4 and 7 cannot fuse
+    for t, sl, k in ((t1, slice(0, 2), 4), (t2, slice(2, 5), 7)):
+        s, ids = t.result()
+        ds, di = idx.search(Qm[sl], k=k, rerank=2)
         assert jnp.array_equal(jnp.asarray(s), ds)
         assert jnp.array_equal(jnp.asarray(ids), di)
 
@@ -158,8 +187,13 @@ def test_bounded_queue_applies_backpressure(setup):
     assert not t1.done  # still queued: bound not exceeded yet
     t3 = eng.submit(Qm[8:12], k=5, index="flat")
     assert t1.done and t2.done  # backpressure flush served the backlog
+    # queue-pressure flushes are their own telemetry bucket, distinct
+    # from explicit flush() calls
+    assert t1.stats.flush_reason == "pressure"
+    assert eng.stats.flushes["pressure"] == 1
     eng.flush()
     assert t3.done
+    assert t3.stats.flush_reason == "manual"
 
 
 def test_prep_cache_hit_miss_counts(setup):
@@ -191,6 +225,66 @@ def test_prep_cache_disabled_and_eviction(setup):
                   prep_cache_entries=2)
     eng.search(Qm[:4], k=5, index="flat")
     assert len(eng._prep_cache) == 2  # LRU evicted down to the bound
+
+
+def test_pad_rows_not_cached(setup):
+    """Zero-pad rows of an underfilled bucket never enter the prep
+    cache — LRU capacity is spent on real queries only."""
+    X, Qm, indexes = setup
+    eng = _engine({"flat": indexes["flat"]}, batch_buckets=(4,))
+    eng.search(Qm[:2], k=5, index="flat")  # cold: 2 real + 2 pad rows
+    assert len(eng._prep_cache) == 2
+    # warm: Qm[1] hits, Qm[2] misses, 2 pad rows miss but stay uncached
+    eng.search(Qm[1:3], k=5, index="flat")
+    assert len(eng._prep_cache) == 3
+
+
+def test_ivf_nprobe_clamps_before_grouping(setup):
+    """nprobe values at/above nlist route identically, so they must
+    share one group and one trace (nlist == 8 in this setup)."""
+    X, Qm, indexes = setup
+    idx = indexes["ivf"]
+    eng = _engine({"ivf": idx}, batch_buckets=(16,))
+    t1 = eng.submit(Qm[:2], k=5, index="ivf", nprobe=8)
+    t2 = eng.submit(Qm[2:4], k=5, index="ivf", nprobe=1000)
+    t3 = eng.submit(Qm[4:6], k=5, index="ivf")  # default, also clamped
+    eng.flush()
+    assert eng.stats.batches == 1
+    assert len(eng.stats.compiled_buckets) == 1
+    s, ids = t2.result()
+    ds, di = idx.search(Qm[2:4], k=5, nprobe=1000)
+    assert jnp.array_equal(jnp.asarray(s), ds)
+    assert jnp.array_equal(jnp.asarray(ids), di)
+    assert t1.done and t3.done
+
+
+def test_submit_rejects_mismatched_query_dim(setup):
+    """A query whose width differs from the index dim is rejected at
+    submit — inside a group it would fail the whole fused call and take
+    unrelated requests down with it."""
+    X, Qm, indexes = setup
+    eng = _engine({"flat": indexes["flat"]})
+    with pytest.raises(ValueError, match="dim"):
+        eng.submit(onp.zeros((1, 16), onp.float32), k=5, index="flat")
+    assert eng.pending_requests == 0
+
+
+def test_submit_survives_failing_flush(setup):
+    """A flush triggered inside submit() must not swallow the caller's
+    Ticket: the error is delivered by the failing request's result(),
+    and unrelated requests keep working."""
+    X, Qm, indexes = setup
+    eng = _engine({"flat": indexes["flat"]}, max_wait_s=0.0)
+    bad = eng.submit(Qm[:1], k=5, index="flat", bogus=True)
+    assert bad.done  # timeout-flushed (and failed) inside submit
+    good = eng.submit(Qm[:2], k=5, index="flat")
+    eng.poll()
+    s, ids = good.result()
+    assert jnp.array_equal(
+        jnp.asarray(ids), indexes["flat"].search(Qm[:2], k=5)[1]
+    )
+    with pytest.raises(RuntimeError, match="fused scoring call"):
+        bad.result()
 
 
 def test_trace_reuse_across_requests(setup):
