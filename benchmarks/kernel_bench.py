@@ -3,16 +3,21 @@ the roofline analysis — kernels only interpret on CPU).
 
 Contrasts the ASH matmul-style scoring against PQ's gather-style ADC —
 the Table 2/3 comparison transplanted to this backend — plus the packed
--code memory footprint that drives the TPU HBM roofline term.
+-code memory footprint that drives the TPU HBM roofline term, and the
+fused metric/selection paths (``kernels.ops`` epilogue form, the jnp
+oracle of the Pallas kernels) against their pure-jnp reference
+counterparts.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import D, dataset, row, timed
 from repro.baselines import pq
-from repro.core import ASHConfig, encode, prepare_queries, train
+from repro.core import ASHConfig, encode, payload_stats, prepare_queries, train
 from repro.core import scoring as S
 from repro.kernels import ops
 
@@ -55,4 +60,51 @@ def scoring_paths():
     return rows
 
 
-ALL = [scoring_paths]
+def fused_metric_paths():
+    """Fused l2/cos epilogues and fused top-k selection vs the jnp
+    reference scorers + materialize-then-top_k (both sides jitted)."""
+    X, Qm, _ = dataset()
+    rows = []
+    cfg = ASHConfig(b=2, d=D, n_landmarks=16)
+    model, _ = train(jax.random.PRNGKey(0), X, cfg)
+    pay = encode(model, X)
+    prep = prepare_queries(model, Qm)
+    stats = payload_stats(model, pay)
+    n_scores = Qm.shape[0] * X.shape[0]
+
+    refs = {
+        "l2": jax.jit(lambda: -S.score_l2(model, prep, pay)),
+        "cos": jax.jit(lambda: S.score_cosine(model, prep, pay)),
+    }
+    for metric in ("l2", "cos"):
+        _, us = timed(refs[metric], repeats=3)
+        rows.append(row(f"kernel/ash_score_{metric}_jnp", us,
+                        f"ns_per_dot={1e3 * us / n_scores:.3f}"))
+        fused = jax.jit(functools.partial(
+            ops.ash_score, model, prep, pay, metric=metric, stats=stats,
+            use_pallas=False,
+        ))
+        _, us_f = timed(fused, repeats=3)
+        rows.append(row(f"kernel/ash_score_{metric}_fused", us_f,
+                        f"ns_per_dot={1e3 * us_f / n_scores:.3f};"
+                        f"speedup_vs_jnp={us / max(us_f, 1e-9):.2f}x"))
+
+    k = 100
+    mat = jax.jit(lambda: jax.lax.top_k(
+        ops.ash_score(model, prep, pay, metric="l2", stats=stats,
+                      use_pallas=False), k))
+    _, us_m = timed(mat, repeats=3)
+    rows.append(row("kernel/ash_score_topk_materialize", us_m,
+                    f"k={k};ns_per_dot={1e3 * us_m / n_scores:.3f}"))
+    fused_tk = jax.jit(functools.partial(
+        ops.ash_score_topk, model, prep, pay, k, metric="l2",
+        stats=stats, use_pallas=False,
+    ))
+    _, us_t = timed(fused_tk, repeats=3)
+    rows.append(row("kernel/ash_score_topk_fused", us_t,
+                    f"k={k};ns_per_dot={1e3 * us_t / n_scores:.3f};"
+                    f"speedup_vs_materialize={us_m / max(us_t, 1e-9):.2f}x"))
+    return rows
+
+
+ALL = [scoring_paths, fused_metric_paths]

@@ -1,11 +1,14 @@
 """ASH core: the paper's contribution as a composable JAX module."""
-from repro.core.types import ASHConfig, ASHModel, ASHPayload, QueryPrep
+from repro.core.types import (
+    ASHConfig, ASHModel, ASHPayload, ASHStats, QueryPrep,
+)
 from repro.core import quantization
 from repro.core import learning
 from repro.core import ash
 from repro.core import scoring
 from repro.core.ash import train, encode, decode, random_model
 from repro.core.scoring import (
+    payload_stats,
     prepare_queries,
     score_dot,
     score_dot_1bit,
@@ -15,9 +18,9 @@ from repro.core.scoring import (
 )
 
 __all__ = [
-    "ASHConfig", "ASHModel", "ASHPayload", "QueryPrep",
+    "ASHConfig", "ASHModel", "ASHPayload", "ASHStats", "QueryPrep",
     "quantization", "learning", "ash", "scoring",
     "train", "encode", "decode", "random_model",
-    "prepare_queries", "score_dot", "score_dot_1bit",
+    "payload_stats", "prepare_queries", "score_dot", "score_dot_1bit",
     "score_l2", "score_cosine", "score_symmetric_dot",
 ]

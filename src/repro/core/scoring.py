@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import quantization as Q
-from repro.core.types import ASHModel, ASHPayload, QueryPrep
+from repro.core.types import ASHModel, ASHPayload, ASHStats, QueryPrep
 
 _EPS = 1e-12
 
@@ -41,11 +41,13 @@ def prepare_queries(model: ASHModel, q: jax.Array) -> QueryPrep:
 # ---------------------------------------------------------------------------
 
 
-def recovered_terms(model: ASHModel, payload: ASHPayload):
-    """Recover (V float, ||v||, ||x-mu*||, <x, mu*>) from the payload."""
-    V = Q.unpack_codes(payload.codes, payload.d, payload.b).astype(
-        jnp.float32
-    )
+def _recovered_full(model: ASHModel, payload: ASHPayload, V=None):
+    """One decompression pass -> every Table-1 recovery, including the
+    <W mu*, v> inner products (which several quantities reuse)."""
+    if V is None:
+        V = Q.unpack_codes(payload.codes, payload.d, payload.b).astype(
+            jnp.float32
+        )
     vnorm = Q.code_norms(V)
     scale = payload.scale.astype(jnp.float32)
     offset = payload.offset.astype(jnp.float32)
@@ -55,7 +57,47 @@ def recovered_terms(model: ASHModel, payload: ASHPayload):
         offset + scale * ip_Wmu_v
         + model.landmark_sq_norms[payload.cluster]
     )
-    return V, vnorm, res_norm, ip_x_mu
+    return V, vnorm, res_norm, ip_x_mu, ip_Wmu_v
+
+
+def recovered_terms(model: ASHModel, payload: ASHPayload, V=None):
+    """Recover (V float, ||v||, ||x-mu*||, <x, mu*>) from the payload.
+
+    ``V`` optionally passes already-unpacked codes so callers that need
+    both the recovered terms and the code matrix decompress the payload
+    once instead of twice.
+    """
+    return _recovered_full(model, payload, V)[:4]
+
+
+def _x_sq_estimate(model, payload, vnorm, res_norm, ip_Wmu_v):
+    """||x||^2 estimate of Eq. (A.5) — the single definition shared by
+    :func:`payload_stats` (fused cos epilogue) and :func:`score_cosine`
+    (reference scorer), so the two can never desynchronize."""
+    return (
+        res_norm**2
+        + 2.0 * (res_norm / jnp.maximum(vnorm, _EPS)) * ip_Wmu_v
+        + model.landmark_sq_norms[payload.cluster]
+    )
+
+
+@jax.jit
+def payload_stats(model: ASHModel, payload: ASHPayload) -> ASHStats:
+    """Build the :class:`ASHStats` row statistics for a payload.
+
+    One decompression pass at encode/build time; afterwards the fused
+    l2/cos kernels score straight off the packed codes + these vectors
+    (see ``repro.kernels.ops``).  ``x_sq`` is the Eq. (A.5) squared-norm
+    estimate used by cosine search — identical to the quantity
+    :func:`score_cosine` derives on the fly.
+    """
+    _, vnorm, res_norm, ip_x_mu, ip_Wmu_v = _recovered_full(model, payload)
+    x_sq = _x_sq_estimate(model, payload, vnorm, res_norm, ip_Wmu_v)
+    return ASHStats(
+        res_norm=res_norm.astype(jnp.float32),
+        ip_x_mu=ip_x_mu.astype(jnp.float32),
+        x_sq=x_sq.astype(jnp.float32),
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -82,6 +124,14 @@ def score_dot(
     V = Q.unpack_codes(payload.codes, payload.d, payload.b).astype(
         jnp.float32
     )
+    return _score_dot_from_V(prep, payload, V, rowwise)
+
+
+def _score_dot_from_V(
+    prep: QueryPrep, payload: ASHPayload, V: jax.Array, rowwise: bool
+) -> jax.Array:
+    """Eq. (20) from already-unpacked codes — lets the l2/cos reference
+    scorers reuse one decompression instead of unpacking twice."""
     if rowwise:
         dot = jnp.sum(prep.q_proj[..., None, :] * V, axis=-1)
     else:
@@ -139,8 +189,8 @@ def score_l2(
     *, rowwise: bool = False,
 ) -> jax.Array:
     """||q - x_i||^2 approximation (Appendix A), (m, n)."""
-    _, _, res_norm, ip_x_mu = recovered_terms(model, payload)
-    ip_qx = score_dot(model, prep, payload, rowwise=rowwise)
+    V, _, res_norm, ip_x_mu = recovered_terms(model, payload)
+    ip_qx = _score_dot_from_V(prep, payload, V, rowwise)
     mu_sq = model.landmark_sq_norms[payload.cluster]  # (n,)
     ip_q_mu = prep.ip_q_landmarks[..., payload.cluster]  # (m, n)
     q_sq_mu = (
@@ -159,14 +209,9 @@ def score_cosine(
     *, rowwise: bool = False,
 ) -> jax.Array:
     """cosSim(q, x_i) using the norm estimate of Eq. (A.5), (m, n)."""
-    V, vnorm, res_norm, _ = recovered_terms(model, payload)
-    ip_qx = score_dot(model, prep, payload, rowwise=rowwise)
-    ip_Wmu_v = jnp.sum(model.W_landmarks[payload.cluster] * V, axis=-1)
-    x_sq = (
-        res_norm**2
-        + 2.0 * (res_norm / jnp.maximum(vnorm, _EPS)) * ip_Wmu_v
-        + model.landmark_sq_norms[payload.cluster]
-    )
+    V, vnorm, res_norm, _, ip_Wmu_v = _recovered_full(model, payload)
+    ip_qx = _score_dot_from_V(prep, payload, V, rowwise)
+    x_sq = _x_sq_estimate(model, payload, vnorm, res_norm, ip_Wmu_v)
     x_norm = jnp.sqrt(jnp.maximum(x_sq, _EPS))
     q_norm = jnp.sqrt(jnp.maximum(prep.q_sq_norm, _EPS))
     return ip_qx / (q_norm[..., None] * x_norm[None, :])

@@ -120,6 +120,32 @@ class ASHPayload:
 
 
 @pytree_dataclass
+class ASHStats:
+    """Query-independent per-row payload statistics (Table 1 recoveries).
+
+    Everything the l2/cos scoring epilogues need beyond the payload
+    itself, recovered ONCE at encode/build time (from ``<W mu*, v>``)
+    instead of re-unpacking the whole database per search call:
+
+      res_norm = ||x - mu*||         = SCALE * ||v||
+      ip_x_mu  = <x, mu*>            = OFFSET + SCALE <W mu*, v> + ||mu*||^2
+      x_sq     = ||x||^2 estimate    (Eq. A.5, via the cosine-norm identity)
+
+    Rows are aligned with the owning :class:`ASHPayload`; build with
+    ``scoring.payload_stats``.  Persisted with the index (save/load is
+    bit-identical) so the fused kernels never touch unpacked codes.
+    """
+
+    res_norm: jax.Array  # (n,) fp32
+    ip_x_mu: jax.Array  # (n,) fp32
+    x_sq: jax.Array  # (n,) fp32
+
+    @property
+    def n(self) -> int:
+        return self.res_norm.shape[0]
+
+
+@pytree_dataclass
 class QueryPrep:
     """Per-query precomputed terms (QUERY-COMPUTE of Eq. (20)).
 

@@ -31,7 +31,9 @@ import numpy as np
 
 from repro.core import ash as A
 from repro.core import scoring as S
-from repro.core.types import ASHConfig, ASHModel, ASHPayload, QueryPrep
+from repro.core.types import (
+    ASHConfig, ASHModel, ASHPayload, ASHStats, QueryPrep,
+)
 from repro.index import common as C
 from repro.index import distributed as DX
 from repro.index import flat as F
@@ -70,6 +72,7 @@ _MODEL_FIELDS = (
     "bias_rho", "bias_beta",
 )
 _PAYLOAD_FIELDS = ("codes", "scale", "offset", "cluster")
+_STATS_FIELDS = ("res_norm", "ip_x_mu", "x_sq")
 
 
 _BF16 = np.dtype(jnp.bfloat16)
@@ -119,6 +122,24 @@ def _payload_from_arrays(
     )
 
 
+def _stats_arrays(stats: Optional[ASHStats]) -> dict[str, Any]:
+    if stats is None:
+        return {}
+    return {f"stats.{f}": getattr(stats, f) for f in _STATS_FIELDS}
+
+
+def _stats_from_arrays(
+    arrays: dict[str, jax.Array], model: ASHModel, payload: ASHPayload
+) -> ASHStats:
+    """Restore persisted stats bit-identically; rebuild from the
+    payload when loading a pre-stats save."""
+    if all(f"stats.{f}" in arrays for f in _STATS_FIELDS):
+        return ASHStats(
+            **{f: arrays[f"stats.{f}"] for f in _STATS_FIELDS}
+        )
+    return S.payload_stats(model, payload)
+
+
 def _train_or_reuse(
     key, X, config, *, model=None, learned=True, **train_kw
 ) -> ASHModel:
@@ -148,7 +169,8 @@ class FlatBackend:
     @staticmethod
     def from_parts(model, payload, *, metric, raw=None):
         return F.FlatIndex(
-            metric=metric, model=model, payload=payload, raw=raw
+            metric=metric, model=model, payload=payload, raw=raw,
+            stats=S.payload_stats(model, payload),
         )
 
     @staticmethod
@@ -174,10 +196,15 @@ class FlatBackend:
         return state.payload
 
     @staticmethod
+    def stats_of(state):
+        return state.stats
+
+    @staticmethod
     def to_arrays(state):
         arrays = {
             **_model_arrays(state.model),
             **_payload_arrays(state.payload),
+            **_stats_arrays(state.stats),
         }
         if state.raw is not None:
             arrays["raw"] = state.raw
@@ -185,11 +212,14 @@ class FlatBackend:
 
     @staticmethod
     def from_arrays(arrays, meta, config, metric, **opts):
+        model = _model_from_arrays(arrays, config)
+        payload = _payload_from_arrays(arrays, config)
         return F.FlatIndex(
             metric=metric,
-            model=_model_from_arrays(arrays, config),
-            payload=_payload_from_arrays(arrays, config),
+            model=model,
+            payload=payload,
             raw=arrays.get("raw"),
+            stats=_stats_from_arrays(arrays, model, payload),
         )
 
 
@@ -246,10 +276,15 @@ class IVFBackend:
         return state.payload
 
     @staticmethod
+    def stats_of(state):
+        return state.stats
+
+    @staticmethod
     def to_arrays(state):
         arrays = {
             **_model_arrays(state.model),
             **_payload_arrays(state.payload),
+            **_stats_arrays(state.stats),
             "ids": state.ids,
             "invlists": state.invlists,
         }
@@ -259,14 +294,17 @@ class IVFBackend:
 
     @staticmethod
     def from_arrays(arrays, meta, config, metric, **opts):
+        model = _model_from_arrays(arrays, config)
+        payload = _payload_from_arrays(arrays, config)
         return IV.IVFIndex(
             metric=metric,
             max_list_len=int(meta["max_list_len"]),
-            model=_model_from_arrays(arrays, config),
-            payload=_payload_from_arrays(arrays, config),
+            model=model,
+            payload=payload,
             ids=arrays["ids"],
             invlists=arrays["invlists"],
             raw=arrays.get("raw"),
+            stats=_stats_from_arrays(arrays, model, payload),
         )
 
 
@@ -579,6 +617,13 @@ class AshIndex:
     @property
     def payload(self) -> ASHPayload:
         return self._backend.payload_of(self._state)
+
+    @property
+    def stats(self) -> Optional[ASHStats]:
+        """Encode-time row statistics (fused l2/cos epilogue inputs);
+        None for backends that score via the reference path."""
+        stats_of = getattr(self._backend, "stats_of", None)
+        return None if stats_of is None else stats_of(self._state)
 
     @property
     def config(self) -> ASHConfig:

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import scoring as S
-from repro.core.types import ASHModel, ASHPayload, QueryPrep
+from repro.core.types import ASHModel, ASHPayload, ASHStats, QueryPrep
 
 NEG_INF = -jnp.inf
 METRICS = ("dot", "l2", "cos")
@@ -45,30 +45,129 @@ def approx_scores(
     *,
     use_pallas: Optional[bool] = False,
     rowwise: bool = False,
+    stats: Optional[ASHStats] = None,
 ) -> jax.Array:
     """ASH scores of all payload rows, (m, n), higher-is-better.
 
     use_pallas: ``False`` → the pure-jnp reference scorers; ``True`` /
-    ``None`` → route the dot path through the fused kernel (``None`` =
-    auto: Pallas on TPU, oracle on CPU).  Only ``metric="dot"`` has a
-    fused kernel; other metrics always use the reference path.
+    ``None`` → route EVERY metric through the fused kernel family
+    (``None`` = auto: Pallas on TPU, the identical-semantics jnp oracle
+    on CPU).  The l2/cos epilogues consume the encode-time ``stats``
+    (``scoring.payload_stats``); when absent they are rebuilt on the
+    fly, which unpacks the database once.
 
     rowwise: batch-size-invariant reduction order for the DOT-PROD term
     (see ``scoring.score_dot``) — required on gathered/vmapped candidate
     sets so scores stay bit-identical across serving batch shapes;
-    incompatible with the fused kernel.
+    incompatible with the fused kernel, so it forces the reference
+    scorers regardless of ``use_pallas``.
     """
-    if metric == "dot":
-        if use_pallas is False or rowwise:
+    if use_pallas is False or rowwise:
+        if metric == "dot":
             return S.score_dot(model, prep, payload, rowwise=rowwise)
-        from repro.kernels import ops as K
+        if metric == "l2":
+            return -S.score_l2(model, prep, payload, rowwise=rowwise)
+        if metric == "cos":
+            return S.score_cosine(model, prep, payload, rowwise=rowwise)
+        raise ValueError(metric)
+    validate_metric(metric)
+    from repro.kernels import ops as K
 
-        return K.ash_score(model, prep, payload, use_pallas=use_pallas)
-    if metric == "l2":
-        return -S.score_l2(model, prep, payload, rowwise=rowwise)
-    if metric == "cos":
-        return S.score_cosine(model, prep, payload, rowwise=rowwise)
-    raise ValueError(metric)
+    return K.ash_score(
+        model, prep, payload, metric=metric, stats=stats,
+        use_pallas=use_pallas,
+    )
+
+
+def approx_topk(
+    model: ASHModel,
+    prep: QueryPrep,
+    payload: ASHPayload,
+    metric: str,
+    k: int,
+    *,
+    use_pallas: Optional[bool] = None,
+    stats: Optional[ASHStats] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused-selection top-k over all payload rows: (scores, rows).
+
+    Equal to ``top_k(approx_scores(..., use_pallas=use_pallas), k)`` —
+    but on TPU the (m, n) score matrix never reaches HBM (each kernel
+    tile emits a partial top-k̃; see ``kernels.ash_score``).  Callers
+    must keep ``k <= fused_topk_limit()`` and ``k <= payload.n``.
+    """
+    validate_metric(metric)
+    from repro.kernels import ops as K
+
+    return K.ash_score_topk(
+        model, prep, payload, k, metric=metric, stats=stats,
+        use_pallas=use_pallas,
+    )
+
+
+def fused_topk_limit() -> int:
+    """Largest k the fused-selection path serves (see kernels.ops)."""
+    from repro.kernels import ops as K
+
+    return K.FUSED_TOPK_MAX_K
+
+
+def scan_topk(
+    model: ASHModel,
+    prep: QueryPrep,
+    payload: ASHPayload,
+    metric: str,
+    k: int,
+    *,
+    rerank: int = 0,
+    raw: Optional[jax.Array] = None,
+    stats: Optional[ASHStats] = None,
+    use_pallas: Optional[bool] = None,
+    ids: Optional[jax.Array] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Dense-scan top-k routing shared by the flat backend and the IVF
+    full-probe (nprobe == nlist) path.
+
+    Fuses the scan with on-chip selection whenever the requested top-k
+    or rerank shortlist fits :func:`fused_topk_limit`, falling back to
+    materialize + ``lax.top_k`` beyond it — the two return identical
+    results, so the routing boundary is invisible to callers.  ``raw``
+    enables the exact-rerank pipeline; ``ids`` maps payload rows to
+    user-facing ids (IVF stores rows sorted by list).
+    """
+    n = payload.n
+    fused = use_pallas is not False
+    cap = fused_topk_limit()
+    if rerank and raw is not None:
+        R = min(max(rerank, k), n)
+        if fused and R <= cap:
+            short_s, short_rows = approx_topk(
+                model, prep, payload, metric, R,
+                use_pallas=use_pallas, stats=stats,
+            )
+        else:
+            approx = approx_scores(
+                model, prep, payload, metric,
+                use_pallas=use_pallas, stats=stats,
+            )
+            short_s, short_rows = jax.lax.top_k(approx, R)
+        return exact_rerank(
+            prep, raw, short_s, short_rows, metric, k, ids=ids
+        )
+    if fused and k <= min(cap, n):
+        s, rows = approx_topk(
+            model, prep, payload, metric, k,
+            use_pallas=use_pallas, stats=stats,
+        )
+    else:
+        approx = approx_scores(
+            model, prep, payload, metric,
+            use_pallas=use_pallas, stats=stats,
+        )
+        s, rows = jax.lax.top_k(approx, k)
+    if ids is None:
+        return s, rows
+    return s, jnp.where(rows < 0, -1, ids[jnp.maximum(rows, 0)])
 
 
 # ---------------------------------------------------------------------------
@@ -159,6 +258,20 @@ def gather_payload(payload: ASHPayload, rows: jax.Array) -> ASHPayload:
         scale=payload.scale[safe],
         offset=payload.offset[safe],
         cluster=payload.cluster[safe],
+    )
+
+
+def concat_stats(
+    a: Optional[ASHStats], b: Optional[ASHStats]
+) -> Optional[ASHStats]:
+    """Row-concatenate two stats blocks (None if either side is
+    missing — callers then rebuild via ``scoring.payload_stats``)."""
+    if a is None or b is None:
+        return None
+    return ASHStats(
+        res_norm=jnp.concatenate([a.res_norm, b.res_norm], axis=0),
+        ip_x_mu=jnp.concatenate([a.ip_x_mu, b.ip_x_mu], axis=0),
+        x_sq=jnp.concatenate([a.x_sq, b.x_sq], axis=0),
     )
 
 

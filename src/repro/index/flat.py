@@ -4,6 +4,15 @@ Entry point is ``repro.index.AshIndex`` with ``backend="flat"``; the
 ``_search_prepped`` path lets the serving engine reuse cached
 ``QueryPrep`` projections.  Metric dispatch and the rerank pipeline live
 in ``repro.index.common`` (shared with the IVF and sharded backends).
+
+Scan strategy: every metric routes through the fused kernel family by
+default (``use_pallas=None`` → Pallas on TPU, the identical-semantics
+jnp oracle on CPU; ``use_pallas=False`` forces the pure-jnp reference
+scorers).  Whenever the requested top-k/shortlist fits the fused
+selection budget (``common.fused_topk_limit()``), the scan and the
+selection fuse — on TPU the (m, n) score matrix never reaches HBM.
+The l2/cos epilogues read the encode-time ``ASHStats`` carried on the
+index (built at build/add, persisted by save/load).
 """
 from __future__ import annotations
 
@@ -15,7 +24,9 @@ import jax.numpy as jnp
 
 from repro.core import ash as A
 from repro.core import scoring as S
-from repro.core.types import ASHConfig, ASHModel, ASHPayload, QueryPrep, pytree_dataclass
+from repro.core.types import (
+    ASHConfig, ASHModel, ASHPayload, ASHStats, QueryPrep, pytree_dataclass,
+)
 from repro.index import common as C
 
 
@@ -27,6 +38,9 @@ class FlatIndex:
     # Optional raw vectors for exact re-ranking of a shortlist (kept in
     # bf16 to bound memory; None for pure-compressed deployments).
     raw: Optional[jax.Array]
+    # Encode-time row statistics consumed by the fused l2/cos epilogues
+    # (None → rebuilt per scoring call, decompressing the database).
+    stats: Optional[ASHStats] = None
 
 
 def _build(
@@ -50,7 +64,10 @@ def _build(
             )
     payload = A.encode(model, X)
     raw = X.astype(jnp.bfloat16) if keep_raw else None
-    return FlatIndex(metric=metric, model=model, payload=payload, raw=raw)
+    return FlatIndex(
+        metric=metric, model=model, payload=payload, raw=raw,
+        stats=S.payload_stats(model, payload),
+    )
 
 
 @functools.partial(
@@ -61,25 +78,26 @@ def _search_prepped(
     prep: QueryPrep,
     k: int = 10,
     rerank: int = 0,
-    use_pallas: Optional[bool] = False,
+    use_pallas: Optional[bool] = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Top-k search from precomputed query projections.
 
     Returns (scores, indices), each (m, k).  rerank > 0: retrieve a
     shortlist of that size by ASH scores and re-rank it with exact
     (bf16) metric-aware scores (requires raw vectors).
+
+    The shortlist/top-k selection fuses into the scan kernel whenever
+    its size fits ``common.fused_topk_limit()``; the fallback
+    materializes scores and runs ``lax.top_k`` — both return identical
+    results, so the routing choice is invisible to callers (the ladder
+    itself lives in ``common.scan_topk``, shared with the IVF
+    full-probe path).
     """
-    approx = C.approx_scores(
-        index.model, prep, index.payload, index.metric,
+    return C.scan_topk(
+        index.model, prep, index.payload, index.metric, k,
+        rerank=rerank, raw=index.raw, stats=index.stats,
         use_pallas=use_pallas,
     )
-    if rerank and index.raw is not None:
-        R = min(max(rerank, k), approx.shape[-1])
-        short_s, short_i = jax.lax.top_k(approx, R)
-        return C.exact_rerank(
-            prep, index.raw, short_s, short_i, index.metric, k
-        )
-    return jax.lax.top_k(approx, k)
 
 
 def _search(
@@ -87,7 +105,7 @@ def _search(
     queries: jax.Array,
     k: int = 10,
     rerank: int = 0,
-    use_pallas: Optional[bool] = False,
+    use_pallas: Optional[bool] = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Top-k search; composition of ``prepare_queries`` and
     :func:`_search_prepped` so the batched engine path and the direct
@@ -111,4 +129,7 @@ def _add(index: FlatIndex, X_new: jax.Array) -> FlatIndex:
         model=index.model,
         payload=C.concat_payloads(index.payload, payload_new),
         raw=raw,
+        stats=C.concat_stats(
+            index.stats, S.payload_stats(index.model, payload_new)
+        ),
     )

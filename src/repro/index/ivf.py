@@ -24,7 +24,9 @@ import jax.numpy as jnp
 
 from repro.core import ash as A
 from repro.core import scoring as S
-from repro.core.types import ASHConfig, ASHModel, ASHPayload, QueryPrep, pytree_dataclass
+from repro.core.types import (
+    ASHConfig, ASHModel, ASHPayload, ASHStats, QueryPrep, pytree_dataclass,
+)
 from repro.index import common as C
 
 NEG_INF = C.NEG_INF
@@ -39,6 +41,9 @@ class IVFIndex:
     ids: jax.Array  # (n,) original ids, sorted by list
     invlists: jax.Array  # (nlist, max_list_len) int32 row indices, -1 pad
     raw: Optional[jax.Array]  # optional bf16 vectors (sorted) for rerank
+    # Encode-time row statistics for the fused l2/cos epilogues on the
+    # full-probe (dense-scan) path; row-aligned with ``payload``.
+    stats: Optional[ASHStats] = None
 
 
 def _assemble(
@@ -70,14 +75,16 @@ def _assemble(
         )
 
     perm = jnp.asarray(order)
+    sorted_payload = C.permute_payload(payload, perm)
     return IVFIndex(
         metric=metric,
         max_list_len=max_len,
         model=model,
-        payload=C.permute_payload(payload, perm),
+        payload=sorted_payload,
         ids=jnp.asarray(ids)[perm].astype(jnp.int32),
         invlists=jnp.asarray(invlists),
         raw=None if raw is None else raw[perm],
+        stats=S.payload_stats(model, sorted_payload),
     )
 
 
@@ -135,7 +142,15 @@ def _search_prepped(
     nprobe: int = 8,
     rerank: int = 0,
 ) -> tuple[jax.Array, jax.Array]:
-    """Top-k from precomputed query projections: (scores, ids), (m,k)."""
+    """Top-k from precomputed query projections: (scores, ids), (m,k).
+
+    nprobe >= nlist probes every list — coarse routing degenerates to
+    an exhaustive scan, so the query skips the gather entirely and runs
+    the flat fused-kernel scan over the (list-sorted) payload, mapping
+    rows back through ``index.ids``.  Partial probes gather their
+    candidate lists and score rowwise (batch-shape-invariant)."""
+    if nprobe >= index.invlists.shape[0]:
+        return _full_scan(index, prep, k, rerank)
     if prep.q.shape[0] == 1:
         # XLA lowers the degenerate single-query batch differently from
         # every m >= 2 (last-ulp score drift), which would break the
@@ -148,6 +163,23 @@ def _search_prepped(
         s, i = _score_gathered(index, prep, k, nprobe, rerank)
         return s[:1], i[:1]
     return _score_gathered(index, prep, k, nprobe, rerank)
+
+
+def _full_scan(
+    index: IVFIndex,
+    prep: QueryPrep,
+    k: int,
+    rerank: int,
+    use_pallas: Optional[bool] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Exhaustive fused-kernel scan (the nprobe == nlist case): the
+    flat backend's routing ladder (``common.scan_topk``) with payload
+    rows mapped to user ids via ``index.ids``."""
+    return C.scan_topk(
+        index.model, prep, index.payload, index.metric, k,
+        rerank=rerank, raw=index.raw, stats=index.stats,
+        use_pallas=use_pallas, ids=index.ids,
+    )
 
 
 def _score_gathered(

@@ -1,18 +1,54 @@
-"""Fused ASH asymmetric-scoring Pallas TPU kernel.
+"""Fused ASH asymmetric-scoring Pallas TPU kernel family.
 
 The TPU adaptation of the paper's AVX-512 Code 1 (see DESIGN.md §2):
 batched scoring of m queries against n packed ASH codes is a dense
-matmul, so the kernel
+matmul, so every kernel in this file
 
   1. streams packed uint32 code words HBM -> VMEM one (n_blk, w_blk)
      tile at a time (codes never exist unpacked in HBM: 32/b codes per
      word, a 16x-32x traffic reduction vs fp32 vectors);
   2. unpacks in-register (shift/mask -> odd-integer grid values, bf16);
   3. feeds the MXU: acc += q_tile (m_blk, d_blk) @ codes_tile^T;
-  4. on the last reduction step applies the Eq. (20) epilogue
-     out = acc * SCALE + one_hot(cluster) lookup of <q, mu_c> + OFFSET,
-     with the landmark lookup itself expressed as an MXU-friendly
-     one-hot matmul (C <= 256).
+  4. on the last reduction step applies a metric epilogue over the
+     accumulated Eq. (20) base score, entirely in VMEM.
+
+Metric epilogues (``metric=``) — all emit HIGHER-IS-BETTER scores:
+
+  dot   base = acc * SCALE + one_hot(cluster) lookup of <q, mu_c>
+             + OFFSET            (Eq. 20; the landmark lookup is itself
+             an MXU-friendly one-hot matmul, C <= 256)
+  l2    2 * base - ||q||^2 - L2CONST_i          == -||q - x_i||^2
+  cos   base * (1/||q||) * (1/||x_i||)          (Eq. A.5 norm estimate)
+
+The l2/cos row constants (``L2CONST_i = ||x-mu*||^2 + 2<x,mu*> -
+||mu*||^2`` and the Eq. A.5 inverse norm) are query-independent and
+recovered once at encode/build time into an ``ASHStats`` structure (see
+``repro.core.types``), so neither metric ever unpacks the database in
+HBM — they are pure per-tile epilogues over the same packed-code MXU
+accumulation as dot.
+
+Fused selection (:func:`ash_score_topk_pallas`): instead of writing the
+(m, n) score matrix back to HBM and running a separate ``top_k`` pass,
+each (m_blk, n_blk) output tile keeps only its partial top-k̃ of
+(score, global id) pairs — an iterative VPU max/argmax sweep in VMEM —
+and the kernel emits a (m, n_blocks * k̃) candidate strip merged by one
+small final two-key sort on the host side of the call.  HBM traffic for
+selection drops from O(m·n) fp32 to O(m · n/block_n · k̃).
+
+  * k̃ accuracy/VMEM trade-off: results are EXACTLY the materialized
+    ``lax.top_k`` (values and indices, including tie order) whenever
+    k <= k̃, because a row's global rank-r element ranks <= r inside
+    its own tile.  k̃ < k trades exactness for a smaller candidate
+    strip and fewer selection sweeps (recall-style operation; the
+    routed index paths never do this).  Cost: k̃ VPU sweeps over each
+    tile + 2 * k̃ * n/block_n fp32+int32 VMEM per query row.
+  * Ties follow the ``lax.top_k`` convention (lowest id first): tiles
+    select by (score desc, id asc) and the merge sorts candidates with
+    a two-key ``lax.sort`` on (-score, id).
+  * Rows beyond the real n (block padding) are masked to -inf inside
+    the kernel; exhausted tiles emit int32-max sentinel ids which the
+    merge maps to -1 (they can only surface when k exceeds the number
+    of candidates actually emitted, i.e. never for k <= min(n, k̃)).
 
 Grid: (n_blocks, m_blocks, d_blocks), d innermost for accumulation in a
 VMEM fp32 scratch tile.
@@ -32,6 +68,9 @@ DEFAULT_BLOCK_M = 128
 DEFAULT_BLOCK_N = 512
 DEFAULT_BLOCK_D = 512
 
+METRICS = ("dot", "l2", "cos")
+_ID_SENTINEL = jnp.iinfo(jnp.int32).max
+
 
 def _unpack_block(words: jax.Array, b: int, compute_dtype) -> jax.Array:
     """(n_blk, w_blk) uint32 -> (n_blk, w_blk * 32//b) grid values."""
@@ -45,26 +84,8 @@ def _unpack_block(words: jax.Array, b: int, compute_dtype) -> jax.Array:
     ).astype(compute_dtype)
 
 
-def _kernel(
-    q_ref,  # (m_blk, d_blk)
-    codes_ref,  # (n_blk, w_blk) uint32
-    scale_ref,  # (1, n_blk)
-    offset_ref,  # (1, n_blk)
-    cluster_ref,  # (1, n_blk) int32
-    ipq_ref,  # (m_blk, C)
-    out_ref,  # (m_blk, n_blk)
-    acc_ref,  # scratch (m_blk, n_blk) fp32
-    *,
-    b: int,
-    n_d_blocks: int,
-    compute_dtype,
-):
-    k_idx = pl.program_id(2)
-
-    @pl.when(k_idx == 0)
-    def _zero():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
+def _accumulate(q_ref, codes_ref, acc_ref, *, b, compute_dtype):
+    """acc += q_tile @ unpack(codes_tile)^T — shared matmul prologue."""
     vals = _unpack_block(codes_ref[...], b, compute_dtype)  # (n_blk, d_blk)
     q = q_ref[...].astype(compute_dtype)
     acc_ref[...] += jax.lax.dot_general(
@@ -74,53 +95,150 @@ def _kernel(
         preferred_element_type=jnp.float32,
     )
 
+
+def _epilogue_scores(
+    acc, scale_ref, offset_ref, cluster_ref, ipq_ref, qterm_ref,
+    rowterm_ref, *, metric,
+):
+    """Tile scores (m_blk, n_blk) fp32 from the accumulated DOT-PROD.
+
+    The exact op order here is mirrored by ``ref.ash_score_metric_ref``
+    so compiled/interpreted kernels and the jnp oracle agree to the
+    reduction-order level.
+    """
+    C = ipq_ref.shape[1]
+    cl = cluster_ref[0, :]  # (n_blk,)
+    onehot = (
+        cl[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, C), 1)
+    ).astype(jnp.float32)  # (n_blk, C)
+    bias = jax.lax.dot_general(
+        ipq_ref[...].astype(jnp.float32),
+        onehot,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (m_blk, n_blk)
+    base = (
+        acc * scale_ref[0, :][None, :].astype(jnp.float32)
+        + bias
+        + offset_ref[0, :][None, :].astype(jnp.float32)
+    )
+    if metric == "dot":
+        return base
+    qcol = qterm_ref[0, :].astype(jnp.float32)[:, None]  # (m_blk, 1)
+    rrow = rowterm_ref[0, :].astype(jnp.float32)[None, :]  # (1, n_blk)
+    if metric == "l2":
+        return (2.0 * base - qcol) - rrow  # == -||q - x||^2
+    if metric == "cos":
+        return (base * qcol) * rrow
+    raise ValueError(metric)
+
+
+def _kernel(
+    q_ref,  # (m_blk, d_blk)
+    codes_ref,  # (n_blk, w_blk) uint32
+    scale_ref,  # (1, n_blk)
+    offset_ref,  # (1, n_blk)
+    cluster_ref,  # (1, n_blk) int32
+    ipq_ref,  # (m_blk, C)
+    qterm_ref,  # (1, m_blk) metric query term (zeros for dot)
+    rowterm_ref,  # (1, n_blk) metric row term (zeros for dot)
+    out_ref,  # (m_blk, n_blk)
+    acc_ref,  # scratch (m_blk, n_blk) fp32
+    *,
+    b: int,
+    n_d_blocks: int,
+    compute_dtype,
+    metric: str,
+):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    _accumulate(q_ref, codes_ref, acc_ref, b=b, compute_dtype=compute_dtype)
+
     @pl.when(k_idx == n_d_blocks - 1)
     def _epilogue():
-        C = ipq_ref.shape[1]
-        cl = cluster_ref[0, :]  # (n_blk,)
-        onehot = (
-            cl[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, C), 1)
-        ).astype(jnp.float32)  # (n_blk, C)
-        bias = jax.lax.dot_general(
-            ipq_ref[...].astype(jnp.float32),
-            onehot,
-            (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )  # (m_blk, n_blk)
-        out_ref[...] = (
-            acc_ref[...] * scale_ref[0, :][None, :].astype(jnp.float32)
-            + bias
-            + offset_ref[0, :][None, :].astype(jnp.float32)
+        out_ref[...] = _epilogue_scores(
+            acc_ref[...], scale_ref, offset_ref, cluster_ref, ipq_ref,
+            qterm_ref, rowterm_ref, metric=metric,
         ).astype(out_ref.dtype)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "b", "block_m", "block_n", "block_d", "interpret", "compute_dtype"
-    ),
-)
-def ash_score_pallas(
-    codes: jax.Array,  # (n, Wd) uint32
-    q_proj: jax.Array,  # (m, d_pad)
-    scale: jax.Array,  # (n,)
-    offset: jax.Array,  # (n,)
-    cluster: jax.Array,  # (n,)
-    ip_q_landmarks: jax.Array,  # (m, C)
+def _topk_kernel(
+    q_ref,
+    codes_ref,
+    scale_ref,
+    offset_ref,
+    cluster_ref,
+    ipq_ref,
+    qterm_ref,
+    rowterm_ref,
+    vals_ref,  # (m_blk, k_tilde) fp32
+    ids_ref,  # (m_blk, k_tilde) int32
+    acc_ref,  # scratch (m_blk, n_blk) fp32
     *,
     b: int,
-    block_m: int = DEFAULT_BLOCK_M,
-    block_n: int = DEFAULT_BLOCK_N,
-    block_d: int = DEFAULT_BLOCK_D,
-    interpret: bool = False,
-    compute_dtype=jnp.bfloat16,
-) -> jax.Array:
-    """(m, n) fp32 asymmetric scores; semantics == ref.ash_score_ref."""
+    n_d_blocks: int,
+    compute_dtype,
+    metric: str,
+    k_tilde: int,
+    block_n: int,
+    n_valid: int,
+):
+    k_idx = pl.program_id(2)
+    # program_id must be read outside the pl.when body (interpret mode
+    # lowers the body through lax.cond, where the primitive is absent)
+    col0 = pl.program_id(0) * block_n
+
+    @pl.when(k_idx == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    _accumulate(q_ref, codes_ref, acc_ref, b=b, compute_dtype=compute_dtype)
+
+    @pl.when(k_idx == n_d_blocks - 1)
+    def _select():
+        scores = _epilogue_scores(
+            acc_ref[...], scale_ref, offset_ref, cluster_ref, ipq_ref,
+            qterm_ref, rowterm_ref, metric=metric,
+        )  # (m_blk, n_blk) fp32
+        local = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+        # block-padding columns beyond the real n never win
+        valid = (local + col0) < n_valid
+        neg_inf = jnp.float32(-jnp.inf)
+        n_blk = scores.shape[1]
+        # Iterative partial top-k̃: k̃ VPU max sweeps over the tile,
+        # ties to the LOWEST id (the lax.top_k convention) via a min
+        # over the argmax candidate set.  `valid` (not a -inf re-mask)
+        # tracks taken columns so rows whose scores are genuinely -inf
+        # are still emitted once each, in ascending-id order.
+        for t in range(k_tilde):
+            masked = jnp.where(valid, scores, neg_inf)
+            best = jnp.max(masked, axis=1)  # (m_blk,)
+            cand = jnp.where(
+                valid & (masked == best[:, None]), local, n_blk
+            )
+            bid = jnp.min(cand, axis=1)  # n_blk == tile exhausted
+            has = bid < n_blk
+            vals_ref[:, t] = jnp.where(has, best, neg_inf)
+            ids_ref[:, t] = jnp.where(has, bid + col0, _ID_SENTINEL)
+            valid = valid & (local != bid[:, None])
+
+
+def _pad_operands(
+    codes, q_proj, scale, offset, cluster, ip_q_landmarks, qterm, rowterm,
+    *, b, block_m, block_n, block_d,
+):
+    """Pad every operand to block multiples; returns padded operands +
+    the (m_p, n_p, grid) geometry.  Scores for padded rows/cols are
+    sliced away (materializing kernel) or masked (selection kernel);
+    padded q columns are zero so they add nothing."""
     n, Wd = codes.shape
     m, d_pad = q_proj.shape
     k = Q.codes_per_word(b)
     assert Wd * k == d_pad, (Wd, k, d_pad)
-    C = ip_q_landmarks.shape[1]
 
     block_m = min(block_m, _round_up(m, 8))
     block_n = min(block_n, _round_up(n, 128))
@@ -128,8 +246,6 @@ def ash_score_pallas(
     assert block_d % k == 0
     block_w = block_d // k
 
-    # Pad every operand to block multiples (scores for padded rows are
-    # sliced away; padded q columns are zero so they add nothing).
     m_p = _round_up(m, block_m)
     n_p = _round_up(n, block_n)
     d_p = _round_up(d_pad, block_d)
@@ -140,31 +256,187 @@ def ash_score_pallas(
     offset2 = jnp.pad(offset, (0, n_p - n)).reshape(1, n_p)
     cluster2 = jnp.pad(cluster, (0, n_p - n)).reshape(1, n_p)
     ipq = jnp.pad(ip_q_landmarks, ((0, m_p - m), (0, 0)))
+    if qterm is None:
+        qterm = jnp.zeros((m,), jnp.float32)
+    if rowterm is None:
+        rowterm = jnp.zeros((n,), jnp.float32)
+    qterm2 = jnp.pad(
+        qterm.astype(jnp.float32), (0, m_p - m)
+    ).reshape(1, m_p)
+    rowterm2 = jnp.pad(
+        rowterm.astype(jnp.float32), (0, n_p - n)
+    ).reshape(1, n_p)
 
     grid = (n_p // block_n, m_p // block_m, d_p // block_d)
+    operands = (
+        q_proj, codes, scale2, offset2, cluster2, ipq, qterm2, rowterm2
+    )
+    geom = dict(
+        m=m, n=n, m_p=m_p, n_p=n_p, grid=grid,
+        block_m=block_m, block_n=block_n, block_d=block_d,
+        block_w=block_w, C=ip_q_landmarks.shape[1],
+    )
+    return operands, geom
 
+
+def _in_specs(g):
+    return [
+        pl.BlockSpec((g["block_m"], g["block_d"]), lambda i, j, k_: (j, k_)),
+        pl.BlockSpec((g["block_n"], g["block_w"]), lambda i, j, k_: (i, k_)),
+        pl.BlockSpec((1, g["block_n"]), lambda i, j, k_: (0, i)),
+        pl.BlockSpec((1, g["block_n"]), lambda i, j, k_: (0, i)),
+        pl.BlockSpec((1, g["block_n"]), lambda i, j, k_: (0, i)),
+        pl.BlockSpec((g["block_m"], g["C"]), lambda i, j, k_: (j, 0)),
+        pl.BlockSpec((1, g["block_m"]), lambda i, j, k_: (0, j)),
+        pl.BlockSpec((1, g["block_n"]), lambda i, j, k_: (0, i)),
+    ]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "b", "metric", "block_m", "block_n", "block_d", "interpret",
+        "compute_dtype",
+    ),
+)
+def ash_score_pallas(
+    codes: jax.Array,  # (n, Wd) uint32
+    q_proj: jax.Array,  # (m, d_pad)
+    scale: jax.Array,  # (n,)
+    offset: jax.Array,  # (n,)
+    cluster: jax.Array,  # (n,)
+    ip_q_landmarks: jax.Array,  # (m, C)
+    qterm: jax.Array | None = None,  # (m,) metric query term
+    rowterm: jax.Array | None = None,  # (n,) metric row term
+    *,
+    b: int,
+    metric: str = "dot",
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_d: int = DEFAULT_BLOCK_D,
+    interpret: bool = False,
+    compute_dtype=jnp.bfloat16,
+) -> jax.Array:
+    """(m, n) fp32 scores, higher-is-better for every metric.
+
+    ``metric="dot"`` matches ``ref.ash_score_ref``; ``"l2"``/``"cos"``
+    additionally need the per-row/per-query epilogue terms (see
+    ``repro.kernels.ops._metric_operands``) and match
+    ``ref.ash_score_metric_ref``.
+    """
+    assert metric in METRICS, metric
+    operands, g = _pad_operands(
+        codes, q_proj, scale, offset, cluster, ip_q_landmarks,
+        qterm, rowterm,
+        b=b, block_m=block_m, block_n=block_n, block_d=block_d,
+    )
     out = pl.pallas_call(
         functools.partial(
             _kernel,
             b=b,
-            n_d_blocks=grid[2],
+            n_d_blocks=g["grid"][2],
             compute_dtype=compute_dtype,
+            metric=metric,
         ),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_m, block_d), lambda i, j, k_: (j, k_)),
-            pl.BlockSpec((block_n, block_w), lambda i, j, k_: (i, k_)),
-            pl.BlockSpec((1, block_n), lambda i, j, k_: (0, i)),
-            pl.BlockSpec((1, block_n), lambda i, j, k_: (0, i)),
-            pl.BlockSpec((1, block_n), lambda i, j, k_: (0, i)),
-            pl.BlockSpec((block_m, C), lambda i, j, k_: (j, 0)),
+        grid=g["grid"],
+        in_specs=_in_specs(g),
+        out_specs=pl.BlockSpec(
+            (g["block_m"], g["block_n"]), lambda i, j, k_: (j, i)
+        ),
+        out_shape=jax.ShapeDtypeStruct((g["m_p"], g["n_p"]), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((g["block_m"], g["block_n"]), jnp.float32)
         ],
-        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k_: (j, i)),
-        out_shape=jax.ShapeDtypeStruct((m_p, n_p), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
         interpret=interpret,
-    )(q_proj, codes, scale2, offset2, cluster2, ipq)
-    return out[:m, :n]
+    )(*operands)
+    return out[: g["m"], : g["n"]]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "b", "k", "k_tilde", "metric", "block_m", "block_n", "block_d",
+        "interpret", "compute_dtype",
+    ),
+)
+def ash_score_topk_pallas(
+    codes: jax.Array,  # (n, Wd) uint32
+    q_proj: jax.Array,  # (m, d_pad)
+    scale: jax.Array,  # (n,)
+    offset: jax.Array,  # (n,)
+    cluster: jax.Array,  # (n,)
+    ip_q_landmarks: jax.Array,  # (m, C)
+    qterm: jax.Array | None = None,
+    rowterm: jax.Array | None = None,
+    *,
+    b: int,
+    k: int,
+    k_tilde: int | None = None,
+    metric: str = "dot",
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_d: int = DEFAULT_BLOCK_D,
+    interpret: bool = False,
+    compute_dtype=jnp.bfloat16,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused scan + selection: top-k (scores, ids), each (m, k).
+
+    The (m, n) score matrix never exists — each output tile emits its
+    partial top-k̃ and one two-key sort merges the (m, n_blocks * k̃)
+    candidate strip.  Exactly equal to ``top_k(ash_score_pallas(...))``
+    (values, ids and tie order) for ``k <= k̃``; ``k̃`` defaults to
+    ``k``.  Ids of exhausted slots come back as -1 (only reachable when
+    ``k > min(n, k̃)``).
+    """
+    assert metric in METRICS, metric
+    n = codes.shape[0]
+    operands, g = _pad_operands(
+        codes, q_proj, scale, offset, cluster, ip_q_landmarks,
+        qterm, rowterm,
+        b=b, block_m=block_m, block_n=block_n, block_d=block_d,
+    )
+    if k_tilde is None:
+        k_tilde = k
+    k_tilde = min(k_tilde, g["block_n"])
+    n_blocks = g["grid"][0]
+    if k > n_blocks * k_tilde:
+        raise ValueError(
+            f"k={k} exceeds the {n_blocks} x k_tilde={k_tilde} candidate "
+            f"strip; raise k_tilde or use the materializing kernel"
+        )
+    vals, ids = pl.pallas_call(
+        functools.partial(
+            _topk_kernel,
+            b=b,
+            n_d_blocks=g["grid"][2],
+            compute_dtype=compute_dtype,
+            metric=metric,
+            k_tilde=k_tilde,
+            block_n=g["block_n"],
+            n_valid=n,
+        ),
+        grid=g["grid"],
+        in_specs=_in_specs(g),
+        out_specs=[
+            pl.BlockSpec((g["block_m"], k_tilde), lambda i, j, k_: (j, i)),
+            pl.BlockSpec((g["block_m"], k_tilde), lambda i, j, k_: (j, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g["m_p"], n_blocks * k_tilde), jnp.float32),
+            jax.ShapeDtypeStruct((g["m_p"], n_blocks * k_tilde), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g["block_m"], g["block_n"]), jnp.float32)
+        ],
+        interpret=interpret,
+    )(*operands)
+    vals, ids = vals[: g["m"]], ids[: g["m"]]
+    # Merge: (score desc, id asc) — bit-equal to lax.top_k over the
+    # materialized row (candidate tiles are already in ascending-id
+    # order, so the two-key sort reproduces top_k's tie behaviour).
+    neg, sid = jax.lax.sort((-vals, ids), dimension=1, num_keys=2)
+    out_s, out_i = -neg[:, :k], sid[:, :k]
+    return out_s, jnp.where(out_i == _ID_SENTINEL, -1, out_i)
 
 
 def _round_up(x: int, mult: int) -> int:

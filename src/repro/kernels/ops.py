@@ -13,14 +13,71 @@ import jax.numpy as jnp
 
 from repro.core import quantization as Q
 from repro.core import scoring as S
-from repro.core.types import ASHModel, ASHPayload, QueryPrep
+from repro.core.types import ASHModel, ASHPayload, ASHStats, QueryPrep
 from repro.kernels import ref
-from repro.kernels.ash_score import ash_score_pallas
+from repro.kernels.ash_score import ash_score_pallas, ash_score_topk_pallas
 from repro.kernels.ash_kv_attn import ash_kv_attn_pallas
+
+_EPS = 1e-12
+
+# Largest per-tile partial top-k the fused-selection path accepts: the
+# selection epilogue is k̃ VPU sweeps per tile and 2·k̃·n_blocks VMEM
+# candidate words per query row, so the index layers fall back to
+# materialize-then-top_k beyond this (scores of the two kernels are
+# identical per element, so the routing choice never changes results).
+FUSED_TOPK_MAX_K = 128
 
 
 def _auto_interpret() -> bool:
     return jax.default_backend() == "cpu"
+
+
+def _metric_operands(
+    model: ASHModel,
+    prep: QueryPrep,
+    payload: ASHPayload,
+    stats: ASHStats | None,
+    metric: str,
+):
+    """(qterm, rowterm) epilogue vectors for the fused kernel/oracle.
+
+    dot needs none; l2/cos derive theirs from the encode-time
+    ``ASHStats`` (built on the fly when ``stats`` is None — that
+    fallback unpacks the database once and defeats the fused path's
+    purpose, so index backends persist stats alongside the payload).
+    """
+    if metric == "dot":
+        return None, None
+    if stats is None:
+        stats = S.payload_stats(model, payload)
+    if metric == "l2":
+        res = stats.res_norm.astype(jnp.float32)
+        rowterm = (
+            res * res
+            + 2.0 * stats.ip_x_mu.astype(jnp.float32)
+            - model.landmark_sq_norms[payload.cluster]
+        )  # == ||x||^2 recovered: -l2 = 2<q,x> - ||q||^2 - ||x||^2
+        return prep.q_sq_norm.astype(jnp.float32), rowterm
+    if metric == "cos":
+        qterm = 1.0 / jnp.sqrt(jnp.maximum(prep.q_sq_norm, _EPS))
+        rowterm = 1.0 / jnp.sqrt(jnp.maximum(stats.x_sq, _EPS))
+        return qterm.astype(jnp.float32), rowterm.astype(jnp.float32)
+    raise ValueError(metric)
+
+
+def _score_args(prep: QueryPrep, payload: ASHPayload):
+    d_pad = payload.codes.shape[1] * Q.codes_per_word(payload.b)
+    q_proj = prep.q_proj
+    if q_proj.shape[-1] < d_pad:
+        q_proj = jnp.pad(q_proj, ((0, 0), (0, d_pad - q_proj.shape[-1])))
+    return (
+        payload.codes,
+        q_proj,
+        payload.scale.astype(jnp.float32),
+        payload.offset.astype(jnp.float32),
+        payload.cluster,
+        prep.ip_q_landmarks,
+    )
 
 
 def ash_score(
@@ -28,11 +85,17 @@ def ash_score(
     prep: QueryPrep,
     payload: ASHPayload,
     *,
+    metric: str = "dot",
+    stats: ASHStats | None = None,
     use_pallas: bool | None = None,
     interpret: bool | None = None,
     compute_dtype=jnp.float32,
 ) -> jax.Array:
-    """Drop-in fused replacement for scoring.score_dot: (m, n) fp32.
+    """Fused all-metric scoring: (m, n) fp32, higher-is-better.
+
+    metric="dot" is a drop-in fused replacement for scoring.score_dot;
+    "l2"/"cos" apply the stats-driven epilogues (negated squared
+    distance / Eq. A.5 cosine) without unpacking the database.
 
     use_pallas=None (auto): the fused kernel on TPU, the identical-
     semantics jnp oracle on CPU (interpret mode is for validation, far
@@ -42,23 +105,53 @@ def ash_score(
         use_pallas = not _auto_interpret()
     if interpret is None:
         interpret = _auto_interpret()
-    d_pad = payload.codes.shape[1] * Q.codes_per_word(payload.b)
-    q_proj = prep.q_proj
-    if q_proj.shape[-1] < d_pad:
-        q_proj = jnp.pad(q_proj, ((0, 0), (0, d_pad - q_proj.shape[-1])))
-    args = (
-        payload.codes,
-        q_proj,
-        payload.scale.astype(jnp.float32),
-        payload.offset.astype(jnp.float32),
-        payload.cluster,
-        prep.ip_q_landmarks,
-    )
+    args = _score_args(prep, payload)
+    qterm, rowterm = _metric_operands(model, prep, payload, stats, metric)
     if not use_pallas:
-        return ref.ash_score_ref(*args, b=payload.b)
+        return ref.ash_score_metric_ref(
+            *args, qterm, rowterm, b=payload.b, metric=metric
+        )
     return ash_score_pallas(
-        *args, b=payload.b, interpret=interpret,
-        compute_dtype=compute_dtype,
+        *args, qterm, rowterm, b=payload.b, metric=metric,
+        interpret=interpret, compute_dtype=compute_dtype,
+    )
+
+
+def ash_score_topk(
+    model: ASHModel,
+    prep: QueryPrep,
+    payload: ASHPayload,
+    k: int,
+    *,
+    metric: str = "dot",
+    stats: ASHStats | None = None,
+    k_tilde: int | None = None,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+    compute_dtype=jnp.float32,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused scan + on-chip selection: top-k (scores, row ids), (m, k).
+
+    On TPU the (m, n) score matrix never reaches HBM — each output tile
+    emits a partial top-k̃ merged by one small two-key sort.  Results
+    equal ``lax.top_k(ash_score(...), k)`` exactly (values, ids, tie
+    order) for ``k <= k̃`` (default ``k̃ = k``).  The CPU oracle
+    materializes and calls ``lax.top_k`` — identical semantics.
+    """
+    if use_pallas is None:
+        use_pallas = not _auto_interpret()
+    if interpret is None:
+        interpret = _auto_interpret()
+    args = _score_args(prep, payload)
+    qterm, rowterm = _metric_operands(model, prep, payload, stats, metric)
+    if not use_pallas:
+        scores = ref.ash_score_metric_ref(
+            *args, qterm, rowterm, b=payload.b, metric=metric
+        )
+        return jax.lax.top_k(scores, k)
+    return ash_score_topk_pallas(
+        *args, qterm, rowterm, b=payload.b, k=k, k_tilde=k_tilde,
+        metric=metric, interpret=interpret, compute_dtype=compute_dtype,
     )
 
 

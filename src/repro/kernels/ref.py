@@ -36,6 +36,41 @@ def ash_score_ref(
     )
 
 
+def ash_score_metric_ref(
+    codes: jax.Array,  # (n, Wd) uint32 packed
+    q_proj: jax.Array,  # (m, d_pad)
+    scale: jax.Array,  # (n,)
+    offset: jax.Array,  # (n,)
+    cluster: jax.Array,  # (n,) int32
+    ip_q_landmarks: jax.Array,  # (m, C)
+    qterm: jax.Array | None,  # (m,) metric query term (None for dot)
+    rowterm: jax.Array | None,  # (n,) metric row term (None for dot)
+    b: int,
+    metric: str = "dot",
+) -> jax.Array:
+    """Metric-epilogue scores, higher-is-better: the oracle for the
+    fused kernel family.
+
+    Applies the same epilogue op order as the kernel's
+    ``_epilogue_scores`` over the Eq. (20) base score:
+      dot: base;  l2: 2*base - qterm - rowterm (== -||q - x||^2);
+      cos: base * qterm * rowterm.
+    ``qterm``/``rowterm`` come from ``ops._metric_operands``.
+    """
+    base = ash_score_ref(
+        codes, q_proj, scale, offset, cluster, ip_q_landmarks, b
+    )
+    if metric == "dot":
+        return base
+    qcol = qterm.astype(jnp.float32)[:, None]
+    rrow = rowterm.astype(jnp.float32)[None, :]
+    if metric == "l2":
+        return (2.0 * base - qcol) - rrow
+    if metric == "cos":
+        return (base * qcol) * rrow
+    raise ValueError(metric)
+
+
 def ash_kv_attn_ref(
     q_k: jax.Array,  # (dk,) query projected into K-code space (W_k q)
     k_codes: jax.Array,  # (S, Wk) packed K codes

@@ -118,7 +118,12 @@ def main(argv=None):
           f"({args.queries / dt:.0f} QPS on this CPU)")
     print(f"[latency] p50={1e3 * p50:.1f}ms "
           f"p99={1e3 * p99:.1f}ms per request")
-    print(f"[engine] {engine.stats.snapshot()}")
+    snap = engine.stats.snapshot()
+    print(f"[engine] {snap}")
+    print(f"[prep-cache] hit_rate={snap['prep_hit_rate']:.3f} "
+          f"({snap['prep_hits']}/{snap['prep_hits'] + snap['prep_misses']} "
+          f"rows) resident={engine.prep_cache_bytes / 1024:.1f}KiB "
+          f"budget={engine.config.prep_cache_bytes / 2**20:.0f}MiB")
     print(f"[recall] 10-recall@10={rec.get(10):.4f} "
           f"10-recall@100={rec.get(100):.4f}")
     return 0

@@ -37,7 +37,10 @@ Mechanics:
 * **Prep cache** — per-query-row LRU over the QUERY-COMPUTE projections
   (``prepare_queries``): repeated queries skip the projection matmuls
   entirely.  Keyed by (index name, query-row hash); row preps are exact,
-  so cache hits stay bit-identical.
+  so cache hits stay bit-identical.  Byte-bounded
+  (``prep_cache_bytes``; ``prep_cache_entries`` as an optional extra
+  row bound), with the live footprint on ``engine.prep_cache_bytes``
+  and the hit rate in ``engine.stats.snapshot()``.
 * **Registry** — one engine fronts several ``AshIndex`` backends (flat,
   IVF, sharded) for tenant/namespace routing via ``index=``.
 * **k > n** — clamped to the index size and padded back out with score
@@ -68,13 +71,21 @@ class EngineConfig:
     batch_buckets / k_buckets: ascending padded shapes; values above
     the largest bucket round up to a multiple of it (so shapes stay a
     closed set and traces stay bounded).
+
+    The prep cache is BYTE-bounded (``prep_cache_bytes``, summing the
+    numpy footprint of every cached row's projection tuple) so capacity
+    planning works in memory terms regardless of query width;
+    ``prep_cache_entries`` is an optional additional row-count bound
+    (None = rows limited by bytes only).  Setting either to 0 disables
+    the cache.
     """
 
     batch_buckets: Tuple[int, ...] = (8, 32, 128)
     k_buckets: Tuple[int, ...] = (10, 100)
     max_pending: int = 1024  # queue bound, in query rows
     max_wait_s: float = 0.002  # flush-on-timeout age
-    prep_cache_entries: int = 8192  # LRU rows; 0 disables the cache
+    prep_cache_bytes: int = 64 << 20  # LRU byte budget; 0 disables
+    prep_cache_entries: Optional[int] = None  # extra row bound; 0 disables
 
     def __post_init__(self):
         if not self.batch_buckets or not self.k_buckets:
@@ -83,6 +94,18 @@ class EngineConfig:
             v = getattr(self, name)
             if tuple(sorted(v)) != tuple(v) or min(v) < 1:
                 raise ValueError(f"{name} must be ascending positive: {v}")
+        if self.prep_cache_bytes < 0:
+            raise ValueError(
+                f"prep_cache_bytes must be >= 0: {self.prep_cache_bytes}"
+            )
+        if self.prep_cache_entries is not None and self.prep_cache_entries < 0:
+            raise ValueError(
+                f"prep_cache_entries must be >= 0: {self.prep_cache_entries}"
+            )
+
+    @property
+    def prep_cache_enabled(self) -> bool:
+        return self.prep_cache_bytes > 0 and self.prep_cache_entries != 0
 
 
 def _bucketize(buckets: Tuple[int, ...], n: int) -> int:
@@ -140,6 +163,7 @@ class EngineStats:
         fill = self.batched_rows / max(
             1, self.batched_rows + self.padded_rows
         )
+        looked_up = self.prep_hits + self.prep_misses
         return {
             "requests": self.requests,
             "batches": self.batches,
@@ -147,6 +171,7 @@ class EngineStats:
             "bucket_fill": round(fill, 3),
             "prep_hits": self.prep_hits,
             "prep_misses": self.prep_misses,
+            "prep_hit_rate": round(self.prep_hits / max(1, looked_up), 3),
             "flushes": dict(self.flushes),
             "unique_buckets": len(self.compiled_buckets),
         }
@@ -213,6 +238,7 @@ class QueryEngine:
         self._pending: "OrderedDict[tuple, list[_Request]]" = OrderedDict()
         self._pending_rows = 0
         self._prep_cache: "OrderedDict[tuple, tuple]" = OrderedDict()
+        self._prep_cache_nbytes = 0
         self.stats = EngineStats()
         if isinstance(indexes, AshIndex):
             self.register("default", indexes)
@@ -240,9 +266,18 @@ class QueryEngine:
     def invalidate_prep_cache(self, name: Optional[str] = None) -> None:
         if name is None:
             self._prep_cache.clear()
+            self._prep_cache_nbytes = 0
             return
         for key in [k for k in self._prep_cache if k[0] == name]:
-            del self._prep_cache[key]
+            self._prep_cache_nbytes -= self._entry_nbytes(
+                self._prep_cache.pop(key)
+            )
+
+    @property
+    def prep_cache_bytes(self) -> int:
+        """Current byte footprint of the prep LRU (for capacity
+        planning against ``EngineConfig.prep_cache_bytes``)."""
+        return self._prep_cache_nbytes
 
     # -- request intake -----------------------------------------------
 
@@ -497,7 +532,7 @@ class QueryEngine:
         real rows)."""
         bucket = rows.shape[0]
         hit_rows = np.zeros(n_real, dtype=bool)
-        if self.config.prep_cache_entries <= 0:
+        if not self.config.prep_cache_enabled:
             self.stats.prep_misses += n_real
             return idx.prepare(jnp.asarray(rows)), hit_rows
 
@@ -538,9 +573,9 @@ class QueryEngine:
                       (mp.q, mp.q_proj, mp.ip_q_landmarks, mp.q_sq_norm))
         for j, i in enumerate(miss):
             row_preps[i] = tuple(a[j] for a in mp_np)
-        self._prep_cache.update(
-            (keys[i], row_preps[i]) for i in miss if i < n_real
-        )
+        for i in miss:
+            if i < n_real:
+                self._cache_put(keys[i], row_preps[i])
         self._evict()
         return self._stack_prep(row_preps), hit_rows
 
@@ -549,12 +584,29 @@ class QueryEngine:
                      (prep.q, prep.q_proj, prep.ip_q_landmarks,
                       prep.q_sq_norm))
         for i in idxs:
-            self._prep_cache[keys[i]] = tuple(a[i] for a in arrs)
+            self._cache_put(keys[i], tuple(a[i] for a in arrs))
         self._evict()
 
+    @staticmethod
+    def _entry_nbytes(entry: tuple) -> int:
+        return sum(int(a.nbytes) for a in entry)
+
+    def _cache_put(self, key: tuple, entry: tuple) -> None:
+        old = self._prep_cache.pop(key, None)
+        if old is not None:
+            self._prep_cache_nbytes -= self._entry_nbytes(old)
+        self._prep_cache[key] = entry
+        self._prep_cache_nbytes += self._entry_nbytes(entry)
+
     def _evict(self) -> None:
-        while len(self._prep_cache) > self.config.prep_cache_entries:
-            self._prep_cache.popitem(last=False)
+        cfg = self.config
+        while self._prep_cache and (
+            self._prep_cache_nbytes > cfg.prep_cache_bytes
+            or (cfg.prep_cache_entries is not None
+                and len(self._prep_cache) > cfg.prep_cache_entries)
+        ):
+            _, entry = self._prep_cache.popitem(last=False)
+            self._prep_cache_nbytes -= self._entry_nbytes(entry)
 
     @staticmethod
     def _stack_prep(row_preps) -> QueryPrep:

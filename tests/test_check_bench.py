@@ -1,0 +1,98 @@
+"""tools/check_bench.py: health gate + trajectory diffing."""
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "tools"))
+import check_bench  # noqa: E402
+
+
+def _doc(rows, quick=False, group="kernels"):
+    return {
+        "schema_version": 1, "group": group, "quick": quick,
+        "rows": rows,
+    }
+
+
+def _row(name, us, derived=None, error=None):
+    return {"name": name, "us_per_call": us,
+            "derived": derived or {}, "error": error}
+
+
+def _write(path, doc):
+    path.write_text(json.dumps(doc))
+    return str(path)
+
+
+def test_health_check_flags_errors_and_empty(tmp_path):
+    ok = _write(tmp_path / "ok.json", _doc([_row("a", 1.0)]))
+    assert check_bench.check(ok) == []
+    bad = _write(tmp_path / "bad.json",
+                 _doc([_row("a", 0.0, error="boom")]))
+    assert any("ERROR row" in p for p in check_bench.check(bad))
+    empty = _write(tmp_path / "empty.json", _doc([]))
+    assert any("no benchmark rows" in p for p in check_bench.check(empty))
+
+
+def test_diff_warn_and_fail_thresholds(tmp_path):
+    base = tmp_path / "base"
+    base.mkdir()
+    _write(base / "BENCH_kernels.json",
+           _doc([_row("fast", 100.0), _row("warny", 100.0),
+                 _row("faily", 100.0)]))
+    cur = _write(
+        tmp_path / "BENCH_kernels.json",
+        _doc([_row("fast", 101.0), _row("warny", 180.0),
+              _row("faily", 500.0)]),
+    )
+    fails, warns = check_bench.diff(cur, str(base), 1.5, 3.0)
+    assert len(fails) == 1 and "faily" in fails[0]
+    assert len(warns) == 1 and "warny" in warns[0]
+
+
+def test_diff_qps_regression_and_vanished_rows(tmp_path):
+    base = tmp_path / "base"
+    base.mkdir()
+    _write(base / "BENCH_serving.json",
+           _doc([_row("s", 0.0, {"qps": 1000.0}),
+                 _row("gone", 5.0)], group="serving"))
+    cur = _write(tmp_path / "BENCH_serving.json",
+                 _doc([_row("s", 0.0, {"qps": 100.0})], group="serving"))
+    fails, warns = check_bench.diff(cur, str(base), 1.5, 3.0)
+    assert any("qps regressed 10.00x" in f for f in fails)
+    assert any("vanished" in w for w in warns)
+
+
+def test_diff_skips_quick_vs_full(tmp_path):
+    base = tmp_path / "base"
+    base.mkdir()
+    _write(base / "BENCH_kernels.json", _doc([_row("a", 100.0)]))
+    cur = _write(tmp_path / "BENCH_kernels.json",
+                 _doc([_row("a", 10_000.0)], quick=True))
+    fails, warns = check_bench.diff(cur, str(base), 1.5, 3.0)
+    assert fails == []
+    assert any("not comparable" in w for w in warns)
+
+
+def test_diff_combined_file_maps_groups(tmp_path):
+    base = tmp_path / "base"
+    base.mkdir()
+    _write(base / "BENCH_kernels.json", _doc([_row("a", 100.0)]))
+    combined = {
+        "schema_version": 1, "quick": False,
+        "groups": {"kernels": [_row("a", 1000.0)]},
+    }
+    cur = _write(tmp_path / "bench.json", combined)
+    fails, warns = check_bench.diff(cur, str(base), 1.5, 3.0)
+    assert len(fails) == 1 and "us_per_call regressed 10.00x" in fails[0]
+
+
+def test_main_exit_codes(tmp_path):
+    ok = _write(tmp_path / "ok.json", _doc([_row("a", 1.0)]))
+    assert check_bench.main([ok]) == 0
+    base = tmp_path / "base"
+    base.mkdir()
+    _write(base / "ok.json", _doc([_row("a", 1.0)]))
+    assert check_bench.main([ok, "--baseline", str(base)]) == 0
+    _write(base / "ok.json", _doc([_row("a", 0.1)]))
+    assert check_bench.main([ok, "--baseline", str(base)]) == 1

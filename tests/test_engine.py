@@ -227,6 +227,63 @@ def test_prep_cache_disabled_and_eviction(setup):
     assert len(eng._prep_cache) == 2  # LRU evicted down to the bound
 
 
+def test_prep_cache_byte_bound_evicts(setup):
+    """The LRU is byte-bounded: inserts beyond prep_cache_bytes evict
+    oldest rows, and the live footprint is exposed for capacity
+    planning."""
+    X, Qm, indexes = setup
+    eng = _engine({"flat": indexes["flat"]}, batch_buckets=(4,))
+    eng.search(Qm[:1], k=5, index="flat")
+    per_row = eng.prep_cache_bytes
+    assert per_row > 0
+    # budget for exactly 2 rows: the third insert evicts the oldest
+    eng = _engine({"flat": indexes["flat"]}, batch_buckets=(4,),
+                  prep_cache_bytes=2 * per_row)
+    eng.search(Qm[:4], k=5, index="flat")
+    assert len(eng._prep_cache) == 2
+    assert eng.prep_cache_bytes == 2 * per_row
+    # eviction keeps the most-recent rows: Qm[2:4] now hit, Qm[0] misses
+    eng.search(Qm[2:4], k=5, index="flat")
+    assert eng.stats.prep_hits == 2
+    eng.search(Qm[:1], k=5, index="flat")
+    assert eng.stats.prep_hits == 2  # Qm[0] was evicted
+    # results served under eviction pressure stay exact
+    s, ids = eng.search(Qm[:4], k=5, index="flat")
+    ds, di = indexes["flat"].search(Qm[:4], k=5)
+    assert jnp.array_equal(jnp.asarray(ids), di)
+
+
+def test_prep_cache_bytes_zero_disables(setup):
+    X, Qm, indexes = setup
+    eng = _engine({"flat": indexes["flat"]}, prep_cache_bytes=0)
+    eng.search(Qm[:2], k=5, index="flat")
+    eng.search(Qm[:2], k=5, index="flat")
+    assert eng.stats.prep_hits == 0 and eng.stats.prep_misses == 4
+    assert eng.prep_cache_bytes == 0
+
+
+def test_prep_cache_invalidate_restores_byte_accounting(setup):
+    X, Qm, indexes = setup
+    eng = _engine(indexes, batch_buckets=(4,))
+    eng.search(Qm[:2], k=5, index="flat")
+    eng.search(Qm[:2], k=5, index="ivf", nprobe=4)
+    assert eng.prep_cache_bytes > 0
+    before = eng.prep_cache_bytes
+    eng.invalidate_prep_cache("flat")
+    assert 0 < eng.prep_cache_bytes < before
+    eng.invalidate_prep_cache()
+    assert eng.prep_cache_bytes == 0 and len(eng._prep_cache) == 0
+
+
+def test_snapshot_reports_hit_rate(setup):
+    X, Qm, indexes = setup
+    eng = _engine({"flat": indexes["flat"]}, batch_buckets=(4,))
+    eng.search(Qm[:2], k=5, index="flat")
+    eng.search(Qm[:2], k=5, index="flat")
+    snap = eng.stats.snapshot()
+    assert snap["prep_hit_rate"] == pytest.approx(0.5)
+
+
 def test_pad_rows_not_cached(setup):
     """Zero-pad rows of an underfilled bucket never enter the prep
     cache — LRU capacity is spent on real queries only."""

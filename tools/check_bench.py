@@ -1,18 +1,42 @@
 """CI gate over benchmark JSON emitted by ``benchmarks.run --json``.
 
   python tools/check_bench.py bench.json BENCH_*.json
+  python tools/check_bench.py --baseline /path/to/old BENCH_*.json
 
-Fails (exit 1) when a file is missing/malformed, contains no rows, or
-carries ERROR rows — so a benchmark function silently dying turns CI
-red instead of quietly truncating the perf trajectory.
+Health checks (always on) fail (exit 1) when a file is missing or
+malformed, contains no rows, or carries ERROR rows — so a benchmark
+function silently dying turns CI red instead of quietly truncating the
+perf trajectory.
+
+Trajectory diffing (``--baseline DIR``) compares each file against the
+same-named snapshot in DIR row by row:
+
+  * ``us_per_call`` (lower is better) and ``derived.qps`` (higher is
+    better) regressions beyond ``--warn-ratio`` print WARN lines;
+    beyond ``--fail-ratio`` they fail the gate.
+  * rows present in the baseline but missing from the current file
+    warn (the trajectory would silently truncate otherwise).
+  * files whose ``quick`` mode differs from the baseline's are skipped
+    with a note — quick (CI-smoke) and full-size numbers are not
+    comparable.
+
+Combined files (from ``--json OUT``) diff each group against the
+baseline's ``BENCH_<group>.json``.
 """
 from __future__ import annotations
 
+import argparse
 import json
+import os
 import sys
 
 EXPECTED_SCHEMA = 1
 ROW_KEYS = {"name", "us_per_call", "derived", "error"}
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
 
 
 def _rows_of(doc: dict, path: str) -> list:
@@ -28,8 +52,7 @@ def _rows_of(doc: dict, path: str) -> list:
 def check(path: str) -> list[str]:
     """Problems found in one bench JSON file ([] == healthy)."""
     try:
-        with open(path) as f:
-            doc = json.load(f)
+        doc = _load(path)
     except (OSError, json.JSONDecodeError) as e:
         return [f"{path}: unreadable ({e})"]
     problems = []
@@ -54,16 +77,128 @@ def check(path: str) -> list[str]:
     return problems
 
 
+# ---------------------------------------------------------------------------
+# Trajectory diffing
+# ---------------------------------------------------------------------------
+
+
+def _healthy_rows(doc: dict, path: str) -> dict[str, dict]:
+    """name -> row map of well-formed, non-ERROR rows."""
+    out = {}
+    for r in _rows_of(doc, path):
+        if isinstance(r, dict) and ROW_KEYS <= set(r) and r["error"] is None:
+            out[r["name"]] = r
+    return out
+
+
+def _row_regressions(name: str, base: dict, cur: dict) -> list[tuple]:
+    """[(metric, ratio)] regression factors for one row (ratio > 1 ==
+    slower); us_per_call is lower-better, derived qps higher-better."""
+    out = []
+    b_us, c_us = base.get("us_per_call", 0), cur.get("us_per_call", 0)
+    if b_us and c_us:  # rows timing nothing (us == 0) carry no signal
+        out.append(("us_per_call", c_us / b_us))
+    b_qps = base.get("derived", {}).get("qps")
+    c_qps = cur.get("derived", {}).get("qps")
+    if isinstance(b_qps, (int, float)) and isinstance(c_qps, (int, float)) \
+            and b_qps > 0 and c_qps > 0:
+        out.append(("qps", b_qps / c_qps))
+    return out
+
+
+def diff(
+    path: str, baseline_dir: str, warn_ratio: float, fail_ratio: float
+) -> tuple[list[str], list[str]]:
+    """(failures, warnings) from comparing ``path`` against the
+    same-named snapshot (or per-group snapshots) under baseline_dir."""
+    try:
+        doc = _load(path)
+    except (OSError, json.JSONDecodeError):
+        return [], []  # health check already reported it
+
+    # (current rows, baseline file) pairs to compare
+    pairs = []
+    if "groups" in doc:
+        for group, rows in doc["groups"].items():
+            pairs.append((
+                {r["name"]: r for r in rows
+                 if isinstance(r, dict) and r.get("error") is None},
+                os.path.join(baseline_dir, f"BENCH_{group}.json"),
+            ))
+    else:
+        pairs.append((
+            _healthy_rows(doc, path),
+            os.path.join(baseline_dir, os.path.basename(path)),
+        ))
+
+    failures, warnings = [], []
+    for cur_rows, base_path in pairs:
+        if not os.path.exists(base_path):
+            warnings.append(
+                f"{path}: no baseline {base_path} (new group?) — skipped"
+            )
+            continue
+        try:
+            base_doc = _load(base_path)
+        except (OSError, json.JSONDecodeError) as e:
+            warnings.append(f"{base_path}: unreadable baseline ({e})")
+            continue
+        if bool(base_doc.get("quick")) != bool(doc.get("quick")):
+            warnings.append(
+                f"{path} vs {base_path}: quick/full size mismatch — "
+                f"not comparable, diff skipped"
+            )
+            continue
+        base_rows = _healthy_rows(base_doc, base_path)
+        for name, base_row in base_rows.items():
+            cur = cur_rows.get(name)
+            if cur is None:
+                warnings.append(
+                    f"{path}: row {name} vanished vs {base_path} "
+                    f"(trajectory truncation)"
+                )
+                continue
+            for metric, ratio in _row_regressions(name, base_row, cur):
+                msg = (
+                    f"{path}: {name} {metric} regressed {ratio:.2f}x "
+                    f"vs {base_path}"
+                )
+                if ratio >= fail_ratio:
+                    failures.append(msg)
+                elif ratio >= warn_ratio:
+                    warnings.append(msg)
+    return failures, warnings
+
+
 def main(argv: list[str]) -> int:
-    paths = argv or ["bench.json"]
-    problems = []
+    p = argparse.ArgumentParser()
+    p.add_argument("paths", nargs="*", default=["bench.json"])
+    p.add_argument("--baseline", default=None, metavar="DIR",
+                   help="directory of snapshot BENCH_*.json files to "
+                        "diff against (same-size runs only)")
+    p.add_argument("--warn-ratio", type=float, default=1.5,
+                   help="slowdown factor that prints a WARN (default 1.5)")
+    p.add_argument("--fail-ratio", type=float, default=3.0,
+                   help="slowdown factor that fails the gate (default 3)")
+    args = p.parse_args(argv)
+
+    paths = args.paths or ["bench.json"]
+    problems, warnings = [], []
     for path in paths:
         problems.extend(check(path))
-    for p in problems:
-        print(f"FAIL {p}")
+        if args.baseline is not None:
+            f, w = diff(path, args.baseline, args.warn_ratio,
+                        args.fail_ratio)
+            problems.extend(f)
+            warnings.extend(w)
+    for w in warnings:
+        print(f"WARN {w}")
+    for pr in problems:
+        print(f"FAIL {pr}")
     if problems:
         return 1
-    print(f"OK {len(paths)} file(s) clean")
+    print(f"OK {len(paths)} file(s) clean"
+          + (f", {len(warnings)} warning(s)" if warnings else ""))
     return 0
 
 
