@@ -15,7 +15,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import D, dataset, row, timed
+from benchmarks.common import D, QUICK, dataset, row, timed
 from repro.baselines import pq
 from repro.core import ASHConfig, encode, payload_stats, prepare_queries, train
 from repro.core import scoring as S
@@ -107,4 +107,109 @@ def fused_metric_paths():
     return rows
 
 
-ALL = [scoring_paths, fused_metric_paths]
+def gathered_scan_paths():
+    """Masked-gather scoring (IVF partial-probe primitive) vs the
+    retained rowwise reference (per-query payload gather + rowwise
+    scorers) on ragged candidate lists with pad ids, plus fused gather
+    selection vs materialize-then-``top_k``.  CPU numbers time the
+    fused oracle (the kernel only interprets on CPU)."""
+    from repro.index import common as C
+
+    X, Qm, _ = dataset()
+    rows_out = []
+    cfg = ASHConfig(b=2, d=D, n_landmarks=16)
+    model, _ = train(jax.random.PRNGKey(0), X, cfg)
+    pay = encode(model, X)
+    prep = prepare_queries(model, Qm)
+    stats = payload_stats(model, pay)
+    R = 256 if QUICK else 512
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    cand = jax.random.randint(k1, (Qm.shape[0], R), 0, pay.n)
+    pads = jax.random.uniform(k2, cand.shape) < 0.2
+    cand = jnp.where(pads, -1, cand).astype(jnp.int32)
+    n_scores = cand.size
+
+    def rowwise_one(prep_q, rows_q):
+        sub = C.gather_payload(pay, rows_q)
+        one = jax.tree_util.tree_map(lambda a: a[None], prep_q)
+        sc = -S.score_l2(model, one, sub, rowwise=True)[0]
+        return jnp.where(rows_q >= 0, sc, -jnp.inf)
+
+    rowwise = jax.jit(lambda: jax.vmap(rowwise_one)(prep, cand))
+    _, us_r = timed(rowwise, repeats=3)
+    rows_out.append(row("kernel/ash_score_gather_rowwise", us_r,
+                        f"R={R};ns_per_dot={1e3 * us_r / n_scores:.3f}"))
+
+    fused = jax.jit(functools.partial(
+        ops.ash_score_gather, model, prep, pay, cand, metric="l2",
+        stats=stats, use_pallas=False,
+    ))
+    _, us_f = timed(fused, repeats=3)
+    rows_out.append(row("kernel/ash_score_gather_fused", us_f,
+                        f"R={R};ns_per_dot={1e3 * us_f / n_scores:.3f};"
+                        f"speedup_vs_rowwise={us_r / max(us_f, 1e-9):.2f}x"))
+
+    k = 100
+    mat = jax.jit(lambda: jax.lax.top_k(fused(), k))
+    _, us_m = timed(mat, repeats=3)
+    rows_out.append(row("kernel/ash_score_gather_topk_materialize", us_m,
+                        f"k={k};R={R}"))
+    fused_tk = jax.jit(functools.partial(
+        ops.ash_score_gather_topk, model, prep, pay, cand, k,
+        metric="l2", stats=stats, use_pallas=False,
+    ))
+    _, us_t = timed(fused_tk, repeats=3)
+    rows_out.append(row(
+        "kernel/ash_score_gather_topk_fused", us_t,
+        f"k={k};R={R};"
+        f"speedup_vs_materialize={us_m / max(us_t, 1e-9):.2f}x"))
+    return rows_out
+
+
+def sharded_scan_paths():
+    """Sharded local scan: the fused route (metric epilogues off
+    encode-time stats + fused local top-k) vs the retained reference
+    route (pure-jnp scorers + materialize-then-``top_k``), same mesh,
+    same merge."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.index import AshIndex
+    from repro.index import distributed as DX
+
+    X, Qm, _ = dataset()
+    rows_out = []
+    cfg = ASHConfig(b=2, d=D, n_landmarks=16)
+    model, _ = train(jax.random.PRNGKey(0), X, cfg)
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+    idx = AshIndex.from_parts(
+        model, encode(model, X), backend="sharded", metric="l2",
+        mesh=mesh, axes=("data",),
+    )
+    state = idx._state
+    prep = idx.prepare(Qm)
+    n_scores = Qm.shape[0] * X.shape[0]
+
+    ref_fn = DX.make_sharded_search_prepped(
+        mesh, model, ("data",), 10, metric="l2", fused=False
+    )
+    _, us_r = timed(
+        lambda: ref_fn(state.sharded, prep), repeats=3
+    )
+    rows_out.append(row("kernel/sharded_scan_ref", us_r,
+                        f"ns_per_dot={1e3 * us_r / n_scores:.3f}"))
+
+    fused_fn = state.searcher(10)
+    _, us_f = timed(
+        lambda: fused_fn(state.sharded, prep,
+                         stats=state.sharded_stats),
+        repeats=3,
+    )
+    rows_out.append(row("kernel/sharded_scan_fused", us_f,
+                        f"ns_per_dot={1e3 * us_f / n_scores:.3f};"
+                        f"speedup_vs_ref={us_r / max(us_f, 1e-9):.2f}x"))
+    return rows_out
+
+
+ALL = [scoring_paths, fused_metric_paths, gathered_scan_paths,
+       sharded_scan_paths]

@@ -312,9 +312,12 @@ class IVFBackend:
 class ShardedState:
     """Host copy of the payload + its device-sharded placement.
 
-    The host copy (unpadded) is kept for add()/save(); the padded,
-    row-sharded copy is what searches scan.  Compiled searchers are
-    cached per k and invalidated when the placement changes.
+    The host copies (unpadded) are kept for add()/save(); the padded,
+    row-sharded copies are what searches scan: the payload, its
+    encode-time ``ASHStats`` (fused l2/cos epilogue inputs) and — when
+    built with ``keep_raw`` — a bf16 raw-vector shard enabling
+    shard-local exact rerank.  Compiled searchers are cached per
+    (k, rerank) and invalidated when the placement changes.
     """
 
     metric: str
@@ -322,30 +325,59 @@ class ShardedState:
     payload: ASHPayload  # unpadded, host-side source of truth
     mesh: Any
     axes: tuple[str, ...]
+    raw: Optional[jax.Array] = None  # unpadded bf16 rows (rerank)
+    stats: Optional[ASHStats] = None  # unpadded; built when missing
     sharded: ASHPayload = dataclasses.field(init=False)
+    sharded_stats: ASHStats = dataclasses.field(init=False)
+    sharded_raw: Optional[jax.Array] = dataclasses.field(init=False)
     searchers: dict = dataclasses.field(init=False, default_factory=dict)
 
     def __post_init__(self):
+        # the unpadded payload is the gather-safe source of truth: the
+        # pad sentinel (cluster == -1) must only ever exist on the
+        # device-side padded copy, where row masking precedes use.
+        # Validated once here — add() only appends encode() output,
+        # whose cluster assignments are always valid
+        cluster = np.asarray(self.payload.cluster)
+        if cluster.size and int(cluster.min()) < 0:
+            raise ValueError(
+                "pad-sentinel cluster ids in the host payload; "
+                "construct ShardedState from an unpadded payload"
+            )
+        if self.stats is None:
+            self.stats = S.payload_stats(self.model, self.payload)
         self.place()
 
     def place(self):
         mult = math.prod(self.mesh.shape[a] for a in self.axes)
         padded = DX.pad_to_multiple(self.payload, mult)
-        self.sharded = DX.shard_payload(self.mesh, padded, self.axes)
+        pad = padded.n - self.payload.n
+        self.sharded = DX.shard_rows(self.mesh, padded, self.axes)
+        self.sharded_stats = DX.shard_rows(
+            self.mesh, DX.pad_stats(self.stats, pad), self.axes
+        )
+        self.sharded_raw = None if self.raw is None else DX.shard_rows(
+            self.mesh,
+            jnp.pad(self.raw, ((0, pad), (0, 0))),
+            self.axes,
+        )
         self.searchers = {}
 
-    def searcher(self, k: int):
-        """(payload, QueryPrep) -> (scores, ids) searcher, cached per k.
+    def searcher(self, k: int, rerank: int = 0):
+        """(payload, QueryPrep) -> (scores, ids) searcher, cached per
+        (k, rerank shortlist).
 
         Prep-based so the direct and engine paths share one compiled
         function (queries are prepped outside the shard_map, once,
         instead of redundantly on every shard)."""
-        if k not in self.searchers:
-            self.searchers[k] = DX.make_sharded_search_prepped(
+        key = (k, rerank)
+        if key not in self.searchers:
+            self.searchers[key] = DX.make_sharded_search_prepped(
                 self.mesh, self.model, self.axes, k,
                 metric=self.metric, n_real=self.payload.n,
+                rerank=rerank,
             )
-        return self.searchers[k]
+        return self.searchers[key]
 
 
 def _default_mesh(axes: tuple[str, ...]):
@@ -372,7 +404,7 @@ class ShardedBackend:
 
     @staticmethod
     def build(key, X, config, *, metric, mesh=None, axes=None,
-              model=None, learned=True, **train_kw):
+              model=None, learned=True, keep_raw=False, **train_kw):
         mesh, axes = ShardedBackend._resolve_mesh(mesh, axes)
         model = _train_or_reuse(
             key, X, config, model=model, learned=learned, **train_kw
@@ -380,16 +412,16 @@ class ShardedBackend:
         return ShardedState(
             metric=metric, model=model, payload=A.encode(model, X),
             mesh=mesh, axes=axes,
+            raw=X.astype(jnp.bfloat16) if keep_raw else None,
         )
 
     @staticmethod
     def from_parts(model, payload, *, metric, raw=None, mesh=None,
                    axes=None):
-        del raw  # exact rerank needs local raw vectors: unsupported
         mesh, axes = ShardedBackend._resolve_mesh(mesh, axes)
         return ShardedState(
             metric=metric, model=model, payload=payload,
-            mesh=mesh, axes=axes,
+            mesh=mesh, axes=axes, raw=raw,
         )
 
     @staticmethod
@@ -402,17 +434,27 @@ class ShardedBackend:
     @staticmethod
     def search_prepped(state, prep, *, k, nprobe=None, rerank=0):
         del nprobe  # no coarse routing in the scatter-gather scan
-        if rerank:
+        if rerank and state.raw is None:
             raise ValueError(
-                "rerank is not supported by the sharded backend "
-                "(raw vectors are not distributed with the payload)"
+                "rerank on the sharded backend requires keep_raw=True "
+                "(bf16 raw shards are distributed with the payload)"
             )
-        return state.searcher(k)(state.sharded, prep)
+        return state.searcher(k, rerank)(
+            state.sharded, prep,
+            stats=state.sharded_stats, raw=state.sharded_raw,
+        )
 
     @staticmethod
     def add(state, X_new):
         payload_new = A.encode(state.model, X_new)
         state.payload = C.concat_payloads(state.payload, payload_new)
+        state.stats = C.concat_stats(
+            state.stats, S.payload_stats(state.model, payload_new)
+        )
+        if state.raw is not None:
+            state.raw = jnp.concatenate(
+                [state.raw, X_new.astype(jnp.bfloat16)], axis=0
+            )
         state.place()
         return state
 
@@ -425,11 +467,18 @@ class ShardedBackend:
         return state.payload
 
     @staticmethod
+    def stats_of(state):
+        return state.stats
+
+    @staticmethod
     def to_arrays(state):
         arrays = {
             **_model_arrays(state.model),
             **_payload_arrays(state.payload),
+            **_stats_arrays(state.stats),
         }
+        if state.raw is not None:
+            arrays["raw"] = state.raw
         return arrays, {"axes": list(state.axes)}
 
     @staticmethod
@@ -437,12 +486,16 @@ class ShardedBackend:
                     axes=None):
         axes = tuple(axes or meta.get("axes") or ("data",))
         mesh, axes = ShardedBackend._resolve_mesh(mesh, axes)
+        model = _model_from_arrays(arrays, config)
+        payload = _payload_from_arrays(arrays, config)
         return ShardedState(
             metric=metric,
-            model=_model_from_arrays(arrays, config),
-            payload=_payload_from_arrays(arrays, config),
+            model=model,
+            payload=payload,
             mesh=mesh,
             axes=axes,
+            raw=arrays.get("raw"),
+            stats=_stats_from_arrays(arrays, model, payload),
         )
 
 
@@ -621,7 +674,8 @@ class AshIndex:
     @property
     def stats(self) -> Optional[ASHStats]:
         """Encode-time row statistics (fused l2/cos epilogue inputs);
-        None for backends that score via the reference path."""
+        carried by every built-in backend, None only for custom
+        backends without a ``stats_of``."""
         stats_of = getattr(self._backend, "stats_of", None)
         return None if stats_of is None else stats_of(self._state)
 

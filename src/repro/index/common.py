@@ -1,8 +1,19 @@
 """Shared machinery for every index backend.
 
-One metric dispatcher and one exact-rerank pipeline, used by the flat,
-IVF and sharded backends (and the serving layer) instead of each
-re-implementing score selection and shortlist rerank by hand.
+One metric dispatcher, one scan-plan executor and one exact-rerank
+pipeline, used by the flat, IVF and sharded backends (and the serving
+layer) instead of each re-implementing score selection and shortlist
+rerank by hand.
+
+Every backend lowers its search to a :class:`ScanPlan` — a declarative
+description of WHAT to score (a dense row range, optionally truncated
+by ``n_valid``, or per-query gathered candidate lists via ``rows``)
+plus metric / top-k / rerank — and :func:`execute_plan` picks the
+kernel: the fused dense scan family for dense plans, the masked-gather
+family for gathered plans, with materialize-then-``top_k`` fallbacks
+beyond the fused-selection budget.  The fused and fallback routes
+return identical results, so the routing boundary is invisible to
+callers.
 
 Score convention: **higher is better** for every metric — L2 scores are
 negated squared distances.  Invalid candidates carry ``NEG_INF`` scores
@@ -11,7 +22,8 @@ silently aliased to row 0.
 """
 from __future__ import annotations
 
-from typing import Optional
+import dataclasses
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -44,31 +56,26 @@ def approx_scores(
     metric: str,
     *,
     use_pallas: Optional[bool] = False,
-    rowwise: bool = False,
     stats: Optional[ASHStats] = None,
 ) -> jax.Array:
     """ASH scores of all payload rows, (m, n), higher-is-better.
 
-    use_pallas: ``False`` → the pure-jnp reference scorers; ``True`` /
-    ``None`` → route EVERY metric through the fused kernel family
-    (``None`` = auto: Pallas on TPU, the identical-semantics jnp oracle
-    on CPU).  The l2/cos epilogues consume the encode-time ``stats``
+    use_pallas: ``False`` → the pure-jnp reference scorers (retained as
+    oracles; ``scoring.score_*`` keep a ``rowwise`` mode for
+    batch-invariance cross-checks); ``True`` / ``None`` → route EVERY
+    metric through the fused kernel family (``None`` = auto: Pallas on
+    TPU, the identical-semantics jnp oracle on CPU).  The l2/cos
+    epilogues consume the encode-time ``stats``
     (``scoring.payload_stats``); when absent they are rebuilt on the
     fly, which unpacks the database once.
-
-    rowwise: batch-size-invariant reduction order for the DOT-PROD term
-    (see ``scoring.score_dot``) — required on gathered/vmapped candidate
-    sets so scores stay bit-identical across serving batch shapes;
-    incompatible with the fused kernel, so it forces the reference
-    scorers regardless of ``use_pallas``.
     """
-    if use_pallas is False or rowwise:
+    if use_pallas is False:
         if metric == "dot":
-            return S.score_dot(model, prep, payload, rowwise=rowwise)
+            return S.score_dot(model, prep, payload)
         if metric == "l2":
-            return -S.score_l2(model, prep, payload, rowwise=rowwise)
+            return -S.score_l2(model, prep, payload)
         if metric == "cos":
-            return S.score_cosine(model, prep, payload, rowwise=rowwise)
+            return S.score_cosine(model, prep, payload)
         raise ValueError(metric)
     validate_metric(metric)
     from repro.kernels import ops as K
@@ -88,6 +95,7 @@ def approx_topk(
     *,
     use_pallas: Optional[bool] = None,
     stats: Optional[ASHStats] = None,
+    n_valid: Any = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Fused-selection top-k over all payload rows: (scores, rows).
 
@@ -95,13 +103,15 @@ def approx_topk(
     but on TPU the (m, n) score matrix never reaches HBM (each kernel
     tile emits a partial top-k̃; see ``kernels.ash_score``).  Callers
     must keep ``k <= fused_topk_limit()`` and ``k <= payload.n``.
+    ``n_valid`` (int or traced scalar) masks rows at/beyond it inside
+    the scan (sharded pad-row masking).
     """
     validate_metric(metric)
     from repro.kernels import ops as K
 
     return K.ash_score_topk(
         model, prep, payload, k, metric=metric, stats=stats,
-        use_pallas=use_pallas,
+        use_pallas=use_pallas, n_valid=n_valid,
     )
 
 
@@ -112,62 +122,158 @@ def fused_topk_limit() -> int:
     return K.FUSED_TOPK_MAX_K
 
 
-def scan_topk(
+# ---------------------------------------------------------------------------
+# ScanPlan — the single scoring path every backend lowers to
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ScanPlan:
+    """Declarative description of one top-k scan.
+
+    WHAT to score:
+      * dense (``rows is None``): every payload row, optionally
+        truncated by ``n_valid`` (an int or traced scalar; rows
+        at/beyond it are padding and score ``-inf`` — the sharded
+        backend's per-shard pad masking).
+      * gathered (``rows`` = (m, R) int32): query i scores its own
+        candidate list ``rows[i]`` (IVF partial probes); pad entries
+        carry id -1 and score ``-inf``.
+
+    HOW to select: top-``k`` per query; ``rerank > 0`` retrieves a
+    ``max(rerank, k)`` shortlist by ASH scores and re-ranks it with
+    exact scores over the ``raw`` vectors handed to
+    :func:`execute_plan`.  ``ids`` maps payload rows to user-facing ids
+    (IVF stores rows sorted by list).  ``use_pallas``: None = auto
+    (Pallas on TPU, the bit-identical-semantics jnp oracle on CPU),
+    False = the retained pure-jnp reference scorers.
+    """
+
+    metric: str
+    k: int
+    rerank: int = 0
+    rows: Optional[jax.Array] = None
+    n_valid: Any = None
+    ids: Optional[jax.Array] = None
+    use_pallas: Optional[bool] = None
+
+
+def _map_ids(rows: jax.Array, ids: Optional[jax.Array]) -> jax.Array:
+    """Map payload rows to user-facing ids, preserving the -1
+    missing-candidate sentinel (shared tail of every plan route)."""
+    if ids is None:
+        return rows
+    return jnp.where(rows < 0, -1, ids[jnp.maximum(rows, 0)])
+
+
+def execute_plan(
     model: ASHModel,
     prep: QueryPrep,
     payload: ASHPayload,
-    metric: str,
-    k: int,
+    plan: ScanPlan,
     *,
-    rerank: int = 0,
-    raw: Optional[jax.Array] = None,
     stats: Optional[ASHStats] = None,
-    use_pallas: Optional[bool] = None,
-    ids: Optional[jax.Array] = None,
+    raw: Optional[jax.Array] = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Dense-scan top-k routing shared by the flat backend and the IVF
-    full-probe (nprobe == nlist) path.
+    """Lower a :class:`ScanPlan` onto the fused kernel family.
 
-    Fuses the scan with on-chip selection whenever the requested top-k
-    or rerank shortlist fits :func:`fused_topk_limit`, falling back to
-    materialize + ``lax.top_k`` beyond it — the two return identical
-    results, so the routing boundary is invisible to callers.  ``raw``
-    enables the exact-rerank pipeline; ``ids`` maps payload rows to
-    user-facing ids (IVF stores rows sorted by list).
+    Returns (scores, ids), each (m, k).  The scan and the selection
+    fuse whenever the requested top-k / rerank shortlist fits
+    :func:`fused_topk_limit`, falling back to materialize +
+    ``lax.top_k`` beyond it — the two return identical results, so the
+    routing boundary is invisible to callers.
     """
+    validate_metric(plan.metric)
+    if plan.rows is None:
+        return _execute_dense(
+            model, prep, payload, plan, stats=stats, raw=raw
+        )
+    if plan.n_valid is not None:
+        raise ValueError(
+            "n_valid applies to dense plans only; gathered plans mask "
+            "by pad id (-1 entries in rows)"
+        )
+    return _execute_gather(
+        model, prep, payload, plan, stats=stats, raw=raw
+    )
+
+
+def _execute_dense(model, prep, payload, plan, *, stats, raw):
+    """Dense-scan lowering (flat, IVF full probe, sharded local scan)."""
     n = payload.n
-    fused = use_pallas is not False
+    fused = plan.use_pallas is not False
     cap = fused_topk_limit()
-    if rerank and raw is not None:
-        R = min(max(rerank, k), n)
+
+    def materialized():
+        s = approx_scores(
+            model, prep, payload, plan.metric,
+            use_pallas=plan.use_pallas, stats=stats,
+        )
+        if plan.n_valid is None:
+            return s
+        from repro.kernels import ops as K
+
+        return K.mask_valid_rows(s, plan.n_valid)
+
+    if plan.rerank and raw is not None:
+        R = min(max(plan.rerank, plan.k), n)
         if fused and R <= cap:
             short_s, short_rows = approx_topk(
-                model, prep, payload, metric, R,
-                use_pallas=use_pallas, stats=stats,
+                model, prep, payload, plan.metric, R,
+                use_pallas=plan.use_pallas, stats=stats,
+                n_valid=plan.n_valid,
             )
         else:
-            approx = approx_scores(
-                model, prep, payload, metric,
-                use_pallas=use_pallas, stats=stats,
-            )
-            short_s, short_rows = jax.lax.top_k(approx, R)
+            short_s, short_rows = jax.lax.top_k(materialized(), R)
         return exact_rerank(
-            prep, raw, short_s, short_rows, metric, k, ids=ids
+            prep, raw, short_s, short_rows, plan.metric, plan.k,
+            ids=plan.ids,
         )
-    if fused and k <= min(cap, n):
+    if fused and plan.k <= min(cap, n):
         s, rows = approx_topk(
-            model, prep, payload, metric, k,
-            use_pallas=use_pallas, stats=stats,
+            model, prep, payload, plan.metric, plan.k,
+            use_pallas=plan.use_pallas, stats=stats, n_valid=plan.n_valid,
         )
     else:
-        approx = approx_scores(
-            model, prep, payload, metric,
-            use_pallas=use_pallas, stats=stats,
+        s, rows = jax.lax.top_k(materialized(), plan.k)
+    if plan.n_valid is not None:
+        # -inf slots carry route-dependent ids under row masking (the
+        # fused kernel emits sentinels, lax.top_k the masked rows);
+        # normalize both routes to the repo-wide -1 convention so the
+        # routing boundary stays invisible
+        rows = jnp.where(jnp.isneginf(s), -1, rows)
+    return s, _map_ids(rows, plan.ids)
+
+
+def _execute_gather(model, prep, payload, plan, *, stats, raw):
+    """Gathered-candidate lowering (IVF partial probes)."""
+    from repro.kernels import ops as K
+
+    R = plan.rows.shape[1]
+    fused = plan.use_pallas is not False
+    cap = fused_topk_limit()
+
+    def shortlist(size):
+        if fused and size <= cap:
+            return K.ash_score_gather_topk(
+                model, prep, payload, plan.rows, size,
+                metric=plan.metric, stats=stats,
+                use_pallas=plan.use_pallas,
+            )
+        sc = K.ash_score_gather(
+            model, prep, payload, plan.rows, metric=plan.metric,
+            stats=stats, use_pallas=plan.use_pallas,
         )
-        s, rows = jax.lax.top_k(approx, k)
-    if ids is None:
-        return s, rows
-    return s, jnp.where(rows < 0, -1, ids[jnp.maximum(rows, 0)])
+        s, pos = jax.lax.top_k(sc, size)
+        return s, jnp.take_along_axis(plan.rows, pos, axis=1)
+
+    if plan.rerank and raw is not None:
+        ss, srows = shortlist(min(max(plan.rerank, plan.k), R))
+        return exact_rerank(
+            prep, raw, ss, srows, plan.metric, plan.k, ids=plan.ids
+        )
+    s, rows_out = shortlist(plan.k)
+    return s, _map_ids(rows_out, plan.ids)
 
 
 # ---------------------------------------------------------------------------
@@ -233,15 +339,6 @@ def exact_rerank(
     return rs, jnp.where(jnp.isneginf(rs), -1, out)
 
 
-def masked_topk(
-    scores: jax.Array, ids: jax.Array, k: int
-) -> tuple[jax.Array, jax.Array]:
-    """Top-k of (m, n) scores; ``NEG_INF`` entries come back as id -1."""
-    ts, ti = jax.lax.top_k(scores, k)
-    out = jnp.take_along_axis(ids, ti, axis=1)
-    return ts, jnp.where(jnp.isneginf(ts), -1, out)
-
-
 # ---------------------------------------------------------------------------
 # Payload manipulation shared by backends
 # ---------------------------------------------------------------------------
@@ -249,7 +346,10 @@ def masked_topk(
 
 def gather_payload(payload: ASHPayload, rows: jax.Array) -> ASHPayload:
     """Gather payload rows (any leading batch shape); -1 rows read row 0
-    (callers mask them by score)."""
+    (callers mask them by score).  Serving no longer routes through
+    payload gathers — gathered plans feed the masked-gather kernels —
+    but the rowwise reference path (tests, benchmarks) still scores
+    per-query sub-payloads built with this."""
     safe = jnp.maximum(rows, 0)
     return ASHPayload(
         b=payload.b,

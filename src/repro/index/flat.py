@@ -90,13 +90,15 @@ def _search_prepped(
     its size fits ``common.fused_topk_limit()``; the fallback
     materializes scores and runs ``lax.top_k`` — both return identical
     results, so the routing choice is invisible to callers (the ladder
-    itself lives in ``common.scan_topk``, shared with the IVF
-    full-probe path).
+    itself lives in ``common.execute_plan``, shared with the IVF and
+    sharded backends).
     """
-    return C.scan_topk(
-        index.model, prep, index.payload, index.metric, k,
-        rerank=rerank, raw=index.raw, stats=index.stats,
-        use_pallas=use_pallas,
+    plan = C.ScanPlan(
+        metric=index.metric, k=k, rerank=rerank, use_pallas=use_pallas
+    )
+    return C.execute_plan(
+        index.model, prep, index.payload, plan,
+        stats=index.stats, raw=index.raw,
     )
 
 

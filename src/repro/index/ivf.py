@@ -63,6 +63,13 @@ def _assemble(
     import numpy as np
 
     cluster = np.asarray(payload.cluster)
+    # the -1 pad sentinel (distributed.pad_to_multiple) must never be
+    # gathered into inverted lists — it aliases under wrapped indexing
+    if cluster.size and cluster.min() < 0:
+        raise ValueError(
+            "payload contains pad-sentinel cluster ids (-1); assemble "
+            "inverted lists from an unpadded payload"
+        )
     nlist = model.landmarks.shape[0]
     order = np.argsort(cluster, kind="stable")
     counts = np.bincount(cluster[order], minlength=nlist)
@@ -147,8 +154,9 @@ def _search_prepped(
     nprobe >= nlist probes every list — coarse routing degenerates to
     an exhaustive scan, so the query skips the gather entirely and runs
     the flat fused-kernel scan over the (list-sorted) payload, mapping
-    rows back through ``index.ids``.  Partial probes gather their
-    candidate lists and score rowwise (batch-shape-invariant)."""
+    rows back through ``index.ids``.  Partial probes lower to a
+    gathered ``ScanPlan`` served by the masked-gather kernel family
+    (batch-shape-invariant rowwise oracle on CPU)."""
     if nprobe >= index.invlists.shape[0]:
         return _full_scan(index, prep, k, rerank)
     if prep.q.shape[0] == 1:
@@ -173,12 +181,15 @@ def _full_scan(
     use_pallas: Optional[bool] = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Exhaustive fused-kernel scan (the nprobe == nlist case): the
-    flat backend's routing ladder (``common.scan_topk``) with payload
-    rows mapped to user ids via ``index.ids``."""
-    return C.scan_topk(
-        index.model, prep, index.payload, index.metric, k,
-        rerank=rerank, raw=index.raw, stats=index.stats,
-        use_pallas=use_pallas, ids=index.ids,
+    flat backend's routing ladder (a dense ``common.ScanPlan``) with
+    payload rows mapped to user ids via ``index.ids``."""
+    plan = C.ScanPlan(
+        metric=index.metric, k=k, rerank=rerank, ids=index.ids,
+        use_pallas=use_pallas,
+    )
+    return C.execute_plan(
+        index.model, prep, index.payload, plan,
+        stats=index.stats, raw=index.raw,
     )
 
 
@@ -189,6 +200,10 @@ def _score_gathered(
     nprobe: int,
     rerank: int,
 ) -> tuple[jax.Array, jax.Array]:
+    """Partial probes: gather each query's candidate lists and lower to
+    a gathered ``ScanPlan`` — the masked-gather kernel family scores
+    straight off the packed codes (pad ids mask to ``-inf``) and fuses
+    the selection; no (m, nprobe*L) score matrix reaches HBM on TPU."""
     m = prep.q.shape[0]
     # coarse routing: nearest centroids by L2 (== max <q,mu> - ||mu||^2/2)
     coarse = (
@@ -197,28 +212,13 @@ def _score_gathered(
     )
     _, probe = jax.lax.top_k(coarse, nprobe)  # (m, nprobe)
     cand_rows = index.invlists[probe].reshape(m, -1)  # (m, nprobe*L)
-    valid = cand_rows >= 0
-
-    def score_one(prep_q, rows_q, valid_q):
-        sub = C.gather_payload(index.payload, rows_q)
-        one = jax.tree_util.tree_map(
-            lambda a: a[None] if hasattr(a, "ndim") else a, prep_q
-        )
-        sc = C.approx_scores(
-            index.model, one, sub, index.metric, rowwise=True
-        )[0]
-        return jnp.where(valid_q, sc, NEG_INF)
-
-    scores = jax.vmap(score_one)(prep, cand_rows, valid)  # (m, nprobe*L)
-    if rerank and index.raw is not None:
-        R = min(max(rerank, k), cand_rows.shape[1])
-        ss, si = jax.lax.top_k(scores, R)
-        rows = jnp.take_along_axis(cand_rows, si, axis=1)
-        return C.exact_rerank(
-            prep, index.raw, ss, rows, index.metric, k, ids=index.ids
-        )
-    return C.masked_topk(
-        scores, index.ids[jnp.maximum(cand_rows, 0)], k
+    plan = C.ScanPlan(
+        metric=index.metric, k=k, rerank=rerank, rows=cand_rows,
+        ids=index.ids,
+    )
+    return C.execute_plan(
+        index.model, prep, index.payload, plan,
+        stats=index.stats, raw=index.raw,
     )
 
 

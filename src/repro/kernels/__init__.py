@@ -1,11 +1,21 @@
 """Pallas TPU kernels for the ASH scoring hot paths.
 
 ash_score    — fused unpack + MXU matmul + Eq. (20) epilogue
+                (dense scans and masked-gather candidate lists, each
+                with fused on-chip top-k selection)
 ash_kv_attn  — decode attention over an ASH-compressed KV cache
 ref          — pure-jnp oracles (bit-exact semantics)
 ops          — public jit'd wrappers with CPU-interpret fallback
 """
 from repro.kernels import ref, ops
-from repro.kernels.ops import ash_score, ash_kv_attention
+from repro.kernels.ops import (
+    ash_score,
+    ash_score_gather,
+    ash_score_gather_topk,
+    ash_score_topk,
+    ash_kv_attention,
+)
 
-__all__ = ["ref", "ops", "ash_score", "ash_kv_attention"]
+__all__ = ["ref", "ops", "ash_score", "ash_score_topk",
+           "ash_score_gather", "ash_score_gather_topk",
+           "ash_kv_attention"]

@@ -50,8 +50,23 @@ selection drops from O(m·n) fp32 to O(m · n/block_n · k̃).
     merge maps to -1 (they can only surface when k exceeds the number
     of candidates actually emitted, i.e. never for k <= min(n, k̃)).
 
+Masked-gather variants (:func:`ash_score_gather_pallas`,
+:func:`ash_score_gather_topk_pallas`): the same epilogues and fused
+selection over PER-QUERY candidate lists (IVF partial probes) instead
+of a dense row range.  The candidate row ids arrive as a
+scalar-prefetch operand (``pltpu.PrefetchScalarGridSpec``) so the
+kernel DMA-gathers each candidate's PACKED code word strip HBM -> VMEM
+directly — neither the unpacked codes nor the (m, R) score matrix ever
+exist in HBM, only the 16x-32x-compressed words of the rows actually
+probed move.  Pad entries (row id -1) are masked to ``-inf`` in the
+epilogue (the id masking also absorbs the sharded backend's ``n_real``
+row-validity masking in the dense kernel, where ``n_valid`` is a
+runtime scalar-prefetch operand so one compiled program serves every
+shard of a shard_map).
+
 Grid: (n_blocks, m_blocks, d_blocks), d innermost for accumulation in a
-VMEM fp32 scratch tile.
+VMEM fp32 scratch tile; the gather variants use (m, r_blocks, d_blocks)
+— one query per row step, since each query gathers its own candidates.
 """
 from __future__ import annotations
 
@@ -166,7 +181,37 @@ def _kernel(
         ).astype(out_ref.dtype)
 
 
+def _select_topk(scores, valid, col0, k_tilde, vals_ref, ids_ref):
+    """Per-tile partial top-k̃ of ``scores`` (m_blk, n_blk) into the
+    (m_blk, k_tilde) output refs; shared by the dense and gather
+    selection kernels.
+
+    Iterative partial top-k̃: k̃ VPU max sweeps over the tile, ties to
+    the LOWEST id (the lax.top_k convention) via a min over the argmax
+    candidate set.  ``valid`` (not a -inf re-mask) tracks taken columns
+    so rows whose scores are genuinely -inf are still emitted once
+    each, in ascending-id order; invalid columns (block padding, masked
+    rows, gather pad ids) never surface.  Emitted ids are
+    ``col0 + column``; exhausted tiles emit the int32-max sentinel.
+    """
+    local = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    neg_inf = jnp.float32(-jnp.inf)
+    n_blk = scores.shape[1]
+    for t in range(k_tilde):
+        masked = jnp.where(valid, scores, neg_inf)
+        best = jnp.max(masked, axis=1)  # (m_blk,)
+        cand = jnp.where(
+            valid & (masked == best[:, None]), local, n_blk
+        )
+        bid = jnp.min(cand, axis=1)  # n_blk == tile exhausted
+        has = bid < n_blk
+        vals_ref[:, t] = jnp.where(has, best, neg_inf)
+        ids_ref[:, t] = jnp.where(has, bid + col0, _ID_SENTINEL)
+        valid = valid & (local != bid[:, None])
+
+
 def _topk_kernel(
+    n_valid_ref,  # scalar prefetch: (1,) int32 count of valid rows
     q_ref,
     codes_ref,
     scale_ref,
@@ -185,7 +230,6 @@ def _topk_kernel(
     metric: str,
     k_tilde: int,
     block_n: int,
-    n_valid: int,
 ):
     k_idx = pl.program_id(2)
     # program_id must be read outside the pl.when body (interpret mode
@@ -205,26 +249,11 @@ def _topk_kernel(
             qterm_ref, rowterm_ref, metric=metric,
         )  # (m_blk, n_blk) fp32
         local = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
-        # block-padding columns beyond the real n never win
-        valid = (local + col0) < n_valid
-        neg_inf = jnp.float32(-jnp.inf)
-        n_blk = scores.shape[1]
-        # Iterative partial top-k̃: k̃ VPU max sweeps over the tile,
-        # ties to the LOWEST id (the lax.top_k convention) via a min
-        # over the argmax candidate set.  `valid` (not a -inf re-mask)
-        # tracks taken columns so rows whose scores are genuinely -inf
-        # are still emitted once each, in ascending-id order.
-        for t in range(k_tilde):
-            masked = jnp.where(valid, scores, neg_inf)
-            best = jnp.max(masked, axis=1)  # (m_blk,)
-            cand = jnp.where(
-                valid & (masked == best[:, None]), local, n_blk
-            )
-            bid = jnp.min(cand, axis=1)  # n_blk == tile exhausted
-            has = bid < n_blk
-            vals_ref[:, t] = jnp.where(has, best, neg_inf)
-            ids_ref[:, t] = jnp.where(has, bid + col0, _ID_SENTINEL)
-            valid = valid & (local != bid[:, None])
+        # block-padding columns beyond the real n never win; n_valid is
+        # a RUNTIME operand so the sharded backend's n_real masking
+        # folds into the same id masking (one program for every shard)
+        valid = (local + col0) < n_valid_ref[0]
+        _select_topk(scores, valid, col0, k_tilde, vals_ref, ids_ref)
 
 
 def _pad_operands(
@@ -280,15 +309,21 @@ def _pad_operands(
 
 
 def _in_specs(g):
+    # trailing *_ absorbs the scalar-prefetch refs the selection grid
+    # spec appends to every index_map call (unused for block routing)
     return [
-        pl.BlockSpec((g["block_m"], g["block_d"]), lambda i, j, k_: (j, k_)),
-        pl.BlockSpec((g["block_n"], g["block_w"]), lambda i, j, k_: (i, k_)),
-        pl.BlockSpec((1, g["block_n"]), lambda i, j, k_: (0, i)),
-        pl.BlockSpec((1, g["block_n"]), lambda i, j, k_: (0, i)),
-        pl.BlockSpec((1, g["block_n"]), lambda i, j, k_: (0, i)),
-        pl.BlockSpec((g["block_m"], g["C"]), lambda i, j, k_: (j, 0)),
-        pl.BlockSpec((1, g["block_m"]), lambda i, j, k_: (0, j)),
-        pl.BlockSpec((1, g["block_n"]), lambda i, j, k_: (0, i)),
+        pl.BlockSpec(
+            (g["block_m"], g["block_d"]), lambda i, j, k_, *_: (j, k_)
+        ),
+        pl.BlockSpec(
+            (g["block_n"], g["block_w"]), lambda i, j, k_, *_: (i, k_)
+        ),
+        pl.BlockSpec((1, g["block_n"]), lambda i, j, k_, *_: (0, i)),
+        pl.BlockSpec((1, g["block_n"]), lambda i, j, k_, *_: (0, i)),
+        pl.BlockSpec((1, g["block_n"]), lambda i, j, k_, *_: (0, i)),
+        pl.BlockSpec((g["block_m"], g["C"]), lambda i, j, k_, *_: (j, 0)),
+        pl.BlockSpec((1, g["block_m"]), lambda i, j, k_, *_: (0, j)),
+        pl.BlockSpec((1, g["block_n"]), lambda i, j, k_, *_: (0, i)),
     ]
 
 
@@ -368,6 +403,7 @@ def ash_score_topk_pallas(
     ip_q_landmarks: jax.Array,  # (m, C)
     qterm: jax.Array | None = None,
     rowterm: jax.Array | None = None,
+    n_valid: jax.Array | None = None,  # scalar: rows >= this are masked
     *,
     b: int,
     k: int,
@@ -387,6 +423,12 @@ def ash_score_topk_pallas(
     (values, ids and tie order) for ``k <= k̃``; ``k̃`` defaults to
     ``k``.  Ids of exhausted slots come back as -1 (only reachable when
     ``k > min(n, k̃)``).
+
+    ``n_valid`` is a RUNTIME scalar (default: all ``n`` rows valid):
+    rows at or beyond it score ``-inf`` and are excluded from selection
+    exactly like block padding — this is how the sharded backend folds
+    its per-shard ``n_real`` pad-row masking into the kernel's id
+    masking (one compiled program serves every shard of a shard_map).
     """
     assert metric in METRICS, metric
     n = codes.shape[0]
@@ -395,6 +437,9 @@ def ash_score_topk_pallas(
         qterm, rowterm,
         b=b, block_m=block_m, block_n=block_n, block_d=block_d,
     )
+    if n_valid is None:
+        n_valid = jnp.int32(n)
+    n_valid_arr = jnp.asarray(n_valid, jnp.int32).reshape(1)
     if k_tilde is None:
         k_tilde = k
     k_tilde = min(k_tilde, g["block_n"])
@@ -404,6 +449,22 @@ def ash_score_topk_pallas(
             f"k={k} exceeds the {n_blocks} x k_tilde={k_tilde} candidate "
             f"strip; raise k_tilde or use the materializing kernel"
         )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=g["grid"],
+        in_specs=_in_specs(g),
+        out_specs=[
+            pl.BlockSpec(
+                (g["block_m"], k_tilde), lambda i, j, k_, *_: (j, i)
+            ),
+            pl.BlockSpec(
+                (g["block_m"], k_tilde), lambda i, j, k_, *_: (j, i)
+            ),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g["block_m"], g["block_n"]), jnp.float32)
+        ],
+    )
     vals, ids = pl.pallas_call(
         functools.partial(
             _topk_kernel,
@@ -413,23 +474,14 @@ def ash_score_topk_pallas(
             metric=metric,
             k_tilde=k_tilde,
             block_n=g["block_n"],
-            n_valid=n,
         ),
-        grid=g["grid"],
-        in_specs=_in_specs(g),
-        out_specs=[
-            pl.BlockSpec((g["block_m"], k_tilde), lambda i, j, k_: (j, i)),
-            pl.BlockSpec((g["block_m"], k_tilde), lambda i, j, k_: (j, i)),
-        ],
+        grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((g["m_p"], n_blocks * k_tilde), jnp.float32),
             jax.ShapeDtypeStruct((g["m_p"], n_blocks * k_tilde), jnp.int32),
         ],
-        scratch_shapes=[
-            pltpu.VMEM((g["block_m"], g["block_n"]), jnp.float32)
-        ],
         interpret=interpret,
-    )(*operands)
+    )(n_valid_arr, *operands)
     vals, ids = vals[: g["m"]], ids[: g["m"]]
     # Merge: (score desc, id asc) — bit-equal to lax.top_k over the
     # materialized row (candidate tiles are already in ascending-id
@@ -441,3 +493,381 @@ def ash_score_topk_pallas(
 
 def _round_up(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult
+
+
+# ---------------------------------------------------------------------------
+# Masked-gather kernels (IVF partial probes: per-query candidate lists)
+# ---------------------------------------------------------------------------
+
+DEFAULT_BLOCK_R = 128
+
+
+def _gather_tile(
+    rows_sref, codes_hbm, codes_vmem, sem, r0, block_r, block_w,
+):
+    """DMA-gather one (block_r, block_w) packed-code tile into VMEM.
+
+    ``rows_sref`` is the scalar-prefetch candidate-row table; row ids
+    drive per-candidate async copies of the packed word strip for the
+    current d-block (pad ids are clamped to row 0 — their scores are
+    masked in the epilogue, the fetch just has to be in-bounds).  All
+    copies start before any is awaited so the gather pipelines.
+    """
+    i = pl.program_id(0)
+    kd = pl.program_id(2)
+    w0 = kd * block_w
+    for t in range(block_r):
+        row = jnp.maximum(rows_sref[i, r0 + t], 0)
+        pltpu.make_async_copy(
+            codes_hbm.at[row, pl.ds(w0, block_w)],
+            codes_vmem.at[t],
+            sem.at[t],
+        ).start()
+    for t in range(block_r):
+        row = jnp.maximum(rows_sref[i, r0 + t], 0)
+        pltpu.make_async_copy(
+            codes_hbm.at[row, pl.ds(w0, block_w)],
+            codes_vmem.at[t],
+            sem.at[t],
+        ).wait()
+
+
+def _gather_accumulate(
+    rows_sref, codes_hbm, codes_vmem, sem, q_ref, acc_ref,
+    *, b, block_r, block_w, compute_dtype,
+):
+    """Shared prologue of both gather kernels: zero the accumulator on
+    the first d-step, DMA-gather this (r-tile, d-block) of packed
+    codes, unpack in-register and accumulate the DOT-PROD term.
+    Returns (k_idx, r0) for the caller's epilogue predicate."""
+    k_idx = pl.program_id(2)
+    r0 = pl.program_id(1) * block_r
+
+    @pl.when(k_idx == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    _gather_tile(rows_sref, codes_hbm, codes_vmem, sem, r0, block_r, block_w)
+    vals = _unpack_block(codes_vmem[...], b, compute_dtype)
+    acc_ref[...] += jax.lax.dot_general(
+        q_ref[...].astype(compute_dtype),
+        vals,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return k_idx, r0
+
+
+def _gather_kernel(
+    rows_sref,  # scalar prefetch: (m, R_p) int32 candidate rows, -1 pad
+    q_ref,  # (1, d_blk)
+    codes_hbm,  # (n, w_p) uint32, HBM-resident (pl.ANY)
+    scale_ref,  # (1, r_blk) gathered per-candidate
+    offset_ref,  # (1, r_blk)
+    cluster_ref,  # (1, r_blk) int32
+    ipq_ref,  # (1, C)
+    qterm_ref,  # (1, 1)
+    rowterm_ref,  # (1, r_blk)
+    rows_ref,  # (1, r_blk) int32 — VMEM copy of the tile's row ids
+    out_ref,  # (1, r_blk)
+    codes_vmem,  # scratch (r_blk, w_blk) uint32
+    acc_ref,  # scratch (1, r_blk) fp32
+    sem,  # DMA semaphores (r_blk,)
+    *,
+    b: int,
+    n_d_blocks: int,
+    compute_dtype,
+    metric: str,
+    block_r: int,
+    block_w: int,
+):
+    k_idx, _ = _gather_accumulate(
+        rows_sref, codes_hbm, codes_vmem, sem, q_ref, acc_ref,
+        b=b, block_r=block_r, block_w=block_w,
+        compute_dtype=compute_dtype,
+    )
+
+    @pl.when(k_idx == n_d_blocks - 1)
+    def _epilogue():
+        scores = _epilogue_scores(
+            acc_ref[...], scale_ref, offset_ref, cluster_ref, ipq_ref,
+            qterm_ref, rowterm_ref, metric=metric,
+        )
+        out_ref[...] = jnp.where(
+            rows_ref[...] >= 0, scores, jnp.float32(-jnp.inf)
+        )
+
+
+def _gather_topk_kernel(
+    rows_sref,
+    q_ref,
+    codes_hbm,
+    scale_ref,
+    offset_ref,
+    cluster_ref,
+    ipq_ref,
+    qterm_ref,
+    rowterm_ref,
+    rows_ref,
+    vals_ref,  # (1, k_tilde) fp32
+    ids_ref,  # (1, k_tilde) int32 — candidate POSITIONS in the list
+    codes_vmem,
+    acc_ref,
+    sem,
+    *,
+    b: int,
+    n_d_blocks: int,
+    compute_dtype,
+    metric: str,
+    block_r: int,
+    block_w: int,
+    k_tilde: int,
+):
+    k_idx, r0 = _gather_accumulate(
+        rows_sref, codes_hbm, codes_vmem, sem, q_ref, acc_ref,
+        b=b, block_r=block_r, block_w=block_w,
+        compute_dtype=compute_dtype,
+    )
+
+    @pl.when(k_idx == n_d_blocks - 1)
+    def _select():
+        scores = _epilogue_scores(
+            acc_ref[...], scale_ref, offset_ref, cluster_ref, ipq_ref,
+            qterm_ref, rowterm_ref, metric=metric,
+        )
+        # pad-id masking IS the validity mask: padded positions (and
+        # R-padding, which also carries id -1) never surface
+        valid = rows_ref[...] >= 0
+        _select_topk(scores, valid, r0, k_tilde, vals_ref, ids_ref)
+
+
+def _pad_gather_operands(
+    codes, rows, q_proj, scale, offset, cluster, ip_q_landmarks,
+    qterm, rowterm, *, b, block_r, block_d,
+):
+    """Pad/gather the masked-gather operands; mirrors
+    :func:`_pad_operands` for the per-candidate layout.
+
+    The candidate axis pads with id -1 (masked like real pad entries);
+    per-row header vectors are pre-gathered to (m, R_p) on the host —
+    they are the same size as the output and tiny next to the packed
+    codes, which stay in HBM and are DMA-gathered in-kernel.
+    """
+    n, Wd = codes.shape
+    m, d_pad = q_proj.shape
+    R = rows.shape[1]
+    kpw = Q.codes_per_word(b)
+    assert Wd * kpw == d_pad, (Wd, kpw, d_pad)
+
+    block_r = min(block_r, _round_up(R, 128))
+    block_d = min(block_d, d_pad)
+    assert block_d % kpw == 0
+    block_w = block_d // kpw
+
+    R_p = _round_up(R, block_r)
+    d_p = _round_up(d_pad, block_d)
+    w_p = d_p // kpw
+    rows_p = jnp.pad(rows.astype(jnp.int32), ((0, 0), (0, R_p - R)),
+                     constant_values=-1)
+    safe = jnp.maximum(rows_p, 0)
+    codes_p = jnp.pad(codes, ((0, 0), (0, w_p - Wd)))
+    q_p = jnp.pad(q_proj, ((0, 0), (0, d_p - d_pad)))
+    scale_g = scale.astype(jnp.float32)[safe]
+    offset_g = offset.astype(jnp.float32)[safe]
+    cluster_g = cluster[safe].astype(jnp.int32)
+    if qterm is None:
+        qterm = jnp.zeros((m,), jnp.float32)
+    if rowterm is None:
+        rowterm_g = jnp.zeros((m, R_p), jnp.float32)
+    else:
+        rowterm_g = rowterm.astype(jnp.float32)[safe]
+    qterm2 = qterm.astype(jnp.float32).reshape(m, 1)
+
+    grid = (m, R_p // block_r, d_p // block_d)
+    operands = (
+        rows_p, q_p, codes_p, scale_g, offset_g, cluster_g,
+        ip_q_landmarks, qterm2, rowterm_g, rows_p,
+    )
+    geom = dict(
+        m=m, R=R, R_p=R_p, grid=grid, block_r=block_r,
+        block_d=block_d, block_w=block_w, C=ip_q_landmarks.shape[1],
+    )
+    return operands, geom
+
+
+def _gather_in_specs(g):
+    return [
+        pl.BlockSpec((1, g["block_d"]), lambda i, j, kd, *_: (i, kd)),
+        pl.BlockSpec(memory_space=pltpu.ANY),  # codes stay in HBM
+        pl.BlockSpec((1, g["block_r"]), lambda i, j, kd, *_: (i, j)),
+        pl.BlockSpec((1, g["block_r"]), lambda i, j, kd, *_: (i, j)),
+        pl.BlockSpec((1, g["block_r"]), lambda i, j, kd, *_: (i, j)),
+        pl.BlockSpec((1, g["C"]), lambda i, j, kd, *_: (i, 0)),
+        pl.BlockSpec((1, 1), lambda i, j, kd, *_: (i, 0)),
+        pl.BlockSpec((1, g["block_r"]), lambda i, j, kd, *_: (i, j)),
+        pl.BlockSpec((1, g["block_r"]), lambda i, j, kd, *_: (i, j)),
+    ]
+
+
+def _gather_scratch(g):
+    return [
+        pltpu.VMEM((g["block_r"], g["block_w"]), jnp.uint32),
+        pltpu.VMEM((1, g["block_r"]), jnp.float32),
+        pltpu.SemaphoreType.DMA((g["block_r"],)),
+    ]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "b", "metric", "block_r", "block_d", "interpret", "compute_dtype",
+    ),
+)
+def ash_score_gather_pallas(
+    codes: jax.Array,  # (n, Wd) uint32
+    rows: jax.Array,  # (m, R) int32 candidate rows, -1 = padding
+    q_proj: jax.Array,  # (m, d_pad)
+    scale: jax.Array,  # (n,)
+    offset: jax.Array,  # (n,)
+    cluster: jax.Array,  # (n,)
+    ip_q_landmarks: jax.Array,  # (m, C)
+    qterm: jax.Array | None = None,
+    rowterm: jax.Array | None = None,
+    *,
+    b: int,
+    metric: str = "dot",
+    block_r: int = DEFAULT_BLOCK_R,
+    block_d: int = DEFAULT_BLOCK_D,
+    interpret: bool = False,
+    compute_dtype=jnp.bfloat16,
+) -> jax.Array:
+    """Masked-gather scores: (m, R) fp32, higher-is-better; pad entries
+    (row id -1) come back ``-inf``.  Matches
+    ``ref.ash_score_gather_ref``.
+
+    Query i is scored against its own candidate list ``rows[i]`` (IVF
+    partial probes).  Candidate row ids ride a scalar-prefetch operand
+    and the kernel DMA-gathers each candidate's packed word strip
+    HBM -> VMEM — the database is never unpacked in HBM and only probed
+    rows move.
+    """
+    assert metric in METRICS, metric
+    operands, g = _pad_gather_operands(
+        codes, rows, q_proj, scale, offset, cluster, ip_q_landmarks,
+        qterm, rowterm, b=b, block_r=block_r, block_d=block_d,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=g["grid"],
+        in_specs=_gather_in_specs(g),
+        out_specs=pl.BlockSpec(
+            (1, g["block_r"]), lambda i, j, kd, *_: (i, j)
+        ),
+        scratch_shapes=_gather_scratch(g),
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _gather_kernel,
+            b=b,
+            n_d_blocks=g["grid"][2],
+            compute_dtype=compute_dtype,
+            metric=metric,
+            block_r=g["block_r"],
+            block_w=g["block_w"],
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((g["m"], g["R_p"]), jnp.float32),
+        interpret=interpret,
+    )(*operands)
+    return out[:, : g["R"]]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "b", "k", "k_tilde", "metric", "block_r", "block_d", "interpret",
+        "compute_dtype",
+    ),
+)
+def ash_score_gather_topk_pallas(
+    codes: jax.Array,
+    rows: jax.Array,  # (m, R) int32 candidate rows, -1 = padding
+    q_proj: jax.Array,
+    scale: jax.Array,
+    offset: jax.Array,
+    cluster: jax.Array,
+    ip_q_landmarks: jax.Array,
+    qterm: jax.Array | None = None,
+    rowterm: jax.Array | None = None,
+    *,
+    b: int,
+    k: int,
+    k_tilde: int | None = None,
+    metric: str = "dot",
+    block_r: int = DEFAULT_BLOCK_R,
+    block_d: int = DEFAULT_BLOCK_D,
+    interpret: bool = False,
+    compute_dtype=jnp.bfloat16,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused masked-gather scan + selection: (scores, payload rows),
+    each (m, k).
+
+    Equal to ``top_k(ash_score_gather_pallas(...), k)`` with positions
+    mapped back through ``rows`` (values, ids and tie order — ties
+    break to the lowest candidate POSITION, the ``lax.top_k``
+    convention) for ``k <= k̃``.  Slots without a candidate (pad ids,
+    or k beyond the emitted strip) come back score ``-inf`` / row -1.
+    """
+    assert metric in METRICS, metric
+    operands, g = _pad_gather_operands(
+        codes, rows, q_proj, scale, offset, cluster, ip_q_landmarks,
+        qterm, rowterm, b=b, block_r=block_r, block_d=block_d,
+    )
+    if k_tilde is None:
+        k_tilde = k
+    k_tilde = min(k_tilde, g["block_r"])
+    n_r_blocks = g["grid"][1]
+    if k > n_r_blocks * k_tilde:
+        raise ValueError(
+            f"k={k} exceeds the {n_r_blocks} x k_tilde={k_tilde} "
+            f"candidate strip; raise k_tilde or use the materializing "
+            f"kernel"
+        )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=g["grid"],
+        in_specs=_gather_in_specs(g),
+        out_specs=[
+            pl.BlockSpec((1, k_tilde), lambda i, j, kd, *_: (i, j)),
+            pl.BlockSpec((1, k_tilde), lambda i, j, kd, *_: (i, j)),
+        ],
+        scratch_shapes=_gather_scratch(g),
+    )
+    vals, pos = pl.pallas_call(
+        functools.partial(
+            _gather_topk_kernel,
+            b=b,
+            n_d_blocks=g["grid"][2],
+            compute_dtype=compute_dtype,
+            metric=metric,
+            block_r=g["block_r"],
+            block_w=g["block_w"],
+            k_tilde=k_tilde,
+        ),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((g["m"], n_r_blocks * k_tilde),
+                                 jnp.float32),
+            jax.ShapeDtypeStruct((g["m"], n_r_blocks * k_tilde),
+                                 jnp.int32),
+        ],
+        interpret=interpret,
+    )(*operands)
+    # merge identical to the dense kernel: (score desc, position asc)
+    neg, spos = jax.lax.sort((-vals, pos), dimension=1, num_keys=2)
+    out_s, out_p = -neg[:, :k], spos[:, :k]
+    rows_p = operands[0]  # (m, R_p), -1-padded
+    out_rows = jnp.take_along_axis(
+        rows_p, jnp.clip(out_p, 0, g["R_p"] - 1), axis=1
+    )
+    return out_s, jnp.where(out_p == _ID_SENTINEL, -1, out_rows)

@@ -15,7 +15,12 @@ from repro.core import quantization as Q
 from repro.core import scoring as S
 from repro.core.types import ASHModel, ASHPayload, ASHStats, QueryPrep
 from repro.kernels import ref
-from repro.kernels.ash_score import ash_score_pallas, ash_score_topk_pallas
+from repro.kernels.ash_score import (
+    ash_score_gather_pallas,
+    ash_score_gather_topk_pallas,
+    ash_score_pallas,
+    ash_score_topk_pallas,
+)
 from repro.kernels.ash_kv_attn import ash_kv_attn_pallas
 
 _EPS = 1e-12
@@ -117,6 +122,14 @@ def ash_score(
     )
 
 
+def mask_valid_rows(scores: jax.Array, n_valid) -> jax.Array:
+    """Force columns at/beyond ``n_valid`` (a static int or traced
+    scalar) to ``-inf`` — the materialized-path equivalent of the fused
+    kernel's runtime row-validity masking."""
+    cols = jnp.arange(scores.shape[-1])
+    return jnp.where(cols[None, :] < n_valid, scores, -jnp.inf)
+
+
 def ash_score_topk(
     model: ASHModel,
     prep: QueryPrep,
@@ -126,6 +139,7 @@ def ash_score_topk(
     metric: str = "dot",
     stats: ASHStats | None = None,
     k_tilde: int | None = None,
+    n_valid=None,
     use_pallas: bool | None = None,
     interpret: bool | None = None,
     compute_dtype=jnp.float32,
@@ -137,6 +151,10 @@ def ash_score_topk(
     equal ``lax.top_k(ash_score(...), k)`` exactly (values, ids, tie
     order) for ``k <= k̃`` (default ``k̃ = k``).  The CPU oracle
     materializes and calls ``lax.top_k`` — identical semantics.
+
+    ``n_valid`` (int or traced scalar) masks rows at/beyond it to
+    ``-inf`` inside the scan — the sharded backend's per-shard pad-row
+    masking, folded into the kernel's id masking.
     """
     if use_pallas is None:
         use_pallas = not _auto_interpret()
@@ -148,10 +166,91 @@ def ash_score_topk(
         scores = ref.ash_score_metric_ref(
             *args, qterm, rowterm, b=payload.b, metric=metric
         )
+        if n_valid is not None:
+            scores = mask_valid_rows(scores, n_valid)
         return jax.lax.top_k(scores, k)
     return ash_score_topk_pallas(
-        *args, qterm, rowterm, b=payload.b, k=k, k_tilde=k_tilde,
+        *args, qterm, rowterm, n_valid, b=payload.b, k=k, k_tilde=k_tilde,
         metric=metric, interpret=interpret, compute_dtype=compute_dtype,
+    )
+
+
+def ash_score_gather(
+    model: ASHModel,
+    prep: QueryPrep,
+    payload: ASHPayload,
+    rows: jax.Array,
+    *,
+    metric: str = "dot",
+    stats: ASHStats | None = None,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+    compute_dtype=jnp.float32,
+) -> jax.Array:
+    """Fused masked-gather scoring: (m, R) fp32, higher-is-better.
+
+    Query i scores its own candidate list ``rows[i]`` (payload row ids,
+    -1 = padding → score ``-inf``) — the IVF partial-probe primitive.
+    On TPU the kernel DMA-gathers packed code rows via scalar prefetch;
+    the CPU oracle (``ref.ash_score_gather_ref``) is rowwise and
+    batch-shape-invariant, so engine bucketing stays bit-identical.
+    """
+    if use_pallas is None:
+        use_pallas = not _auto_interpret()
+    if interpret is None:
+        interpret = _auto_interpret()
+    codes, q_proj, scale, offset, cluster, ipq = _score_args(prep, payload)
+    qterm, rowterm = _metric_operands(model, prep, payload, stats, metric)
+    if not use_pallas:
+        return ref.ash_score_gather_ref(
+            codes, rows, q_proj, scale, offset, cluster, ipq,
+            qterm, rowterm, b=payload.b, metric=metric,
+        )
+    return ash_score_gather_pallas(
+        codes, rows, q_proj, scale, offset, cluster, ipq, qterm, rowterm,
+        b=payload.b, metric=metric, interpret=interpret,
+        compute_dtype=compute_dtype,
+    )
+
+
+def ash_score_gather_topk(
+    model: ASHModel,
+    prep: QueryPrep,
+    payload: ASHPayload,
+    rows: jax.Array,
+    k: int,
+    *,
+    metric: str = "dot",
+    stats: ASHStats | None = None,
+    k_tilde: int | None = None,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+    compute_dtype=jnp.float32,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused masked-gather scan + selection: (scores, payload rows),
+    each (m, k); pad slots come back score ``-inf`` / row -1.
+
+    Equal to ``top_k(ash_score_gather(...), k)`` with positions mapped
+    back through ``rows`` — on TPU without the (m, R) score matrix ever
+    reaching HBM.  Requires ``k <= rows.shape[1]``.
+    """
+    if use_pallas is None:
+        use_pallas = not _auto_interpret()
+    if interpret is None:
+        interpret = _auto_interpret()
+    codes, q_proj, scale, offset, cluster, ipq = _score_args(prep, payload)
+    qterm, rowterm = _metric_operands(model, prep, payload, stats, metric)
+    if not use_pallas:
+        scores = ref.ash_score_gather_ref(
+            codes, rows, q_proj, scale, offset, cluster, ipq,
+            qterm, rowterm, b=payload.b, metric=metric,
+        )
+        s, pos = jax.lax.top_k(scores, k)
+        return s, jnp.take_along_axis(rows, pos, axis=1)
+    return ash_score_gather_topk_pallas(
+        codes, rows, q_proj, scale, offset, cluster, ipq, qterm, rowterm,
+        b=payload.b, k=k, k_tilde=k_tilde, metric=metric,
+        interpret=interpret, compute_dtype=compute_dtype,
     )
 
 

@@ -71,6 +71,60 @@ def ash_score_metric_ref(
     raise ValueError(metric)
 
 
+def ash_score_gather_ref(
+    codes: jax.Array,  # (n, Wd) uint32 packed
+    rows: jax.Array,  # (m, R) int32 candidate row ids, -1 = padding
+    q_proj: jax.Array,  # (m, d_pad)
+    scale: jax.Array,  # (n,)
+    offset: jax.Array,  # (n,)
+    cluster: jax.Array,  # (n,) int32
+    ip_q_landmarks: jax.Array,  # (m, C)
+    qterm: jax.Array | None,  # (m,) metric query term (None for dot)
+    rowterm: jax.Array | None,  # (n,) metric row term (None for dot)
+    b: int,
+    metric: str = "dot",
+) -> jax.Array:
+    """Masked-gather metric scores: (m, R) fp32, higher-is-better — the
+    oracle for the masked-gather kernel.
+
+    Query i is scored against its own candidate list ``rows[i]``; pad
+    entries (id -1) come back ``-inf``.  The DOT-PROD term is a
+    broadcast-multiply + last-axis reduce (not a batched matmul), so row
+    i's scores are identical whatever the query-batch size — the
+    bit-identity invariant the serving engine's bucketing relies on.
+    The epilogue applies the same op order as the dense kernel's
+    ``_epilogue_scores`` (the landmark bias has a single non-zero
+    one-hot term, so gather and one-hot matmul agree bitwise).
+    """
+    m, R = rows.shape
+    d_pad = codes.shape[1] * Q.codes_per_word(b)
+    safe = jnp.maximum(rows, 0)
+    V = Q.unpack_codes(
+        codes[safe.reshape(-1)], d_pad, b
+    ).astype(jnp.float32).reshape(m, R, d_pad)
+    dot = jnp.sum(q_proj.astype(jnp.float32)[:, None, :] * V, axis=-1)
+    cl = cluster[safe]  # (m, R)
+    bias = jnp.take_along_axis(
+        ip_q_landmarks.astype(jnp.float32), cl, axis=1
+    )
+    base = (
+        dot * scale.astype(jnp.float32)[safe]
+        + bias
+        + offset.astype(jnp.float32)[safe]
+    )
+    if metric == "dot":
+        out = base
+    elif metric == "l2":
+        qcol = qterm.astype(jnp.float32)[:, None]
+        out = (2.0 * base - qcol) - rowterm.astype(jnp.float32)[safe]
+    elif metric == "cos":
+        qcol = qterm.astype(jnp.float32)[:, None]
+        out = (base * qcol) * rowterm.astype(jnp.float32)[safe]
+    else:
+        raise ValueError(metric)
+    return jnp.where(rows >= 0, out, -jnp.inf)
+
+
 def ash_kv_attn_ref(
     q_k: jax.Array,  # (dk,) query projected into K-code space (W_k q)
     k_codes: jax.Array,  # (S, Wk) packed K codes

@@ -29,7 +29,7 @@ def make_test_mesh(
     n = jax.device_count()
     if shape is None:
         shape = (n,) + (1,) * (len(axes) - 1)
-    devs = np.array(jax.devices()).reshape(shape)
+    devs = np.array(jax.devices()[: int(np.prod(shape))]).reshape(shape)
     return Mesh(devs, axes)
 
 

@@ -70,9 +70,7 @@ def main(argv=None):
           f"({32 * args.dim / cfg.payload_bits():.1f}x compression)")
 
     t0 = time.time()
-    opts = {}
-    if args.engine != "sharded":
-        opts["keep_raw"] = args.rerank > 0
+    opts = {"keep_raw": args.rerank > 0}
     index = AshIndex.build(
         kb, X, cfg, backend=args.engine, metric=args.metric, **opts
     )

@@ -313,10 +313,6 @@ class QueryEngine:
         if k < 1:
             raise ValueError(f"k must be >= 1: {k}")
         backend = idx.backend
-        if backend == "sharded" and rerank:
-            raise ValueError(
-                "rerank is not supported by the sharded backend"
-            )
         if backend != "ivf":
             nprobe = None  # only IVF routes coarsely; don't split groups
         else:

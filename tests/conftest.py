@@ -1,8 +1,16 @@
 import os
 
-# Tests run on the single real CPU device — the 512-device override is
-# strictly dryrun.py-local (per the brief).
+# Tests run on 4 virtual CPU devices so sharded-backend coverage spans
+# real 1/2/4-shard meshes — the 512-device override is strictly
+# dryrun.py-local (per the brief).  Must be set before jax initializes.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+    "XLA_FLAGS", ""
+):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=4"
+    )
 
 import jax
 import pytest

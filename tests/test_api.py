@@ -65,8 +65,7 @@ def test_backend_parity_full_probe(setup, metric):
 @pytest.mark.parametrize("backend", ("flat", "ivf", "sharded"))
 def test_save_load_bit_identical(setup, backend, tmp_path):
     X, Qm, cfg, model, kb = setup
-    opts = {} if backend == "sharded" else {"keep_raw": True}
-    idx = _build(setup, backend, "l2", **opts)
+    idx = _build(setup, backend, "l2", keep_raw=True)
     idx.save(tmp_path / backend)
     idx2 = AshIndex.load(tmp_path / backend)
     s1, i1 = idx.search(Qm, k=10)
@@ -75,10 +74,11 @@ def test_save_load_bit_identical(setup, backend, tmp_path):
     assert jnp.array_equal(i1, i2)
     assert idx2.backend == backend and idx2.metric == "l2"
     assert idx2.config.payload_bits() == cfg.payload_bits()
-    if backend != "sharded":  # rerank path survives the round trip too
-        r1 = idx.search(Qm, k=5, rerank=50)
-        r2 = idx2.search(Qm, k=5, rerank=50)
-        assert jnp.array_equal(r1[1], r2[1])
+    # rerank survives the round trip too (sharded included: bf16 raw
+    # shards are persisted and re-distributed on load)
+    r1 = idx.search(Qm, k=5, rerank=50)
+    r2 = idx2.search(Qm, k=5, rerank=50)
+    assert jnp.array_equal(r1[1], r2[1])
 
 
 @pytest.mark.parametrize("backend", ("flat", "ivf", "sharded"))
@@ -150,20 +150,28 @@ def test_rerank_is_metric_aware(backend):
 
 
 def test_sharded_pad_masking_l2(setup):
-    """Padded rows must be masked via n_real for non-dot metrics (the
-    offset=-inf sentinel only silences the dot estimator)."""
+    """Padded rows must be masked for non-dot metrics (the offset=-inf
+    sentinel only silences the dot estimator) — via the explicit n_real
+    override AND the automatic cluster-sentinel derivation."""
     X, Qm, cfg, model, kb = setup
     fi = _build(setup, "flat", "l2")
     mesh = Mesh(onp.array(jax.devices())[:1], ("data",))
     padded = DX.pad_to_multiple(fi.payload, 64)
     assert padded.n > fi.payload.n
+    _, fids = fi.search(Qm, k=10)
+    sharded = DX.shard_payload(mesh, padded, ("data",))
     fn = DX.make_sharded_search(
         mesh, model, ("data",), k=10, metric="l2", n_real=fi.payload.n
     )
-    s, ids = fn(DX.shard_payload(mesh, padded, ("data",)), Qm)
-    _, fids = fi.search(Qm, k=10)
+    s, ids = fn(sharded, Qm)
     assert jnp.array_equal(jnp.sort(ids, 1), jnp.sort(fids, 1))
     assert bool(jnp.all(jnp.isfinite(s)))
+    # n_real omitted: the pad rows' cluster == -1 sentinel derives the
+    # same mask, so l2/cos callers can no longer forget it
+    fn2 = DX.make_sharded_search(mesh, model, ("data",), k=10, metric="l2")
+    s2, ids2 = fn2(sharded, Qm)
+    assert jnp.array_equal(ids2, ids)
+    assert jnp.array_equal(s2, s)
 
 
 def test_flat_rerank_larger_than_index():
@@ -178,18 +186,34 @@ def test_flat_rerank_larger_than_index():
     assert bool(jnp.all(ids >= 0))
 
 
-def test_sharded_requires_n_real_for_l2(setup):
-    X, Qm, cfg, model, kb = setup
-    mesh = Mesh(onp.array(jax.devices())[:1], ("data",))
-    with pytest.raises(ValueError, match="n_real"):
-        DX.make_sharded_search(mesh, model, ("data",), k=5, metric="l2")
-
-
-def test_sharded_rejects_rerank(setup):
+def test_sharded_rerank_requires_raw(setup):
     si = _build(setup, "sharded", "dot")
     X, Qm, cfg, model, kb = setup
-    with pytest.raises(ValueError, match="rerank"):
+    with pytest.raises(ValueError, match="keep_raw"):
         si.search(Qm, k=5, rerank=20)
+
+
+def test_sharded_rerank_end_to_end(setup):
+    """Shard-local exact rerank returns exact-scored candidates from a
+    per-shard shortlist union that is a SUPERSET of the flat global
+    shortlist — so at every rank its exact score is >= flat's (ids may
+    legitimately differ when the superset surfaces a better candidate
+    the global approx shortlist missed)."""
+    X, Qm, cfg, model, kb = setup
+    si = _build(setup, "sharded", "l2", keep_raw=True)
+    fi = _build(setup, "flat", "l2", keep_raw=True)
+    ss, sids = si.search(Qm, k=10, rerank=100)
+    fs, fids = fi.search(Qm, k=10, rerank=100)
+    assert bool(jnp.all(ss >= fs))
+    assert bool(jnp.all(sids >= 0))
+    # every returned id carries its true exact score (recompute on raw)
+    from repro.index import common as C
+    prep = si.prepare(Qm)
+    cand = X[jnp.maximum(sids, 0)].astype(jnp.bfloat16).astype(
+        jnp.float32
+    )
+    exact = C.exact_scores(prep, cand, "l2")
+    assert jnp.allclose(ss, exact, atol=1e-3)
 
 
 @pytest.mark.parametrize("backend", ("flat", "ivf", "sharded"))

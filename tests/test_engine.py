@@ -415,11 +415,37 @@ def t_bucket(eng):
     return entry[2]
 
 
-def test_sharded_rejects_rerank_at_submit(setup):
+def test_sharded_rerank_without_raw_errors_at_result(setup):
+    """Sharded rerank needs distributed raw shards; without keep_raw
+    the backend error reaches the ticket instead of vanishing."""
     X, Qm, indexes = setup
     eng = _engine(indexes)
-    with pytest.raises(ValueError, match="rerank"):
-        eng.submit(Qm[:1], k=5, index="sharded", rerank=10)
+    t = eng.submit(Qm[:1], k=5, index="sharded", rerank=10)
+    with pytest.raises(ValueError, match="keep_raw"):
+        eng.flush()  # explicit flush re-raises at the flush site
+    with pytest.raises(RuntimeError, match="fused scoring"):
+        t.result()  # ... and the ticket carries it too
+
+
+def test_sharded_rerank_through_engine_matches_direct(setup):
+    """Engine-served sharded rerank == direct search bit-for-bit (the
+    shard-local rerank path honors the shortlist grouping)."""
+    X, Qm, indexes = setup
+    model = indexes["sharded"].model
+    cfg = model.config
+    idx = AshIndex.build(
+        jax.random.PRNGKey(0), X, cfg, backend="sharded", model=model,
+        keep_raw=True,
+    )
+    eng = _engine({"sharded": idx})
+    t1 = eng.submit(Qm[:3], k=5, index="sharded", rerank=20)
+    t2 = eng.submit(Qm[3:4], k=5, index="sharded", rerank=20)
+    eng.flush()
+    ds, di = idx.search(Qm[:4], k=5, rerank=20)
+    got_s = onp.concatenate([t1.result()[0], t2.result()[0]])
+    got_i = onp.concatenate([t1.result()[1], t2.result()[1]])
+    assert onp.array_equal(got_s, onp.asarray(ds))
+    assert onp.array_equal(got_i, onp.asarray(di))
 
 
 def test_engine_config_validation():

