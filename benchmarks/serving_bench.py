@@ -113,4 +113,74 @@ def serving_engine():
     return rows
 
 
-ALL = [serving_engine]
+def _mutation_stream(engine, X_np, Qm, reqs, nprobe, mutate_every):
+    """Serve the request mix with every ``mutate_every``-th slot also
+    carrying a mutation (alternating batched add / tombstone delete).
+    Returns (query tickets, mutation tickets, wall seconds)."""
+    rng = np.random.RandomState(7)
+    tickets, muts = [], []
+    t0 = time.perf_counter()
+    for j, (i, m) in enumerate(reqs):
+        if j % mutate_every == mutate_every - 1:
+            if (j // mutate_every) % 2 == 0:
+                rows_ = X_np[rng.randint(0, X_np.shape[0], 4)]
+                muts.append(engine.submit_add(rows_))
+            else:
+                victims = rng.randint(0, X_np.shape[0], 4)
+                muts.append(engine.submit_delete(victims))
+        tickets.append(engine.submit(Qm[i:i + m], k=10, nprobe=nprobe))
+    engine.flush()
+    for t in muts:
+        t.result()
+    return tickets, muts, time.perf_counter() - t0
+
+
+def serving_mutation():
+    """Engine throughput under ~10% mutation traffic: adds/sec,
+    deletes/sec and the search p99 while batched adds and tombstone
+    deletes ride the same bucket/flush loop (the live-index serving
+    scenario; compaction amortized via auto_compact)."""
+    X, Qm, gt = dataset()
+    X_np = np.asarray(X)
+    cfg = ASHConfig(b=2, d=D // 2, n_landmarks=16)
+    key = jax.random.PRNGKey(0)
+    base = AshIndex.build(key, X, cfg, backend="flat")
+    rows = []
+    Qm = np.asarray(Qm)
+    reqs = _request_stream(Qm)
+    n_rows = Qm.shape[0]
+    for nm, backend, nprobe in (("flat", "flat", None),
+                                ("ivf", "ivf", 8)):
+        # warmup engine+index compile every shape the stream hits,
+        # including post-mutation payload shapes
+        for pass_ in ("warm", "timed"):
+            idx = AshIndex.build(
+                key, X, cfg, backend=backend, model=base.model
+            )
+            engine = QueryEngine(
+                idx, batch_buckets=(8, 32), max_wait_s=0.005,
+                auto_compact=0.3,
+            )
+            tickets, muts, dt = _mutation_stream(
+                engine, X_np, Qm, reqs, nprobe, mutate_every=10
+            )
+        added = sum(t.n_rows for t in muts if t.kind == "add")
+        deleted = sum(t.result() for t in muts if t.kind == "delete")
+        worst_apply = max((t.apply_s for t in muts), default=0.0)
+        lats = [t.stats.latency_s for t in tickets]
+        p50, p99 = np.percentile(lats, [50, 99])
+        st = engine.stats.snapshot()
+        rows.append(row(
+            f"serving/mutation_{nm}_10pct", 1e6 * dt / len(reqs),
+            f"qps={n_rows / dt:.0f};"
+            f"adds_per_s={added / max(dt, 1e-9):.0f};"
+            f"deletes_per_s={deleted / max(dt, 1e-9):.0f};"
+            f"p50_ms={1e3 * p50:.2f};p99_ms={1e3 * p99:.2f};"
+            f"mut_batches={st['mutation_batches']};"
+            f"compactions={st['compactions']};"
+            f"worst_apply_ms={1e3 * worst_apply:.1f}",
+        ))
+    return rows
+
+
+ALL = [serving_engine, serving_mutation]

@@ -9,6 +9,10 @@ the single entry point over it::
                            backend="ivf", metric="l2", keep_raw=True)
     scores, ids = index.search(queries, k=10, nprobe=16, rerank=100)
     index.add(X_new)                    # incremental ingestion
+    index.delete([3, 17])               # tombstone rows by user id
+    index.compact(max_dead_fraction=0.2)  # evict tombstones past 20%
+    ids = index.stage_add(X_more)       # buffer for batched ingestion
+    index.apply_pending()               # one re-sort for the batch
     index.save("/tmp/idx")              # npz arrays + JSON config
     index = AshIndex.load("/tmp/idx")   # bit-identical search results
 
@@ -188,6 +192,14 @@ class FlatBackend:
         return F._add(state, X_new)
 
     @staticmethod
+    def delete(state, ids):
+        return F._delete(state, ids)
+
+    @staticmethod
+    def compact(state):
+        return F._compact(state)
+
+    @staticmethod
     def model_of(state):
         return state.model
 
@@ -200,6 +212,20 @@ class FlatBackend:
         return state.stats
 
     @staticmethod
+    def live_of(state):
+        return state.live
+
+    @staticmethod
+    def ids_of(state):
+        return state.ids
+
+    @staticmethod
+    def next_id_of(state):
+        return C.effective_next_id(
+            state.next_id, state.ids, state.payload.n
+        )
+
+    @staticmethod
     def to_arrays(state):
         arrays = {
             **_model_arrays(state.model),
@@ -208,7 +234,14 @@ class FlatBackend:
         }
         if state.raw is not None:
             arrays["raw"] = state.raw
-        return arrays, {}
+        if state.ids is not None:
+            arrays["ids"] = state.ids
+        if state.live is not None:
+            arrays["live"] = state.live
+        meta = {}
+        if state.next_id is not None:
+            meta["next_id"] = int(state.next_id)
+        return arrays, meta
 
     @staticmethod
     def from_arrays(arrays, meta, config, metric, **opts):
@@ -220,6 +253,9 @@ class FlatBackend:
             payload=payload,
             raw=arrays.get("raw"),
             stats=_stats_from_arrays(arrays, model, payload),
+            ids=arrays.get("ids"),
+            live=arrays.get("live"),
+            next_id=meta.get("next_id"),
         )
 
 
@@ -268,6 +304,14 @@ class IVFBackend:
         return IV._add(state, X_new)
 
     @staticmethod
+    def delete(state, ids):
+        return IV._delete(state, ids)
+
+    @staticmethod
+    def compact(state):
+        return IV._compact(state)
+
+    @staticmethod
     def model_of(state):
         return state.model
 
@@ -280,6 +324,20 @@ class IVFBackend:
         return state.stats
 
     @staticmethod
+    def live_of(state):
+        return state.live
+
+    @staticmethod
+    def ids_of(state):
+        return state.ids
+
+    @staticmethod
+    def next_id_of(state):
+        return C.effective_next_id(
+            state.next_id, state.ids, state.payload.n
+        )
+
+    @staticmethod
     def to_arrays(state):
         arrays = {
             **_model_arrays(state.model),
@@ -290,7 +348,12 @@ class IVFBackend:
         }
         if state.raw is not None:
             arrays["raw"] = state.raw
-        return arrays, {"max_list_len": state.max_list_len}
+        if state.live is not None:
+            arrays["live"] = state.live
+        meta = {"max_list_len": state.max_list_len}
+        if state.next_id is not None:
+            meta["next_id"] = int(state.next_id)
+        return arrays, meta
 
     @staticmethod
     def from_arrays(arrays, meta, config, metric, **opts):
@@ -305,6 +368,8 @@ class IVFBackend:
             invlists=arrays["invlists"],
             raw=arrays.get("raw"),
             stats=_stats_from_arrays(arrays, model, payload),
+            live=arrays.get("live"),
+            next_id=meta.get("next_id"),
         )
 
 
@@ -312,12 +377,14 @@ class IVFBackend:
 class ShardedState:
     """Host copy of the payload + its device-sharded placement.
 
-    The host copies (unpadded) are kept for add()/save(); the padded,
-    row-sharded copies are what searches scan: the payload, its
-    encode-time ``ASHStats`` (fused l2/cos epilogue inputs) and — when
+    The host copies (unpadded) are kept for add()/delete()/save(); the
+    padded, row-sharded copies are what searches scan: the payload, its
+    encode-time ``ASHStats`` (fused l2/cos epilogue inputs), — when
     built with ``keep_raw`` — a bf16 raw-vector shard enabling
-    shard-local exact rerank.  Compiled searchers are cached per
-    (k, rerank) and invalidated when the placement changes.
+    shard-local exact rerank, and — once rows are deleted — a validity
+    bitmap shard feeding the kernels' runtime mask operand.  Compiled
+    searchers are cached per (k, rerank) and invalidated when the
+    placement changes; deletes only re-shard the (tiny) bitmap.
     """
 
     metric: str
@@ -327,9 +394,13 @@ class ShardedState:
     axes: tuple[str, ...]
     raw: Optional[jax.Array] = None  # unpadded bf16 rows (rerank)
     stats: Optional[ASHStats] = None  # unpadded; built when missing
+    ids: Optional[jax.Array] = None  # user ids; None = identity
+    live: Optional[jax.Array] = None  # validity bitmap; None = all live
+    next_id: Optional[int] = None  # id of the next added row
     sharded: ASHPayload = dataclasses.field(init=False)
     sharded_stats: ASHStats = dataclasses.field(init=False)
     sharded_raw: Optional[jax.Array] = dataclasses.field(init=False)
+    sharded_valid: Optional[jax.Array] = dataclasses.field(init=False)
     searchers: dict = dataclasses.field(init=False, default_factory=dict)
 
     def __post_init__(self):
@@ -348,6 +419,10 @@ class ShardedState:
             self.stats = S.payload_stats(self.model, self.payload)
         self.place()
 
+    def _pad(self) -> int:
+        mult = math.prod(self.mesh.shape[a] for a in self.axes)
+        return (-self.payload.n) % mult
+
     def place(self):
         mult = math.prod(self.mesh.shape[a] for a in self.axes)
         padded = DX.pad_to_multiple(self.payload, mult)
@@ -361,7 +436,22 @@ class ShardedState:
             jnp.pad(self.raw, ((0, pad), (0, 0))),
             self.axes,
         )
+        self.place_valid()
         self.searchers = {}
+
+    def place_valid(self):
+        """(Re-)shard just the validity bitmap — the only placement a
+        delete touches (payload/stats/raw shards and cached searcher
+        traces survive; the mask is a runtime kernel operand)."""
+        if self.live is None:
+            self.sharded_valid = None
+            return
+        self.sharded_valid = DX.shard_rows(
+            self.mesh,
+            jnp.pad(jnp.asarray(self.live).astype(bool),
+                    (0, self._pad())),
+            self.axes,
+        )
 
     def searcher(self, k: int, rerank: int = 0):
         """(payload, QueryPrep) -> (scores, ids) searcher, cached per
@@ -439,15 +529,33 @@ class ShardedBackend:
                 "rerank on the sharded backend requires keep_raw=True "
                 "(bf16 raw shards are distributed with the payload)"
             )
-        return state.searcher(k, rerank)(
+        s, rows = state.searcher(k, rerank)(
             state.sharded, prep,
             stats=state.sharded_stats, raw=state.sharded_raw,
+            valid=state.sharded_valid,
+        )
+        if state.ids is None:
+            return s, rows
+        # map global payload rows to user ids after the merge (a (m, k)
+        # gather; monotonic ids keep the merge's tie order intact)
+        return s, jnp.where(
+            rows < 0, -1, state.ids[jnp.maximum(rows, 0)]
         )
 
     @staticmethod
     def add(state, X_new):
+        # mirror build: encode, then recompute stats AND raw for the
+        # appended rows before any re-placement — a partial update
+        # (e.g. raw missing for the tail) would silently break
+        # shard-local rerank after the next place()
         payload_new = A.encode(state.model, X_new)
+        n_new = payload_new.n
+        nid = C.effective_next_id(
+            state.next_id, state.ids, state.payload.n
+        )
         state.payload = C.concat_payloads(state.payload, payload_new)
+        # __post_init__ guarantees stats is never None, so the concat
+        # always yields the full stats block
         state.stats = C.concat_stats(
             state.stats, S.payload_stats(state.model, payload_new)
         )
@@ -455,6 +563,57 @@ class ShardedBackend:
             state.raw = jnp.concatenate(
                 [state.raw, X_new.astype(jnp.bfloat16)], axis=0
             )
+        if state.ids is not None:
+            state.ids = jnp.concatenate(
+                [state.ids, nid + jnp.arange(n_new, dtype=jnp.int32)]
+            )
+        if state.live is not None:
+            state.live = jnp.concatenate(
+                [state.live, jnp.ones((n_new,), bool)]
+            )
+        if state.next_id is not None:
+            state.next_id = nid + n_new
+        state.place()
+        return state
+
+    @staticmethod
+    def delete(state, ids):
+        new_live, removed = C.mark_deleted(
+            state.ids, state.live, ids, state.payload.n
+        )
+        if removed:
+            state.live = jnp.asarray(new_live)
+            state.place_valid()  # payload/raw/stats shards untouched
+        return state, removed
+
+    @staticmethod
+    def compact(state):
+        if state.live is None:
+            return state
+        live_np = np.asarray(state.live).astype(bool)
+        if live_np.all():
+            state.live = None
+            state.place_valid()
+            return state
+        if not live_np.any():
+            raise ValueError(
+                "compact() would evict every row; an empty index "
+                "cannot be searched — keep at least one live row or "
+                "rebuild"
+            )
+        nid = C.effective_next_id(
+            state.next_id, state.ids, state.payload.n
+        )
+        keep = jnp.asarray(np.nonzero(live_np)[0].astype(np.int32))
+        state.ids = (
+            keep if state.ids is None else state.ids[keep]
+        ).astype(jnp.int32)
+        state.next_id = nid
+        state.payload = C.gather_payload(state.payload, keep)
+        state.stats = C.take_stats(state.stats, keep)
+        if state.raw is not None:
+            state.raw = state.raw[keep]
+        state.live = None
         state.place()
         return state
 
@@ -471,6 +630,20 @@ class ShardedBackend:
         return state.stats
 
     @staticmethod
+    def live_of(state):
+        return state.live
+
+    @staticmethod
+    def ids_of(state):
+        return state.ids
+
+    @staticmethod
+    def next_id_of(state):
+        return C.effective_next_id(
+            state.next_id, state.ids, state.payload.n
+        )
+
+    @staticmethod
     def to_arrays(state):
         arrays = {
             **_model_arrays(state.model),
@@ -479,7 +652,14 @@ class ShardedBackend:
         }
         if state.raw is not None:
             arrays["raw"] = state.raw
-        return arrays, {"axes": list(state.axes)}
+        if state.ids is not None:
+            arrays["ids"] = state.ids
+        if state.live is not None:
+            arrays["live"] = state.live
+        meta = {"axes": list(state.axes)}
+        if state.next_id is not None:
+            meta["next_id"] = int(state.next_id)
+        return arrays, meta
 
     @staticmethod
     def from_arrays(arrays, meta, config, metric, *, mesh=None,
@@ -496,6 +676,9 @@ class ShardedBackend:
             axes=axes,
             raw=arrays.get("raw"),
             stats=_stats_from_arrays(arrays, model, payload),
+            ids=arrays.get("ids"),
+            live=arrays.get("live"),
+            next_id=meta.get("next_id"),
         )
 
 
@@ -505,14 +688,27 @@ class ShardedBackend:
 
 
 class AshIndex:
-    """One lifecycle — build / search / add / save / load — over every
-    backend.  See the module docstring for the canonical usage."""
+    """One lifecycle — build / search / add / delete / compact / save /
+    load — over every backend.  See the module docstring for the
+    canonical usage.
+
+    Mutation model: :meth:`delete` tombstones rows in place (a validity
+    bitmap threaded into the scan kernels' runtime mask operand — no
+    recompilation, deleted ids can never surface); :meth:`compact`
+    rewrites codes/stats/raw to evict tombstones past a dead-fraction
+    threshold; :meth:`stage_add` buffers rows host-side (ids assigned
+    immediately) until :meth:`apply_pending` ingests them in ONE
+    backend add — the serving engine's batched-mutation path, which
+    amortizes the IVF re-sort / sharded re-placement across a batch.
+    Tombstones and the pending-add buffer both survive save/load.
+    """
 
     def __init__(self, backend: str, metric: str, state):
         self._backend = _get_backend(backend)
         self._backend_name = backend
         self._metric = C.validate_metric(metric)
         self._state = state
+        self._pending_add: list[np.ndarray] = []
 
     # -- construction -------------------------------------------------
 
@@ -598,8 +794,74 @@ class AshIndex:
 
     def add(self, X_new: jax.Array) -> "AshIndex":
         """Encode new vectors under the existing model and ingest them
-        (ids continue from the current size).  Returns self."""
+        immediately (ids continue past every id ever assigned,
+        including retired ones).  Flushes any staged rows first so id
+        assignment stays in submission order.  Returns self."""
+        self.apply_pending()
         self._state = self._backend.add(self._state, X_new)
+        return self
+
+    # -- mutations ----------------------------------------------------
+
+    def stage_add(self, X_new) -> np.ndarray:
+        """Buffer rows for a later batched ingestion; returns the user
+        ids they WILL carry (assigned now, in submission order).
+
+        Staged rows are invisible to search until
+        :meth:`apply_pending` ingests the whole buffer in one backend
+        ``add`` — one IVF re-sort / sharded re-placement per batch
+        instead of per call (the serving engine's
+        ``submit_add`` path).  The buffer persists through
+        :meth:`save`/:meth:`load`.
+        """
+        X = np.ascontiguousarray(np.asarray(X_new), dtype=np.float32)
+        if X.ndim == 1:
+            X = X[None, :]
+        dim = self.model.landmarks.shape[1]
+        if X.ndim != 2 or X.shape[1] != dim:
+            raise ValueError(
+                f"stage_add rows must be (n, {dim}): got {X.shape}"
+            )
+        start = self.next_id + sum(
+            p.shape[0] for p in self._pending_add
+        )
+        if X.shape[0] == 0:  # nothing to stage; no empty buffer entry
+            return np.arange(start, start, dtype=np.int64)
+        self._pending_add.append(X)
+        return np.arange(start, start + X.shape[0], dtype=np.int64)
+
+    def apply_pending(self) -> int:
+        """Ingest every staged row in one backend add; returns the row
+        count applied (0 = nothing staged)."""
+        if not self._pending_add:
+            return 0
+        rows = np.concatenate(self._pending_add, axis=0)
+        self._pending_add = []
+        self._state = self._backend.add(self._state, jnp.asarray(rows))
+        return rows.shape[0]
+
+    def delete(self, ids) -> int:
+        """Tombstone rows by user id; returns the number of rows newly
+        removed (unknown / already-deleted ids are ignored — FAISS
+        ``remove_ids`` semantics).  Deleted ids can never surface in
+        results: the validity bitmap feeds the scan kernels' runtime
+        mask operand (dense paths) and drops candidates pre-DMA
+        (gathered paths).  Applies staged adds first, so deleting a
+        just-staged id works."""
+        self.apply_pending()
+        self._state, removed = self._backend.delete(self._state, ids)
+        return removed
+
+    def compact(self, max_dead_fraction: float = 0.0) -> "AshIndex":
+        """Evict tombstoned rows by rewriting codes/stats/raw when the
+        dead fraction exceeds ``max_dead_fraction`` (default: any
+        tombstone triggers a rewrite).  Search afterwards is
+        bit-identical to a fresh build over the surviving rows (same
+        model); user ids are stable across compaction and never
+        reused.  No-op below the threshold.  Returns self."""
+        self.apply_pending()
+        if self.dead_fraction > max_dead_fraction:
+            self._state = self._backend.compact(self._state)
         return self
 
     # -- persistence --------------------------------------------------
@@ -609,6 +871,13 @@ class AshIndex:
         p = pathlib.Path(path)
         p.mkdir(parents=True, exist_ok=True)
         arrays, backend_meta = self._backend.to_arrays(self._state)
+        if self._pending_add:
+            # staged-but-unapplied rows ride along so a batched
+            # ingestion in flight is never lost to a save/load cycle
+            arrays = dict(arrays)
+            arrays["pending_add"] = np.concatenate(
+                self._pending_add, axis=0
+            )
         encoded, dtypes = {}, {}
         for name, a in arrays.items():
             encoded[name], dtypes[name] = _encode_array(a)
@@ -646,12 +915,18 @@ class AshIndex:
                 name: _decode_array(npz[name], meta["dtypes"][name])
                 for name in npz.files
             }
+        pending = arrays.pop("pending_add", None)
         config = ASHConfig(**meta["config"])
         impl = _get_backend(meta["backend"])
         state = impl.from_arrays(
             arrays, meta["backend_meta"], config, meta["metric"], **opts
         )
-        return cls(meta["backend"], meta["metric"], state)
+        index = cls(meta["backend"], meta["metric"], state)
+        if pending is not None:
+            index._pending_add = [
+                np.asarray(pending, dtype=np.float32)
+            ]
+        return index
 
     # -- introspection ------------------------------------------------
 
@@ -685,16 +960,55 @@ class AshIndex:
 
     @property
     def n(self) -> int:
+        """Payload rows, INCLUDING tombstones (excluding staged adds)."""
         return self.payload.n
+
+    @property
+    def n_dead(self) -> int:
+        """Tombstoned rows awaiting compaction."""
+        live = getattr(self._backend, "live_of", lambda s: None)(
+            self._state
+        )
+        if live is None:
+            return 0
+        return self.n - int(np.asarray(live).sum())
+
+    @property
+    def n_live(self) -> int:
+        """Searchable rows (``n`` minus tombstones)."""
+        return self.n - self.n_dead
+
+    @property
+    def dead_fraction(self) -> float:
+        """Tombstoned fraction of the payload — compare against
+        ``compact(max_dead_fraction=...)``."""
+        return self.n_dead / max(1, self.n)
+
+    @property
+    def pending_rows(self) -> int:
+        """Rows staged by :meth:`stage_add`, not yet ingested."""
+        return sum(p.shape[0] for p in self._pending_add)
+
+    @property
+    def next_id(self) -> int:
+        """User id the next added row receives (monotonic; retired ids
+        are never reused).  Staged rows already hold theirs."""
+        next_id_of = getattr(self._backend, "next_id_of", None)
+        return self.n if next_id_of is None else next_id_of(self._state)
 
     def __len__(self) -> int:
         return self.n
 
     def __repr__(self) -> str:
         cfg = self.config
+        mut = ""
+        if self.n_dead or self.pending_rows:
+            mut = (
+                f", dead={self.n_dead}, pending={self.pending_rows}"
+            )
         return (
             f"AshIndex(backend={self._backend_name!r}, "
-            f"metric={self._metric!r}, n={self.n}, b={cfg.b}, "
+            f"metric={self._metric!r}, n={self.n}{mut}, b={cfg.b}, "
             f"d={cfg.d}, C={cfg.n_landmarks}, "
             f"payload={cfg.payload_bits()} bits/vec)"
         )

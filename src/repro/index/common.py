@@ -96,6 +96,7 @@ def approx_topk(
     use_pallas: Optional[bool] = None,
     stats: Optional[ASHStats] = None,
     n_valid: Any = None,
+    row_valid: Optional[jax.Array] = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Fused-selection top-k over all payload rows: (scores, rows).
 
@@ -104,14 +105,15 @@ def approx_topk(
     tile emits a partial top-k̃; see ``kernels.ash_score``).  Callers
     must keep ``k <= fused_topk_limit()`` and ``k <= payload.n``.
     ``n_valid`` (int or traced scalar) masks rows at/beyond it inside
-    the scan (sharded pad-row masking).
+    the scan (sharded pad-row masking); ``row_valid`` ((n,) bool) masks
+    tombstoned rows the same way.
     """
     validate_metric(metric)
     from repro.kernels import ops as K
 
     return K.ash_score_topk(
         model, prep, payload, k, metric=metric, stats=stats,
-        use_pallas=use_pallas, n_valid=n_valid,
+        use_pallas=use_pallas, n_valid=n_valid, row_valid=row_valid,
     )
 
 
@@ -135,10 +137,17 @@ class ScanPlan:
       * dense (``rows is None``): every payload row, optionally
         truncated by ``n_valid`` (an int or traced scalar; rows
         at/beyond it are padding and score ``-inf`` — the sharded
-        backend's per-shard pad masking).
+        backend's per-shard pad masking) and/or filtered by
+        ``row_valid`` (a (n,) bool validity bitmap; False rows are
+        tombstones and score ``-inf`` — the mutation layer's deletes,
+        folded into the same kernel mask operand so no plan variant
+        recompiles).
       * gathered (``rows`` = (m, R) int32): query i scores its own
         candidate list ``rows[i]`` (IVF partial probes); pad entries
-        carry id -1 and score ``-inf``.
+        carry id -1 and score ``-inf``.  Tombstones must be dropped
+        from the candidate lists (mapped to -1) BEFORE planning — the
+        gather kernel then never DMAs a deleted row (``row_valid`` on a
+        gathered plan is an error, not a silent no-op).
 
     HOW to select: top-``k`` per query; ``rerank > 0`` retrieves a
     ``max(rerank, k)`` shortlist by ASH scores and re-ranks it with
@@ -154,6 +163,7 @@ class ScanPlan:
     rerank: int = 0
     rows: Optional[jax.Array] = None
     n_valid: Any = None
+    row_valid: Optional[jax.Array] = None
     ids: Optional[jax.Array] = None
     use_pallas: Optional[bool] = None
 
@@ -188,10 +198,11 @@ def execute_plan(
         return _execute_dense(
             model, prep, payload, plan, stats=stats, raw=raw
         )
-    if plan.n_valid is not None:
+    if plan.n_valid is not None or plan.row_valid is not None:
         raise ValueError(
-            "n_valid applies to dense plans only; gathered plans mask "
-            "by pad id (-1 entries in rows)"
+            "n_valid/row_valid apply to dense plans only; gathered "
+            "plans mask by pad id (drop tombstoned rows to -1 in "
+            "`rows` before planning)"
         )
     return _execute_gather(
         model, prep, payload, plan, stats=stats, raw=raw
@@ -203,17 +214,18 @@ def _execute_dense(model, prep, payload, plan, *, stats, raw):
     n = payload.n
     fused = plan.use_pallas is not False
     cap = fused_topk_limit()
+    masked = plan.n_valid is not None or plan.row_valid is not None
 
     def materialized():
         s = approx_scores(
             model, prep, payload, plan.metric,
             use_pallas=plan.use_pallas, stats=stats,
         )
-        if plan.n_valid is None:
+        if not masked:
             return s
         from repro.kernels import ops as K
 
-        return K.mask_valid_rows(s, plan.n_valid)
+        return K.mask_valid_rows(s, plan.n_valid, plan.row_valid)
 
     if plan.rerank and raw is not None:
         R = min(max(plan.rerank, plan.k), n)
@@ -221,7 +233,7 @@ def _execute_dense(model, prep, payload, plan, *, stats, raw):
             short_s, short_rows = approx_topk(
                 model, prep, payload, plan.metric, R,
                 use_pallas=plan.use_pallas, stats=stats,
-                n_valid=plan.n_valid,
+                n_valid=plan.n_valid, row_valid=plan.row_valid,
             )
         else:
             short_s, short_rows = jax.lax.top_k(materialized(), R)
@@ -232,11 +244,12 @@ def _execute_dense(model, prep, payload, plan, *, stats, raw):
     if fused and plan.k <= min(cap, n):
         s, rows = approx_topk(
             model, prep, payload, plan.metric, plan.k,
-            use_pallas=plan.use_pallas, stats=stats, n_valid=plan.n_valid,
+            use_pallas=plan.use_pallas, stats=stats,
+            n_valid=plan.n_valid, row_valid=plan.row_valid,
         )
     else:
         s, rows = jax.lax.top_k(materialized(), plan.k)
-    if plan.n_valid is not None:
+    if masked:
         # -inf slots carry route-dependent ids under row masking (the
         # fused kernel emits sentinels, lax.top_k the masked rows);
         # normalize both routes to the repo-wide -1 convention so the
@@ -359,6 +372,74 @@ def gather_payload(payload: ASHPayload, rows: jax.Array) -> ASHPayload:
         offset=payload.offset[safe],
         cluster=payload.cluster[safe],
     )
+
+
+def take_stats(
+    stats: Optional[ASHStats], rows: jax.Array
+) -> Optional[ASHStats]:
+    """Gather stats rows (compaction: survivors keep their encode-time
+    statistics bit-identically instead of being recomputed)."""
+    if stats is None:
+        return None
+    return ASHStats(
+        res_norm=stats.res_norm[rows],
+        ip_x_mu=stats.ip_x_mu[rows],
+        x_sq=stats.x_sq[rows],
+    )
+
+
+# ---------------------------------------------------------------------------
+# Tombstone (delete) bookkeeping shared by backends
+# ---------------------------------------------------------------------------
+
+
+def effective_next_id(next_id, ids, n: int) -> int:
+    """The user-facing id the next added row receives.
+
+    ``next_id`` (persisted once mutations happen) wins; otherwise it is
+    derived — identity-id states (``ids is None``) continue at ``n``,
+    and explicit id arrays at ``max(ids) + 1`` (equal to ``n`` for any
+    pre-mutation save, so old snapshots keep their add() semantics).
+    Ids are never reused: a deleted-and-compacted id stays retired.
+    """
+    if next_id is not None:
+        return int(next_id)
+    if ids is None or n == 0:
+        return int(n)
+    import numpy as np
+
+    return int(np.asarray(ids).max()) + 1
+
+
+def mark_deleted(
+    ids: Optional[jax.Array],
+    live: Optional[jax.Array],
+    del_ids,
+    n: int,
+) -> tuple[Any, int]:
+    """Tombstone payload rows by user id: (new live bitmap (n,) bool
+    numpy, rows newly removed).
+
+    ``ids`` maps payload rows to user ids (None = identity); ``live``
+    is the current bitmap (None = all live).  Ids that don't exist or
+    are already tombstoned are ignored (FAISS ``remove_ids``
+    semantics), so the removed count is the true live-row delta.
+    """
+    import numpy as np
+
+    del_ids = np.unique(np.asarray(del_ids).reshape(-1).astype(np.int64))
+    row_ids = (
+        np.arange(n, dtype=np.int64) if ids is None
+        else np.asarray(ids).astype(np.int64)
+    )
+    hit = np.isin(row_ids, del_ids)
+    if live is not None:
+        old = np.asarray(live).astype(bool)
+        hit &= old  # only count rows that were still live
+        new_live = old & ~hit
+    else:
+        new_live = ~hit
+    return new_live, int(hit.sum())
 
 
 def concat_stats(

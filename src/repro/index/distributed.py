@@ -112,7 +112,7 @@ def _make_searcher(
     for a in axes:
         n_shards *= mesh.shape[a]
 
-    def local_then_merge(payload: ASHPayload, stats, raw, queries):
+    def local_then_merge(payload: ASHPayload, stats, raw, valid, queries):
         # ---- local scan (per shard): one dense ScanPlan ----
         prep = (
             queries if from_prep
@@ -137,9 +137,14 @@ def _make_searcher(
             n_valid = jnp.clip(
                 n_real - shard_lin * n_local, 0, n_local
             )
+        # a shard can hold fewer rows than k (small indexes, deep
+        # meshes): clamp the LOCAL top-k to the shard size — the
+        # all-gather still collects n_shards * k_loc >= min(k, n_p)
+        # candidates, so the global top-k below is unaffected
+        k_loc = min(k, n_local)
         plan = C.ScanPlan(
-            metric=metric, k=k, rerank=rerank, n_valid=n_valid,
-            use_pallas=fused,
+            metric=metric, k=k_loc, rerank=rerank, n_valid=n_valid,
+            row_valid=valid, use_pallas=fused,
         )
         ls, li = C.execute_plan(
             model, prep, payload, plan, stats=stats, raw=raw
@@ -153,10 +158,11 @@ def _make_searcher(
         gids = jnp.take_along_axis(gi, fi, axis=1)
         return fs, jnp.where(jnp.isneginf(fs), -1, gids)
 
-    # pytree prefixes: payload/stats/raw leaves row-sharded, queries
-    # replicated (stats/raw may be None — empty pytrees, spec unused)
+    # pytree prefixes: payload/stats/raw/valid leaves row-sharded,
+    # queries replicated (stats/raw/valid may be None — empty pytrees,
+    # spec unused)
     specs = dict(
-        in_specs=(P(axes), P(axes), P(axes), P()),
+        in_specs=(P(axes), P(axes), P(axes), P(axes), P()),
         out_specs=(P(), P()),
     )
     if hasattr(jax, "shard_map"):  # jax >= 0.6: top-level, check_vma
@@ -171,14 +177,14 @@ def _make_searcher(
         )
     jitted = jax.jit(fn)
 
-    def search(payload, queries, stats=None, raw=None):
+    def search(payload, queries, stats=None, raw=None, valid=None):
         if rerank and raw is None:
             # loud, not a silent fall-back to un-reranked ASH scores
             raise ValueError(
                 "this searcher was built with rerank > 0; pass raw= "
                 "(row-sharded bf16 vectors aligned with the payload)"
             )
-        return jitted(payload, stats, raw, queries)
+        return jitted(payload, stats, raw, valid, queries)
 
     return search
 
@@ -200,9 +206,12 @@ def make_sharded_search(
     ("pod", "data", "model") shards over all 512 devices).
 
     The searcher also accepts ``stats=`` (row-sharded ``ASHStats``, so
-    the fused l2/cos epilogues skip the per-call stats rebuild) and
+    the fused l2/cos epilogues skip the per-call stats rebuild),
     ``raw=`` (row-sharded bf16 vectors enabling shard-local exact
-    rerank when ``rerank > 0``), both aligned with the padded payload.
+    rerank when ``rerank > 0``) and ``valid=`` (a row-sharded bool
+    validity bitmap — tombstoned rows score ``-inf`` / id -1 via the
+    kernels' runtime mask operand, no recompile per mutation), all
+    aligned with the padded payload.
 
     ``n_real``: rows beyond this global index are padding (from
     :func:`pad_to_multiple`) and are masked to score ``-inf`` / id -1.

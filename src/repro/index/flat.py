@@ -16,11 +16,13 @@ index (built at build/add, persisted by save/load).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import ash as A
 from repro.core import scoring as S
@@ -30,7 +32,7 @@ from repro.core.types import (
 from repro.index import common as C
 
 
-@pytree_dataclass(meta_fields=("metric",))
+@pytree_dataclass(meta_fields=("metric", "next_id"))
 class FlatIndex:
     metric: str  # "dot" | "l2" | "cos"
     model: ASHModel
@@ -41,6 +43,17 @@ class FlatIndex:
     # Encode-time row statistics consumed by the fused l2/cos epilogues
     # (None → rebuilt per scoring call, decompressing the database).
     stats: Optional[ASHStats] = None
+    # User-facing id of each payload row; None = identity (row == id),
+    # which holds until a compaction retires tombstoned ids.  Always
+    # strictly increasing (appends continue past every retired id).
+    ids: Optional[jax.Array] = None
+    # Row-validity bitmap: False rows are tombstoned (deleted) and can
+    # never surface in results (the ScanPlan threads this into the
+    # kernels' runtime mask operand).  None = all rows live.
+    live: Optional[jax.Array] = None
+    # Meta: id the next added row receives (None = derived; see
+    # ``common.effective_next_id``).  Only set once mutations happen.
+    next_id: Optional[int] = None
 
 
 def _build(
@@ -94,7 +107,8 @@ def _search_prepped(
     sharded backends).
     """
     plan = C.ScanPlan(
-        metric=index.metric, k=k, rerank=rerank, use_pallas=use_pallas
+        metric=index.metric, k=k, rerank=rerank, row_valid=index.live,
+        ids=index.ids, use_pallas=use_pallas,
     )
     return C.execute_plan(
         index.model, prep, index.payload, plan,
@@ -119,8 +133,19 @@ def _search(
 
 
 def _add(index: FlatIndex, X_new: jax.Array) -> FlatIndex:
-    """Encode new rows under the existing model and append them."""
+    """Encode new rows under the existing model and append them.  New
+    rows get the next ``n_new`` user ids (see ``effective_next_id``)."""
     payload_new = A.encode(index.model, X_new)
+    n_new = payload_new.n
+    nid = C.effective_next_id(index.next_id, index.ids, index.payload.n)
+    ids = index.ids
+    if ids is not None:
+        ids = jnp.concatenate(
+            [ids, nid + jnp.arange(n_new, dtype=jnp.int32)]
+        )
+    live = index.live
+    if live is not None:
+        live = jnp.concatenate([live, jnp.ones((n_new,), bool)])
     raw = index.raw
     if raw is not None:
         raw = jnp.concatenate(
@@ -134,4 +159,50 @@ def _add(index: FlatIndex, X_new: jax.Array) -> FlatIndex:
         stats=C.concat_stats(
             index.stats, S.payload_stats(index.model, payload_new)
         ),
+        ids=ids,
+        live=live,
+        next_id=None if index.next_id is None else nid + n_new,
+    )
+
+
+def _delete(index: FlatIndex, del_ids) -> tuple[FlatIndex, int]:
+    """Tombstone rows by user id: (index, rows newly removed).  Rows
+    stay in the payload (scored ``-inf`` via the kernel mask operand)
+    until :func:`_compact` evicts them."""
+    new_live, removed = C.mark_deleted(
+        index.ids, index.live, del_ids, index.payload.n
+    )
+    if removed == 0:
+        return index, 0
+    return dataclasses.replace(index, live=jnp.asarray(new_live)), removed
+
+
+def _compact(index: FlatIndex) -> FlatIndex:
+    """Rewrite codes/stats/raw/ids to evict tombstoned rows.  Search
+    afterwards is bit-identical to a fresh build over the survivors
+    (same model): encode/stats are row-independent and survivors keep
+    their payload rows and relative order, so values and tie order
+    match (survivor ids map monotonically onto the rebuild's rows)."""
+    if index.live is None:
+        return index
+    live_np = np.asarray(index.live).astype(bool)
+    if live_np.all():
+        return dataclasses.replace(index, live=None)
+    if not live_np.any():
+        raise ValueError(
+            "compact() would evict every row; an empty index cannot "
+            "be searched — keep at least one live row or rebuild"
+        )
+    nid = C.effective_next_id(index.next_id, index.ids, index.payload.n)
+    keep = jnp.asarray(np.nonzero(live_np)[0].astype(np.int32))
+    ids = keep if index.ids is None else index.ids[keep]
+    return FlatIndex(
+        metric=index.metric,
+        model=index.model,
+        payload=C.gather_payload(index.payload, keep),
+        raw=None if index.raw is None else index.raw[keep],
+        stats=C.take_stats(index.stats, keep),
+        ids=ids.astype(jnp.int32),
+        live=None,
+        next_id=nid,
     )

@@ -32,7 +32,7 @@ from repro.index import common as C
 NEG_INF = C.NEG_INF
 
 
-@pytree_dataclass(meta_fields=("metric", "max_list_len"))
+@pytree_dataclass(meta_fields=("metric", "max_list_len", "next_id"))
 class IVFIndex:
     metric: str
     max_list_len: int
@@ -44,6 +44,13 @@ class IVFIndex:
     # Encode-time row statistics for the fused l2/cos epilogues on the
     # full-probe (dense-scan) path; row-aligned with ``payload``.
     stats: Optional[ASHStats] = None
+    # Row-validity bitmap, row-aligned with ``payload``: False rows are
+    # tombstoned (deleted).  Dense full-probe scans mask them via the
+    # kernel mask operand; partial probes drop them from the candidate
+    # lists before the gather kernel DMAs anything.  None = all live.
+    live: Optional[jax.Array] = None
+    # Meta: id the next added row receives (see effective_next_id).
+    next_id: Optional[int] = None
 
 
 def _assemble(
@@ -52,13 +59,15 @@ def _assemble(
     payload: ASHPayload,
     ids: jax.Array,
     raw: Optional[jax.Array],
+    live: Optional[jax.Array] = None,
+    next_id: Optional[int] = None,
 ) -> IVFIndex:
     """Sort rows by cluster and build the padded inverted lists.
 
-    payload/ids/raw are row-aligned in any order; ``ids`` holds the
-    original (user-facing) id of each row.  Used by both build and
-    incremental add — a stable sort keeps add() results identical to a
-    from-scratch assembly over the concatenated rows.
+    payload/ids/raw/live are row-aligned in any order; ``ids`` holds
+    the original (user-facing) id of each row.  Used by build,
+    incremental add and compaction — a stable sort keeps add() results
+    identical to a from-scratch assembly over the concatenated rows.
     """
     import numpy as np
 
@@ -92,6 +101,8 @@ def _assemble(
         invlists=jnp.asarray(invlists),
         raw=None if raw is None else raw[perm],
         stats=S.payload_stats(model, sorted_payload),
+        live=None if live is None else jnp.asarray(live)[perm],
+        next_id=next_id,
     )
 
 
@@ -120,13 +131,17 @@ def _build(
 
 def _add(index: IVFIndex, X_new: jax.Array) -> IVFIndex:
     """Encode new rows under the existing model and merge them into the
-    inverted lists.  New rows get ids ``n, ..., n + n_new - 1``."""
+    inverted lists.  New rows get the next ``n_new`` user ids (past any
+    retired ones; see ``effective_next_id``)."""
     payload_new = A.encode(index.model, X_new)
-    n_old = index.ids.shape[0]
+    n_new = payload_new.n
+    nid = C.effective_next_id(index.next_id, index.ids, index.payload.n)
     ids = jnp.concatenate(
-        [index.ids,
-         n_old + jnp.arange(payload_new.n, dtype=jnp.int32)]
+        [index.ids, nid + jnp.arange(n_new, dtype=jnp.int32)]
     )
+    live = index.live
+    if live is not None:
+        live = jnp.concatenate([live, jnp.ones((n_new,), bool)])
     raw = index.raw
     if raw is not None:
         raw = jnp.concatenate(
@@ -138,6 +153,54 @@ def _add(index: IVFIndex, X_new: jax.Array) -> IVFIndex:
         C.concat_payloads(index.payload, payload_new),
         ids,
         raw,
+        live=live,
+        next_id=None if index.next_id is None else nid + n_new,
+    )
+
+
+def _delete(index: IVFIndex, del_ids) -> tuple[IVFIndex, int]:
+    """Tombstone rows by user id: (index, rows newly removed).  The
+    inverted lists are untouched — tombstoned rows are dropped from
+    gathered candidate lists at search time and masked in full scans —
+    so delete never pays the re-sort; :func:`_compact` does."""
+    import dataclasses
+
+    new_live, removed = C.mark_deleted(
+        index.ids, index.live, del_ids, index.payload.n
+    )
+    if removed == 0:
+        return index, 0
+    return dataclasses.replace(index, live=jnp.asarray(new_live)), removed
+
+
+def _compact(index: IVFIndex) -> IVFIndex:
+    """Evict tombstoned rows and rebuild the inverted lists.  Survivors
+    keep their relative (stable cluster-sorted) order, so search after
+    compaction is bit-identical to a fresh build over the surviving
+    rows under the same model."""
+    import dataclasses
+
+    import numpy as np
+
+    if index.live is None:
+        return index
+    live_np = np.asarray(index.live).astype(bool)
+    if live_np.all():
+        return dataclasses.replace(index, live=None)
+    if not live_np.any():
+        raise ValueError(
+            "compact() would evict every row; an empty index cannot "
+            "be searched — keep at least one live row or rebuild"
+        )
+    nid = C.effective_next_id(index.next_id, index.ids, index.payload.n)
+    keep = jnp.asarray(np.nonzero(live_np)[0].astype(np.int32))
+    return _assemble(
+        index.metric,
+        index.model,
+        C.gather_payload(index.payload, keep),
+        index.ids[keep],
+        None if index.raw is None else index.raw[keep],
+        next_id=nid,
     )
 
 
@@ -184,8 +247,8 @@ def _full_scan(
     flat backend's routing ladder (a dense ``common.ScanPlan``) with
     payload rows mapped to user ids via ``index.ids``."""
     plan = C.ScanPlan(
-        metric=index.metric, k=k, rerank=rerank, ids=index.ids,
-        use_pallas=use_pallas,
+        metric=index.metric, k=k, rerank=rerank, row_valid=index.live,
+        ids=index.ids, use_pallas=use_pallas,
     )
     return C.execute_plan(
         index.model, prep, index.payload, plan,
@@ -212,6 +275,13 @@ def _score_gathered(
     )
     _, probe = jax.lax.top_k(coarse, nprobe)  # (m, nprobe)
     cand_rows = index.invlists[probe].reshape(m, -1)  # (m, nprobe*L)
+    if index.live is not None:
+        # drop tombstoned rows pre-DMA: mapped to the -1 pad id, the
+        # gather kernel never issues a copy for them and the epilogue
+        # masks the slot to -inf — identical to list padding
+        cand_rows = jnp.where(
+            index.live[jnp.maximum(cand_rows, 0)], cand_rows, -1
+        )
     plan = C.ScanPlan(
         metric=index.metric, k=k, rerank=rerank, rows=cand_rows,
         ids=index.ids,

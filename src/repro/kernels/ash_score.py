@@ -59,10 +59,13 @@ kernel DMA-gathers each candidate's PACKED code word strip HBM -> VMEM
 directly — neither the unpacked codes nor the (m, R) score matrix ever
 exist in HBM, only the 16x-32x-compressed words of the rows actually
 probed move.  Pad entries (row id -1) are masked to ``-inf`` in the
-epilogue (the id masking also absorbs the sharded backend's ``n_real``
-row-validity masking in the dense kernel, where ``n_valid`` is a
-runtime scalar-prefetch operand so one compiled program serves every
-shard of a shard_map).
+epilogue.  The dense selection kernel absorbs row-validity masking the
+same way: a runtime (1, n) int32 mask operand folds the sharded
+backend's ``n_real`` pad truncation AND the index layers' tombstone
+(deleted-row) bitmap into the kernel's id masking, so one compiled
+program serves every shard of a shard_map and every mutation state
+(deletes never recompile; the gather path instead drops tombstoned ids
+from the candidate lists before any DMA is issued).
 
 Grid: (n_blocks, m_blocks, d_blocks), d innermost for accumulation in a
 VMEM fp32 scratch tile; the gather variants use (m, r_blocks, d_blocks)
@@ -211,7 +214,6 @@ def _select_topk(scores, valid, col0, k_tilde, vals_ref, ids_ref):
 
 
 def _topk_kernel(
-    n_valid_ref,  # scalar prefetch: (1,) int32 count of valid rows
     q_ref,
     codes_ref,
     scale_ref,
@@ -220,17 +222,25 @@ def _topk_kernel(
     ipq_ref,
     qterm_ref,
     rowterm_ref,
-    vals_ref,  # (m_blk, k_tilde) fp32
-    ids_ref,  # (m_blk, k_tilde) int32
-    acc_ref,  # scratch (m_blk, n_blk) fp32
-    *,
+    *rest,  # [mask_ref,] vals_ref, ids_ref, acc_ref — see use_mask
     b: int,
     n_d_blocks: int,
     compute_dtype,
     metric: str,
     k_tilde: int,
     block_n: int,
+    n_real: int,
+    use_mask: bool,
 ):
+    # refs after the shared operand block depend on the masking mode:
+    #   use_mask:  mask_ref (1, n_blk) int32 runtime row-validity
+    #              (0 = masked), then vals/ids outputs + acc scratch
+    #   else:      vals/ids outputs + acc scratch only — validity is
+    #              the static block-padding predicate col < n_real
+    if use_mask:
+        mask_ref, vals_ref, ids_ref, acc_ref = rest
+    else:
+        vals_ref, ids_ref, acc_ref = rest
     k_idx = pl.program_id(2)
     # program_id must be read outside the pl.when body (interpret mode
     # lowers the body through lax.cond, where the primitive is absent)
@@ -248,11 +258,19 @@ def _topk_kernel(
             acc_ref[...], scale_ref, offset_ref, cluster_ref, ipq_ref,
             qterm_ref, rowterm_ref, metric=metric,
         )  # (m_blk, n_blk) fp32
-        local = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
-        # block-padding columns beyond the real n never win; n_valid is
-        # a RUNTIME operand so the sharded backend's n_real masking
-        # folds into the same id masking (one program for every shard)
-        valid = (local + col0) < n_valid_ref[0]
+        if use_mask:
+            # the mask operand is a RUNTIME per-row validity vector
+            # folding three maskings into one id mask: block-padding
+            # columns beyond the real n (always 0 there), the sharded
+            # backend's per-shard n_real truncation, and tombstoned
+            # (deleted) rows — one compiled program serves every shard
+            # and every mutation state
+            valid = jnp.broadcast_to(mask_ref[...] != 0, scores.shape)
+        else:
+            # unmasked scan (no deletes, no sharding): block padding is
+            # the only invalid region and n is static — no operand
+            local = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+            valid = (local + col0) < n_real
         _select_topk(scores, valid, col0, k_tilde, vals_ref, ids_ref)
 
 
@@ -309,8 +327,9 @@ def _pad_operands(
 
 
 def _in_specs(g):
-    # trailing *_ absorbs the scalar-prefetch refs the selection grid
-    # spec appends to every index_map call (unused for block routing)
+    # trailing *_ tolerates grid specs that append extra index_map args
+    # (kept permissive; the dense kernels run on a plain grid — the
+    # selection kernel's row mask is a regular blocked operand now)
     return [
         pl.BlockSpec(
             (g["block_m"], g["block_d"]), lambda i, j, k_, *_: (j, k_)
@@ -404,6 +423,7 @@ def ash_score_topk_pallas(
     qterm: jax.Array | None = None,
     rowterm: jax.Array | None = None,
     n_valid: jax.Array | None = None,  # scalar: rows >= this are masked
+    row_valid: jax.Array | None = None,  # (n,) bool/int: 0 = masked row
     *,
     b: int,
     k: int,
@@ -424,11 +444,17 @@ def ash_score_topk_pallas(
     ``k``.  Ids of exhausted slots come back as -1 (only reachable when
     ``k > min(n, k̃)``).
 
-    ``n_valid`` is a RUNTIME scalar (default: all ``n`` rows valid):
-    rows at or beyond it score ``-inf`` and are excluded from selection
-    exactly like block padding — this is how the sharded backend folds
-    its per-shard ``n_real`` pad-row masking into the kernel's id
-    masking (one compiled program serves every shard of a shard_map).
+    Row-validity masking: when either ``n_valid`` or ``row_valid`` is
+    given, they fold into ONE runtime (1, n_p) int32 mask operand — no
+    recompilation between mutation states or shard shapes.  Without
+    them (the common unmutated, unsharded scan) no mask operand exists
+    at all: block padding is masked by a static predicate.
+
+    * ``n_valid`` (scalar): rows at or beyond it score ``-inf`` — the
+      sharded backend's per-shard ``n_real`` pad-row truncation.
+    * ``row_valid`` ((n,) bool): rows whose entry is 0 score ``-inf``
+      and are excluded from selection exactly like block padding — the
+      index layers' tombstone (deleted-row) bitmap.
     """
     assert metric in METRICS, metric
     n = codes.shape[0]
@@ -437,9 +463,24 @@ def ash_score_topk_pallas(
         qterm, rowterm,
         b=b, block_m=block_m, block_n=block_n, block_d=block_d,
     )
-    if n_valid is None:
-        n_valid = jnp.int32(n)
-    n_valid_arr = jnp.asarray(n_valid, jnp.int32).reshape(1)
+    use_mask = n_valid is not None or row_valid is not None
+    in_specs = _in_specs(g)
+    if use_mask:
+        if row_valid is None:
+            mask = jnp.ones((n,), jnp.int32)
+        else:
+            mask = row_valid.astype(jnp.int32)
+        if n_valid is not None:
+            mask = mask * (
+                jnp.arange(n, dtype=jnp.int32)
+                < jnp.asarray(n_valid, jnp.int32)
+            ).astype(jnp.int32)
+        operands = operands + (
+            jnp.pad(mask, (0, g["n_p"] - n)).reshape(1, g["n_p"]),
+        )
+        in_specs = in_specs + [
+            pl.BlockSpec((1, g["block_n"]), lambda i, j, k_: (0, i)),
+        ]
     if k_tilde is None:
         k_tilde = k
     k_tilde = min(k_tilde, g["block_n"])
@@ -449,22 +490,6 @@ def ash_score_topk_pallas(
             f"k={k} exceeds the {n_blocks} x k_tilde={k_tilde} candidate "
             f"strip; raise k_tilde or use the materializing kernel"
         )
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=g["grid"],
-        in_specs=_in_specs(g),
-        out_specs=[
-            pl.BlockSpec(
-                (g["block_m"], k_tilde), lambda i, j, k_, *_: (j, i)
-            ),
-            pl.BlockSpec(
-                (g["block_m"], k_tilde), lambda i, j, k_, *_: (j, i)
-            ),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((g["block_m"], g["block_n"]), jnp.float32)
-        ],
-    )
     vals, ids = pl.pallas_call(
         functools.partial(
             _topk_kernel,
@@ -474,14 +499,28 @@ def ash_score_topk_pallas(
             metric=metric,
             k_tilde=k_tilde,
             block_n=g["block_n"],
+            n_real=n,
+            use_mask=use_mask,
         ),
-        grid_spec=grid_spec,
+        grid=g["grid"],
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec(
+                (g["block_m"], k_tilde), lambda i, j, k_: (j, i)
+            ),
+            pl.BlockSpec(
+                (g["block_m"], k_tilde), lambda i, j, k_: (j, i)
+            ),
+        ],
         out_shape=[
             jax.ShapeDtypeStruct((g["m_p"], n_blocks * k_tilde), jnp.float32),
             jax.ShapeDtypeStruct((g["m_p"], n_blocks * k_tilde), jnp.int32),
         ],
+        scratch_shapes=[
+            pltpu.VMEM((g["block_m"], g["block_n"]), jnp.float32)
+        ],
         interpret=interpret,
-    )(n_valid_arr, *operands)
+    )(*operands)
     vals, ids = vals[: g["m"]], ids[: g["m"]]
     # Merge: (score desc, id asc) — bit-equal to lax.top_k over the
     # materialized row (candidate tiles are already in ascending-id

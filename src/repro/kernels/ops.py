@@ -122,12 +122,14 @@ def ash_score(
     )
 
 
-def mask_valid_rows(scores: jax.Array, n_valid) -> jax.Array:
-    """Force columns at/beyond ``n_valid`` (a static int or traced
-    scalar) to ``-inf`` — the materialized-path equivalent of the fused
-    kernel's runtime row-validity masking."""
-    cols = jnp.arange(scores.shape[-1])
-    return jnp.where(cols[None, :] < n_valid, scores, -jnp.inf)
+def mask_valid_rows(
+    scores: jax.Array, n_valid=None, row_valid=None
+) -> jax.Array:
+    """Force masked columns to ``-inf`` — the materialized-path
+    equivalent of the fused kernel's runtime row-validity mask operand.
+    ``n_valid`` (static int or traced scalar) masks columns at/beyond
+    it; ``row_valid`` ((n,) bool) masks tombstoned rows."""
+    return ref.mask_rows_ref(scores, n_valid, row_valid)
 
 
 def ash_score_topk(
@@ -140,6 +142,7 @@ def ash_score_topk(
     stats: ASHStats | None = None,
     k_tilde: int | None = None,
     n_valid=None,
+    row_valid=None,
     use_pallas: bool | None = None,
     interpret: bool | None = None,
     compute_dtype=jnp.float32,
@@ -154,7 +157,9 @@ def ash_score_topk(
 
     ``n_valid`` (int or traced scalar) masks rows at/beyond it to
     ``-inf`` inside the scan — the sharded backend's per-shard pad-row
-    masking, folded into the kernel's id masking.
+    masking; ``row_valid`` ((n,) bool) additionally masks tombstoned
+    rows.  Both fold into the kernel's single runtime mask operand, so
+    deletes never trigger a recompile.
     """
     if use_pallas is None:
         use_pallas = not _auto_interpret()
@@ -166,12 +171,12 @@ def ash_score_topk(
         scores = ref.ash_score_metric_ref(
             *args, qterm, rowterm, b=payload.b, metric=metric
         )
-        if n_valid is not None:
-            scores = mask_valid_rows(scores, n_valid)
+        scores = mask_valid_rows(scores, n_valid, row_valid)
         return jax.lax.top_k(scores, k)
     return ash_score_topk_pallas(
-        *args, qterm, rowterm, n_valid, b=payload.b, k=k, k_tilde=k_tilde,
-        metric=metric, interpret=interpret, compute_dtype=compute_dtype,
+        *args, qterm, rowterm, n_valid, row_valid, b=payload.b, k=k,
+        k_tilde=k_tilde, metric=metric, interpret=interpret,
+        compute_dtype=compute_dtype,
     )
 
 

@@ -71,6 +71,30 @@ def ash_score_metric_ref(
     raise ValueError(metric)
 
 
+def mask_rows_ref(
+    scores: jax.Array,  # (m, n)
+    n_valid: jax.Array | None = None,  # scalar; cols >= it are masked
+    row_valid: jax.Array | None = None,  # (n,) bool/int; 0 = masked
+) -> jax.Array:
+    """Oracle for the dense kernel's row-validity mask operand.
+
+    Forces masked columns to ``-inf``: columns at/beyond ``n_valid``
+    (the sharded backend's per-shard pad truncation) and columns whose
+    ``row_valid`` entry is falsy (the index layers' tombstone bitmap).
+    The fused selection kernel folds the same combined mask into its id
+    masking, so materialize-then-``top_k`` and fused selection agree.
+    """
+    if n_valid is None and row_valid is None:
+        return scores
+    ok = jnp.ones((scores.shape[-1],), bool)
+    if row_valid is not None:
+        ok = ok & row_valid.astype(bool)
+    if n_valid is not None:
+        cols = jnp.arange(scores.shape[-1])
+        ok = ok & (cols < n_valid)
+    return jnp.where(ok[None, :], scores, -jnp.inf)
+
+
 def ash_score_gather_ref(
     codes: jax.Array,  # (n, Wd) uint32 packed
     rows: jax.Array,  # (m, R) int32 candidate row ids, -1 = padding

@@ -50,6 +50,13 @@ def main(argv=None):
                    default="dot")
     p.add_argument("--nprobe", type=int, default=8)
     p.add_argument("--rerank", type=int, default=0)
+    p.add_argument("--mutate-fraction", type=float, default=0.0,
+                   help="fraction of stream slots that carry a "
+                        "mutation (engine-queued batched add or "
+                        "tombstone delete) alongside the query traffic")
+    p.add_argument("--auto-compact", type=float, default=None,
+                   help="dead-fraction threshold for automatic "
+                        "tombstone eviction after mutation batches")
     p.add_argument("--save-dir", default=None,
                    help="persist the built index (npz + JSON) here")
     p.add_argument("--seed", type=int, default=0)
@@ -85,6 +92,7 @@ def main(argv=None):
     engine = QueryEngine(
         index, batch_buckets=buckets,
         max_wait_s=args.max_wait_ms / 1e3,
+        auto_compact=args.auto_compact,
     )
     search_kw = dict(nprobe=args.nprobe, rerank=args.rerank)
 
@@ -99,18 +107,32 @@ def main(argv=None):
     )
     for b in buckets:
         warm.search(Q[: min(b, args.queries)], k=100, **search_kw)
+    X_np = np.asarray(X)
+    mut_rng = np.random.RandomState(args.seed + 1)
+    mut_tickets = []
     t0 = time.time()
-    tickets = [
-        engine.submit(Q[i:i + args.req_batch], k=100, **search_kw)
-        for i in range(0, args.queries, args.req_batch)
-    ]
+    tickets = []
+    for i in range(0, args.queries, args.req_batch):
+        if args.mutate_fraction > 0 and mut_rng.rand() < args.mutate_fraction:
+            # live mutation traffic rides the same engine queue: adds
+            # re-ingest existing rows (no re-training), deletes
+            # tombstone random live ids; both barrier this index's
+            # queued queries and apply batched at the next flush
+            if mut_rng.rand() < 0.5:
+                rows = X_np[mut_rng.randint(0, args.n, args.req_batch)]
+                mut_tickets.append(engine.submit_add(rows))
+            else:
+                victims = mut_rng.randint(0, index.n, args.req_batch)
+                mut_tickets.append(engine.submit_delete(victims))
+        tickets.append(
+            engine.submit(Q[i:i + args.req_batch], k=100, **search_kw)
+        )
     engine.flush()
     dt = time.time() - t0
     ids = np.concatenate([t.result()[1] for t in tickets], axis=0)
 
     p50, p99 = np.percentile([t.stats.latency_s for t in tickets],
                              [50, 99])
-    rec = MET.recall_curve(ids, gt_i, Rs=(10, 100))
     print(f"[serve] {args.queries} queries "
           f"({len(tickets)} requests x {args.req_batch}) in {dt:.2f}s "
           f"({args.queries / dt:.0f} QPS on this CPU)")
@@ -122,8 +144,21 @@ def main(argv=None):
           f"({snap['prep_hits']}/{snap['prep_hits'] + snap['prep_misses']} "
           f"rows) resident={engine.prep_cache_bytes / 1024:.1f}KiB "
           f"budget={engine.config.prep_cache_bytes / 2**20:.0f}MiB")
-    print(f"[recall] 10-recall@10={rec.get(10):.4f} "
-          f"10-recall@100={rec.get(100):.4f}")
+    if mut_tickets:
+        added = sum(t.n_rows for t in mut_tickets if t.kind == "add")
+        removed = sum(t.result() for t in mut_tickets
+                      if t.kind == "delete")
+        print(f"[mutations] {len(mut_tickets)} submissions "
+              f"({added} rows added, {removed} removed) in "
+              f"{snap['mutation_batches']} batched applies, "
+              f"{snap['compactions']} compactions; index now "
+              f"n={index.n} live={index.n_live}")
+        print("[recall] skipped (index mutated during the stream; "
+              "ground truth is stale)")
+    else:
+        rec = MET.recall_curve(ids, gt_i, Rs=(10, 100))
+        print(f"[recall] 10-recall@10={rec.get(10):.4f} "
+              f"10-recall@100={rec.get(100):.4f}")
     return 0
 
 

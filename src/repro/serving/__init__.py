@@ -1,7 +1,10 @@
 """Serving integrations of the ASH technique."""
 from repro.serving import engine, retrieval
-from repro.serving.engine import EngineConfig, QueryEngine, Ticket
+from repro.serving.engine import (
+    EngineConfig, MutationTicket, QueryEngine, Ticket,
+)
 
 __all__ = [
-    "engine", "retrieval", "EngineConfig", "QueryEngine", "Ticket",
+    "engine", "retrieval", "EngineConfig", "MutationTicket",
+    "QueryEngine", "Ticket",
 ]

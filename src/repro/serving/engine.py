@@ -45,6 +45,22 @@ Mechanics:
   IVF, sharded) for tenant/namespace routing via ``index=``.
 * **k > n** — clamped to the index size and padded back out with score
   ``-inf`` / id ``-1`` (the repo-wide missing-candidate convention).
+* **Mutations** — ``submit_add`` / ``submit_delete`` queue through the
+  same bucket/flush loop as queries.  A mutation submission BARRIERS
+  its index: every queued query group for that index flushes first
+  (those queries were submitted earlier and must see the pre-mutation
+  state), then the mutation stages (adds buffer host-side via
+  ``AshIndex.stage_add`` — ids assigned immediately, in submission
+  order; deletes queue as id lists).  Staged mutations apply in ONE
+  batched step — one IVF re-sort / sharded re-placement per batch —
+  before the next query flush of that index, on ``flush()``, on an
+  aged ``poll()``, or when the backlog exceeds
+  ``max_pending_mutations`` rows; ``auto_compact`` optionally evicts
+  tombstones past a dead-fraction threshold right after a batch with
+  deletes.  Because every query flush applies the mutations queued
+  before it, any search observes exactly the mutations submitted
+  before it — and results stay bit-identical to direct
+  ``AshIndex.search`` on the equivalently-mutated index.
 """
 from __future__ import annotations
 
@@ -86,6 +102,13 @@ class EngineConfig:
     max_wait_s: float = 0.002  # flush-on-timeout age
     prep_cache_bytes: int = 64 << 20  # LRU byte budget; 0 disables
     prep_cache_entries: Optional[int] = None  # extra row bound; 0 disables
+    # mutation backlog bound, in staged add rows + queued delete ids:
+    # past it the batch applies immediately instead of waiting for the
+    # next query flush / poll timeout
+    max_pending_mutations: int = 4096
+    # evict tombstones whenever a mutation batch leaves the index's
+    # dead fraction above this (None = never compact automatically)
+    auto_compact: Optional[float] = None
 
     def __post_init__(self):
         if not self.batch_buckets or not self.k_buckets:
@@ -101,6 +124,17 @@ class EngineConfig:
         if self.prep_cache_entries is not None and self.prep_cache_entries < 0:
             raise ValueError(
                 f"prep_cache_entries must be >= 0: {self.prep_cache_entries}"
+            )
+        if self.max_pending_mutations < 1:
+            raise ValueError(
+                f"max_pending_mutations must be >= 1: "
+                f"{self.max_pending_mutations}"
+            )
+        if self.auto_compact is not None and not (
+            0.0 <= self.auto_compact < 1.0
+        ):
+            raise ValueError(
+                f"auto_compact must be in [0, 1): {self.auto_compact}"
             )
 
     @property
@@ -137,7 +171,9 @@ class RequestStats:
     scoring_us: float = 0.0  # fused scoring call, whole bucket
     prep_hits: int = 0  # this request's rows found in the prep cache
     prep_misses: int = 0
-    flush_reason: str = ""  # "size" | "timeout" | "manual" | "pressure"
+    # "size" | "timeout" | "manual" | "pressure" | "barrier" (the group
+    # was flushed because a mutation arrived for its index)
+    flush_reason: str = ""
 
 
 @dataclasses.dataclass
@@ -150,9 +186,15 @@ class EngineStats:
     padded_rows: int = 0  # zero rows added by bucketing
     prep_hits: int = 0
     prep_misses: int = 0
+    mutations: int = 0  # submit_add/submit_delete calls
+    added_rows: int = 0  # rows ingested via applied mutation batches
+    deleted_rows: int = 0  # rows tombstoned via applied batches
+    mutation_batches: int = 0  # batched apply steps (the amortized op)
+    compactions: int = 0  # auto_compact evictions triggered
     flushes: Dict[str, int] = dataclasses.field(
         default_factory=lambda: {
-            "size": 0, "timeout": 0, "manual": 0, "pressure": 0
+            "size": 0, "timeout": 0, "manual": 0, "pressure": 0,
+            "barrier": 0,
         }
     )
     # distinct (index, bucket, k, params) combinations that ran — the
@@ -172,6 +214,11 @@ class EngineStats:
             "prep_hits": self.prep_hits,
             "prep_misses": self.prep_misses,
             "prep_hit_rate": round(self.prep_hits / max(1, looked_up), 3),
+            "mutations": self.mutations,
+            "added_rows": self.added_rows,
+            "deleted_rows": self.deleted_rows,
+            "mutation_batches": self.mutation_batches,
+            "compactions": self.compactions,
             "flushes": dict(self.flushes),
             "unique_buckets": len(self.compiled_buckets),
         }
@@ -210,6 +257,43 @@ class Ticket:
         return self._result
 
 
+class MutationTicket:
+    """Handle for a submitted mutation; resolves when its index's
+    queued mutation batch is applied (next query flush of that index,
+    ``flush()``, an aged ``poll()``, backlog overflow — or this
+    ticket's ``result()``)."""
+
+    def __init__(self, engine: "QueryEngine", index_name: str,
+                 kind: str, n_rows: int):
+        self._engine = engine
+        self._index = index_name
+        self.kind = kind  # "add" | "delete"
+        self.n_rows = n_rows  # rows staged (add) / ids requested (delete)
+        self.t_enqueue = time.perf_counter()
+        self.apply_s = 0.0  # duration of the whole batched apply step
+        self.ids: Optional[np.ndarray] = None  # adds: assigned user ids
+        self._result: Optional[Any] = None
+        self._error: Optional[BaseException] = None
+
+    @property
+    def done(self) -> bool:
+        return self._result is not None or self._error is not None
+
+    def result(self):
+        """Adds: the (n,) int64 user ids the rows received (also on
+        ``.ids`` immediately after submit).  Deletes: the number of
+        rows newly tombstoned.  Applies the index's pending mutation
+        batch if it is still queued; re-raises the batch's error if
+        the apply failed."""
+        if not self.done:
+            self._engine._apply_mutations(self._index)
+        if self._error is not None:
+            raise RuntimeError(
+                "mutation failed during its batched apply step"
+            ) from self._error
+        return self._result
+
+
 @dataclasses.dataclass
 class _Request:
     queries: np.ndarray  # (m, D) float32, contiguous
@@ -239,6 +323,12 @@ class QueryEngine:
         self._pending_rows = 0
         self._prep_cache: "OrderedDict[tuple, tuple]" = OrderedDict()
         self._prep_cache_nbytes = 0
+        # queued mutations, per index: add tickets (rows already staged
+        # on the AshIndex), delete id lists, and the oldest submission
+        # time (drives the poll() age check)
+        self._add_tickets: Dict[str, list] = {}
+        self._pending_deletes: Dict[str, list] = {}
+        self._mutation_t0: Dict[str, float] = {}
         self.stats = EngineStats()
         if isinstance(indexes, AshIndex):
             self.register("default", indexes)
@@ -250,8 +340,15 @@ class QueryEngine:
 
     def register(self, name: str, index: AshIndex) -> "QueryEngine":
         """Route ``submit(..., index=name)`` to ``index``.  Re-binding a
-        name drops its cached preps (a new index means a new model)."""
+        name drops its cached preps (a new index means a new model) and
+        first applies any queued mutations against the OLD binding —
+        their rows are already staged on that index, so erroring the
+        tickets would strand rows that the old index still ingests on
+        its next ``apply_pending``.  An apply failure lands on the
+        mutation tickets (re-raised by their ``result()``), never here.
+        """
         if name in self._indexes:
+            self._try_flush(self._apply_mutations, name)
             self.invalidate_prep_cache(name)
         self._indexes[name] = index
         return self
@@ -360,24 +457,151 @@ class QueryEngine:
         (scores, ids) numpy arrays, each (m, k)."""
         return self.submit(queries, k, **kw).result()
 
+    # -- mutation intake ----------------------------------------------
+
+    def submit_add(self, rows, *, index: str = "default") -> MutationTicket:
+        """Queue rows for batched ingestion; returns a
+        :class:`MutationTicket` whose ``.ids`` already holds the user
+        ids the rows will carry (assigned now, in submission order).
+
+        Barriers the index first: queued query groups for it flush
+        (they were submitted before this mutation and must see the
+        pre-mutation state).  The rows stage host-side and the
+        expensive apply (one IVF re-sort / sharded re-placement for
+        the WHOLE batch) is deferred to the next query flush of this
+        index, ``flush()``, an aged ``poll()``, or backlog overflow.
+        """
+        idx = self._require_index(index)
+        q = np.ascontiguousarray(np.asarray(rows), dtype=np.float32)
+        if q.ndim == 1:
+            q = q[None, :]
+        dim = idx.model.landmarks.shape[1]
+        if q.ndim != 2 or q.shape[1] != dim:
+            raise ValueError(
+                f"add rows must be (n, {dim}) for index {index!r}: "
+                f"got {q.shape}"
+            )
+        self._barrier(index)
+        ticket = MutationTicket(self, index, "add", q.shape[0])
+        ticket.ids = idx.stage_add(q)
+        self._add_tickets.setdefault(index, []).append(ticket)
+        self._mutation_t0.setdefault(index, ticket.t_enqueue)
+        self.stats.mutations += 1
+        self._maybe_apply(index)
+        return ticket
+
+    def submit_delete(self, ids, *, index: str = "default") -> MutationTicket:
+        """Queue a tombstone delete by user id; the ticket resolves to
+        the number of rows newly removed (unknown / already-deleted
+        ids are ignored).  Same barrier/batching semantics as
+        :meth:`submit_add`; deletes never pay a re-sort at all — only
+        an eventual ``compact()`` does."""
+        idx = self._require_index(index)
+        del_ids = np.asarray(ids).reshape(-1).astype(np.int64)
+        self._barrier(index)
+        ticket = MutationTicket(self, index, "delete", int(del_ids.size))
+        self._pending_deletes.setdefault(index, []).append(
+            (del_ids, ticket)
+        )
+        self._mutation_t0.setdefault(index, ticket.t_enqueue)
+        self.stats.mutations += 1
+        self._maybe_apply(index)
+        return ticket
+
+    def _require_index(self, index: str) -> AshIndex:
+        if index not in self._indexes:
+            raise KeyError(
+                f"unknown index {index!r}; registered: {self.index_names}"
+            )
+        return self._indexes[index]
+
+    def _barrier(self, name: str) -> None:
+        """Flush every queued query group of ``name`` (reason
+        "barrier") so queries submitted before a mutation never see
+        post-mutation state.  Errors stay on the affected query
+        tickets, exactly like submit-triggered flushes."""
+        for group in [g for g in self._pending if g[0] == name]:
+            self._try_flush(self._flush_group, group, "barrier")
+
+    def _mutation_backlog(self, name: str) -> int:
+        return self._indexes[name].pending_rows + sum(
+            int(d.size) for d, _ in self._pending_deletes.get(name, ())
+        )
+
+    def _maybe_apply(self, name: str) -> None:
+        if self._mutation_backlog(name) >= self.config.max_pending_mutations:
+            self._try_flush(self._apply_mutations, name)
+
+    def _apply_mutations(self, name: str) -> int:
+        """Apply the index's queued mutation batch: ONE backend add for
+        every staged row, then the queued deletes (order-equivalent to
+        FIFO — delete targets are ids, which adds never disturb), then
+        an optional auto-compaction.  Returns rows added + removed."""
+        idx = self._indexes.get(name)
+        if idx is None:
+            return 0
+        adds = self._add_tickets.pop(name, [])
+        dels = self._pending_deletes.pop(name, [])
+        self._mutation_t0.pop(name, None)
+        if not adds and not dels and idx.pending_rows == 0:
+            return 0
+        t0 = time.perf_counter()
+        try:
+            applied = idx.apply_pending()
+            removed = 0
+            for del_ids, ticket in dels:
+                ticket._result = idx.delete(del_ids)
+                removed += ticket._result
+        except Exception as e:
+            for ticket in adds + [t for _, t in dels]:
+                if not ticket.done:
+                    ticket._error = e
+            raise
+        for ticket in adds:
+            ticket._result = ticket.ids
+        if (
+            dels
+            and self.config.auto_compact is not None
+            and idx.dead_fraction > self.config.auto_compact
+        ):
+            n_before = idx.n
+            idx.compact(self.config.auto_compact)
+            if idx.n != n_before:
+                self.stats.compactions += 1
+        dt = time.perf_counter() - t0
+        for ticket in adds + [t for _, t in dels]:
+            ticket.apply_s = dt
+        self.stats.mutation_batches += 1
+        self.stats.added_rows += applied
+        self.stats.deleted_rows += removed
+        return applied + removed
+
     # -- flushing -----------------------------------------------------
 
     def poll(self) -> int:
-        """Flush groups whose oldest request exceeded ``max_wait_s``.
-        Call this from the serving loop's idle path.  Returns the number
-        of requests completed."""
+        """Flush groups whose oldest request exceeded ``max_wait_s``
+        and apply mutation batches older than it.  Call this from the
+        serving loop's idle path.  Returns the number of requests
+        completed (mutations resolve their own tickets)."""
         now = time.perf_counter()
         done = 0
         for group in list(self._pending):
             reqs = self._pending.get(group)
             if reqs and now - reqs[0].t_enqueue >= self.config.max_wait_s:
                 done += self._flush_group(group, "timeout")
+        for name, t0 in list(self._mutation_t0.items()):
+            if now - t0 >= self.config.max_wait_s:
+                self._apply_mutations(name)
         return done
 
     def flush(self) -> int:
-        """Serve everything queued, now.  Returns requests completed;
-        an empty flush is a no-op returning 0."""
-        return self._flush_all("manual")
+        """Serve everything queued, now — query groups AND mutation
+        batches.  Returns requests completed; an empty flush is a
+        no-op returning 0."""
+        done = self._flush_all("manual")
+        for name in list(self._mutation_t0):
+            self._apply_mutations(name)
+        return done
 
     def _flush_all(self, reason: str) -> int:
         done = 0
@@ -407,6 +631,15 @@ class QueryEngine:
         )
 
     def _flush_group(self, group: tuple, reason: str) -> int:
+        if group in self._pending:
+            # every queued query of this index was submitted AFTER the
+            # mutations still pending for it (each mutation submission
+            # barrier-flushed the older queries before staging), so
+            # applying the backlog here makes the batch observe exactly
+            # the mutations submitted before it — including during a
+            # barrier flush, where the NEWEST mutation is not queued
+            # yet and therefore (correctly) not applied.
+            self._apply_mutations(group[0])
         reqs = self._pending.pop(group, None)
         if not reqs:
             return 0

@@ -29,3 +29,24 @@ settings.load_profile("ci")
 @pytest.fixture(scope="session")
 def rng_key():
     return jax.random.PRNGKey(0)
+
+
+# Core-library suites carry the `tier1` marker so CI can fail fast on
+# them (`pytest -m tier1`) before the heavier model/training stacks
+# (`-m "not tier1"`).  The two halves partition the full suite — the
+# canonical tier-1 verify (`pytest -x -q`) still runs everything.
+TIER1_EXCLUDED = {
+    "test_arch_smoke",
+    "test_launch_roofline",
+    "test_models",
+    "test_nequip",
+    "test_train",
+}
+
+
+def pytest_collection_modifyitems(config, items):
+    for item in items:
+        module = getattr(item, "module", None)
+        name = getattr(module, "__name__", "")
+        if name not in TIER1_EXCLUDED:
+            item.add_marker(pytest.mark.tier1)

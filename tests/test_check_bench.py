@@ -63,6 +63,28 @@ def test_diff_qps_regression_and_vanished_rows(tmp_path):
     assert any("vanished" in w for w in warns)
 
 
+def test_diff_mutation_rate_regressions(tmp_path):
+    """adds_per_s / deletes_per_s (the serving_mutation rows) are
+    higher-is-better throughputs: a drop fails like a qps drop, and
+    non-rate derived values (p99_ms etc.) are never rate-compared."""
+    base = tmp_path / "base"
+    base.mkdir()
+    _write(base / "BENCH_serving.json",
+           _doc([_row("serving/mutation_flat_10pct", 0.0,
+                      {"adds_per_s": 500.0, "deletes_per_s": 400.0,
+                       "p99_ms": 1.0})], group="serving"))
+    cur = _write(
+        tmp_path / "BENCH_serving.json",
+        _doc([_row("serving/mutation_flat_10pct", 0.0,
+                   {"adds_per_s": 100.0, "deletes_per_s": 390.0,
+                    "p99_ms": 500.0})], group="serving"),
+    )
+    fails, warns = check_bench.diff(cur, str(base), 1.5, 3.0)
+    assert any("adds_per_s regressed 5.00x" in f for f in fails)
+    assert not any("deletes_per_s" in m for m in fails + warns)
+    assert not any("p99_ms" in m for m in fails + warns)
+
+
 def test_diff_skips_quick_vs_full(tmp_path):
     base = tmp_path / "base"
     base.mkdir()

@@ -1,0 +1,417 @@
+"""Live mutation pipeline: tombstone delete, batched engine-queued
+mutations, compaction, and persistence.
+
+Core property (the ScanPlan/packed-strip invariant PR 4 established,
+now pinned under mutations): for ANY interleaving of add/delete/search
+on ANY backend x metric — rerank and IVF partial probes included —
+results are bit-identical to a fresh build over the surviving rows
+under the same model (values, tie order; ids equal after mapping the
+rebuild's rows through the survivor list, which is monotonic so tie
+order transfers exactly), and deleted ids never surface, even when k
+exceeds the live-row count.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from _hypothesis_compat import given, st
+from repro.core import ASHConfig
+from repro.data.synthetic import embedding_dataset
+from repro.index import AshIndex
+from repro.serving.engine import QueryEngine
+
+BACKENDS = ("flat", "ivf", "sharded")
+METRICS = ("dot", "l2", "cos")
+CHUNK = 16  # add/delete batch size: keeps payload shapes a closed set
+N0 = 400  # initial build size
+POOL = 1200  # vector pool the script draws adds from
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(99)
+    kx, kq, kb = jax.random.split(key, 3)
+    X = embedding_dataset(kx, POOL, 24)
+    Qm = embedding_dataset(kq, 6, 24)
+    cfg = ASHConfig(b=2, d=12, n_landmarks=8)
+    model = AshIndex.build(kb, X[:N0], cfg, backend="flat").model
+    return np.asarray(X), Qm, cfg, model, kb
+
+
+def _build(setup, backend, metric, X_rows, **opts):
+    X, Qm, cfg, model, kb = setup
+    return AshIndex.build(
+        kb, jnp.asarray(X_rows), cfg, backend=backend, metric=metric,
+        model=model, keep_raw=True, **opts,
+    )
+
+
+class _Oracle:
+    """Host-side mirror of the mutation history: which pool row each
+    user id encodes, and which ids are alive."""
+
+    def __init__(self, n0):
+        self.src = list(range(n0))  # user id -> pool row
+        self.alive = set(range(n0))
+
+    def add(self, pool_rows):
+        start = len(self.src)
+        self.src.extend(pool_rows)
+        self.alive.update(range(start, start + len(pool_rows)))
+        return list(range(start, start + len(pool_rows)))
+
+    def delete(self, ids):
+        self.alive -= set(int(i) for i in ids)
+
+    @property
+    def survivors(self):
+        """Surviving user ids in insertion (ascending-id) order — the
+        row order of a fresh build over the surviving vectors."""
+        return sorted(self.alive)
+
+
+def _assert_matches_fresh_build(setup, idx, oracle, backend, metric,
+                                search_kw):
+    """Mutated-index search == fresh build over survivors (same model):
+    scores bitwise, ids after the monotonic survivor mapping."""
+    X, Qm, cfg, model, kb = setup
+    surv = np.asarray(oracle.survivors, dtype=np.int64)
+    fresh = _build(setup, backend, metric, X[[oracle.src[i] for i in surv]])
+    s_m, i_m = idx.search(Qm, k=10, **search_kw)
+    s_f, i_f = fresh.search(Qm, k=10, **search_kw)
+    i_f = np.asarray(i_f)
+    mapped = np.where(i_f < 0, -1, surv[np.maximum(i_f, 0)])
+    np.testing.assert_array_equal(np.asarray(s_m), np.asarray(s_f))
+    np.testing.assert_array_equal(np.asarray(i_m), mapped)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@given(
+    metric=st.sampled_from(METRICS),
+    rerank=st.sampled_from((0, 30)),
+    nprobe=st.sampled_from((2, 8)),
+    do_compact=st.sampled_from((False, True)),
+    seed=st.integers(min_value=0, max_value=10**6),
+)
+def test_mutation_interleaving_equals_fresh_build(
+    setup, backend, metric, rerank, nprobe, do_compact, seed
+):
+    """The core equivalence, over random add/delete/search scripts.
+
+    nprobe only routes on IVF (2 = the gathered pre-DMA-drop path,
+    8 = nlist = the dense full scan); rerank exercises the exact-rerank
+    shortlist under tombstones on every backend.
+    """
+    X, Qm, cfg, model, kb = setup
+    rng = np.random.RandomState(seed)
+    idx = _build(setup, backend, metric, X[:N0])
+    oracle = _Oracle(N0)
+    search_kw = {"rerank": rerank}
+    if backend == "ivf":
+        search_kw["nprobe"] = nprobe
+
+    for _ in range(rng.randint(2, 5)):
+        op = rng.rand()
+        if op < 0.4:
+            pool_rows = rng.randint(0, POOL, CHUNK)
+            got = np.asarray(idx.stage_add(X[pool_rows]))
+            idx.apply_pending()
+            expect = oracle.add(list(pool_rows))
+            np.testing.assert_array_equal(got, expect)
+        elif op < 0.8 and len(oracle.alive) > CHUNK + 8:
+            victims = rng.choice(
+                sorted(oracle.alive), size=CHUNK, replace=False
+            )
+            # over-asking is fine: unknown/dead ids are ignored
+            removed = idx.delete(np.concatenate([victims, victims[:3]]))
+            assert removed == CHUNK
+            oracle.delete(victims)
+        else:
+            s, ids = idx.search(Qm, k=10, **search_kw)
+            ids = np.asarray(ids)
+            dead = np.setdiff1d(
+                np.arange(len(oracle.src)), sorted(oracle.alive)
+            )
+            assert not np.isin(ids, dead).any()
+
+    assert idx.n_live == len(oracle.alive)
+    if do_compact:
+        idx.compact()
+        assert idx.n == idx.n_live == len(oracle.alive)
+    _assert_matches_fresh_build(
+        setup, idx, oracle, backend, metric, search_kw
+    )
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_deleted_ids_never_appear_when_k_exceeds_live(setup, backend):
+    """k past the live-row count pads with -inf / -1 — tombstones can
+    never leak back in to fill the tail."""
+    X, Qm, cfg, model, kb = setup
+    idx = _build(setup, backend, "dot", X[:CHUNK])
+    dead = list(range(1, CHUNK, 2))
+    assert idx.delete(dead) == len(dead)
+    kw = {"nprobe": 8} if backend == "ivf" else {}
+    s, ids = idx.search(Qm, k=CHUNK, **kw)
+    s, ids = np.asarray(s), np.asarray(ids)
+    live = CHUNK - len(dead)
+    assert not np.isin(ids, dead).any()
+    for r in range(ids.shape[0]):
+        valid = ids[r][ids[r] >= 0]
+        assert len(valid) == live and len(set(valid)) == live
+    assert np.isneginf(s[:, live:]).all()
+    assert (ids[:, live:] == -1).all()
+
+
+@pytest.mark.parametrize(
+    "backend,n_shards",
+    [("flat", None), ("ivf", None),
+     ("sharded", 1), ("sharded", 2), ("sharded", 4)],
+)
+def test_save_load_with_tombstones_and_pending(
+    setup, backend, n_shards, tmp_path
+):
+    """Round-trip with live tombstones AND a staged-add buffer:
+    search stays bit-identical, the buffer survives, and
+    compact()-then-search equals a fresh build over the survivors."""
+    X, Qm, cfg, model, kb = setup
+    opts = {}
+    if n_shards is not None:
+        opts = dict(
+            mesh=Mesh(np.array(jax.devices()[:n_shards]), ("data",)),
+            axes=("data",),
+        )
+    idx = _build(setup, backend, "l2", X[:N0], **opts)
+    oracle = _Oracle(N0)
+    victims = np.arange(7, N0, 9)
+    idx.delete(victims)
+    oracle.delete(victims)
+    staged = idx.stage_add(X[N0:N0 + CHUNK])
+    assert list(staged) == list(range(N0, N0 + CHUNK))
+
+    idx.save(tmp_path / "idx")
+    idx2 = AshIndex.load(tmp_path / "idx", **opts)
+    assert idx2.n_dead == len(victims)
+    assert idx2.pending_rows == CHUNK
+    s1, i1 = idx.search(Qm, k=10, rerank=40)
+    s2, i2 = idx2.search(Qm, k=10, rerank=40)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+    # the loaded copy applies its persisted buffer and compacts to the
+    # same state the original reaches
+    for ix in (idx, idx2):
+        assert ix.apply_pending() == CHUNK
+        ix.compact()
+    oracle.add(list(range(N0, N0 + CHUNK)))
+    sa, ia = idx.search(Qm, k=10, rerank=40)
+    sb, ib = idx2.search(Qm, k=10, rerank=40)
+    np.testing.assert_array_equal(np.asarray(sa), np.asarray(sb))
+    np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib))
+    _assert_matches_fresh_build(
+        setup, idx2, oracle, backend, "l2", {"rerank": 40}
+    )
+
+
+def test_sharded_add_recomputes_stats_and_raw(setup, tmp_path):
+    """Regression: sharded add() must extend stats AND bf16 raw shards
+    for the appended rows the way build does — including on an index
+    loaded from a pre-stats save (stats rebuilt, raw preserved) — or
+    shard-local rerank would silently serve a truncated raw shard."""
+    X, Qm, cfg, model, kb = setup
+    mesh = Mesh(np.array(jax.devices()[:2]), ("data",))
+    opts = dict(mesh=mesh, axes=("data",))
+    idx = _build(setup, "sharded", "l2", X[:N0], **opts)
+    idx.save(tmp_path / "full")
+
+    # simulate a pre-stats snapshot: strip the stats arrays
+    with np.load(tmp_path / "full" / "arrays.npz") as npz:
+        kept = {k: npz[k] for k in npz.files if not k.startswith("stats.")}
+    np.savez(tmp_path / "full" / "arrays.npz", **kept)
+    meta = json.loads((tmp_path / "full" / "config.json").read_text())
+    assert any(k.startswith("stats.") for k in meta["dtypes"])  # was saved
+
+    for source in ("live", "loaded"):
+        ix = idx if source == "live" else AshIndex.load(
+            tmp_path / "full", **opts
+        )
+        ix.add(jnp.asarray(X[N0:N0 + CHUNK]))
+        st_ = ix._state
+        assert st_.stats is not None
+        assert st_.stats.res_norm.shape[0] == N0 + CHUNK
+        assert st_.raw is not None and st_.raw.shape[0] == N0 + CHUNK
+        assert st_.sharded_raw is not None
+
+    # rerank search over the grown index == fresh build (same model)
+    oracle = _Oracle(N0)
+    oracle.add(list(range(N0, N0 + CHUNK)))
+    _assert_matches_fresh_build(
+        setup, idx, oracle, "sharded", "l2", {"rerank": 40}
+    )
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_retired_ids_are_never_reused(setup, backend):
+    """Deleting the top ids and compacting must not hand the retired
+    ids back out on the next add."""
+    X, Qm, cfg, model, kb = setup
+    idx = _build(setup, backend, "dot", X[:CHUNK * 2])
+    top = list(range(CHUNK, CHUNK * 2))
+    idx.delete(top)
+    idx.compact()
+    assert idx.next_id == CHUNK * 2
+    ids = idx.stage_add(X[:4])
+    assert list(ids) == [CHUNK * 2, CHUNK * 2 + 1,
+                         CHUNK * 2 + 2, CHUNK * 2 + 3]
+    idx.apply_pending()
+    s, got = idx.search(Qm, k=5)
+    assert not np.isin(np.asarray(got), top).any()
+
+
+def test_compact_refuses_to_empty_the_index(setup):
+    X, Qm, cfg, model, kb = setup
+    idx = _build(setup, "flat", "dot", X[:CHUNK])
+    idx.delete(np.arange(CHUNK))
+    assert idx.n_live == 0
+    with pytest.raises(ValueError, match="every row"):
+        idx.compact()
+    # still searchable: all slots are missing-candidate sentinels
+    s, ids = idx.search(Qm, k=CHUNK)
+    assert (np.asarray(ids) == -1).all()
+    assert np.isneginf(np.asarray(s)).all()
+
+
+def test_delete_semantics(setup):
+    """Unknown and repeated ids are ignored; counts reflect only rows
+    newly tombstoned; dead_fraction tracks the bitmap."""
+    X, Qm, cfg, model, kb = setup
+    idx = _build(setup, "flat", "dot", X[:100])
+    assert idx.delete([5, 5, 6, 100, 10**9, -3]) == 2
+    assert idx.delete([5, 6]) == 0
+    assert idx.n_dead == 2 and idx.n_live == 98
+    assert idx.dead_fraction == pytest.approx(0.02)
+    assert "dead=2" in repr(idx)
+
+
+# ---------------------------------------------------------------------------
+# Engine-queued mutations
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_engine_mutations_match_direct(setup, backend):
+    """submit/submit_add/submit_delete interleaved through the engine
+    == the same ops applied directly: pre-mutation queries are
+    barrier-flushed against the old state, post-mutation queries see
+    exactly the mutations submitted before them, results bit-identical
+    to direct search on the equivalently-mutated index."""
+    X, Qm, cfg, model, kb = setup
+    idx = _build(setup, backend, "dot", X[:N0])
+    direct = _build(setup, backend, "dot", X[:N0])
+    eng = QueryEngine(idx, batch_buckets=(8,), k_buckets=(10,),
+                      max_wait_s=60.0)
+
+    t_pre = eng.submit(np.asarray(Qm[:2]), k=10)
+    s_pre_d, i_pre_d = direct.search(Qm[:2], k=10)
+
+    ta = eng.submit_add(X[N0:N0 + CHUNK])
+    assert t_pre.done and t_pre.stats.flush_reason == "barrier"
+    np.testing.assert_array_equal(
+        t_pre.result()[1], np.asarray(i_pre_d)
+    )
+    assert list(ta.ids) == list(range(N0, N0 + CHUNK))
+
+    td = eng.submit_delete(np.arange(0, 40))
+    t_post = eng.submit(np.asarray(Qm[:2]), k=10)
+    assert eng.stats.mutation_batches == 0  # nothing applied yet
+    eng.flush()
+    assert eng.stats.mutation_batches == 1  # ONE batched apply
+    np.testing.assert_array_equal(ta.result(), ta.ids)
+    assert td.result() == 40
+
+    direct.add(jnp.asarray(X[N0:N0 + CHUNK]))
+    direct.delete(np.arange(0, 40))
+    s_d, i_d = direct.search(Qm[:2], k=10)
+    s_e, i_e = t_post.result()
+    np.testing.assert_array_equal(s_e, np.asarray(s_d))
+    np.testing.assert_array_equal(i_e, np.asarray(i_d))
+
+    snap = eng.stats.snapshot()
+    assert snap["added_rows"] == CHUNK
+    assert snap["deleted_rows"] == 40
+    assert snap["flushes"]["barrier"] >= 1
+
+
+def test_engine_mutation_ticket_forces_apply(setup):
+    X, Qm, cfg, model, kb = setup
+    idx = _build(setup, "flat", "dot", X[:100])
+    eng = QueryEngine(idx, max_wait_s=60.0)
+    td = eng.submit_delete([1, 2, 3])
+    assert not td.done
+    assert td.result() == 3  # result() applies the queued batch
+    assert idx.n_dead == 3
+    assert td.apply_s >= 0.0
+
+
+def test_engine_mutation_backlog_overflow_applies(setup):
+    X, Qm, cfg, model, kb = setup
+    idx = _build(setup, "flat", "dot", X[:100])
+    eng = QueryEngine(idx, max_wait_s=60.0, max_pending_mutations=32)
+    t1 = eng.submit_add(X[:16])
+    assert not t1.done and idx.pending_rows == 16
+    t2 = eng.submit_add(X[16:32])  # hits the 32-row backlog bound
+    assert t1.done and t2.done
+    assert idx.n == 132 and idx.pending_rows == 0
+
+
+def test_engine_auto_compact(setup):
+    X, Qm, cfg, model, kb = setup
+    idx = _build(setup, "flat", "dot", X[:200])
+    eng = QueryEngine(idx, max_wait_s=60.0, auto_compact=0.25)
+    eng.submit_delete(np.arange(10))  # 5% dead: below threshold
+    eng.flush()
+    assert idx.n == 200 and idx.n_dead == 10
+    eng.submit_delete(np.arange(10, 80))  # 40% dead: evicted
+    eng.flush()
+    assert idx.n == 120 and idx.n_dead == 0
+    assert eng.stats.compactions == 1
+
+
+def test_engine_poll_applies_aged_mutations(setup):
+    X, Qm, cfg, model, kb = setup
+    idx = _build(setup, "flat", "dot", X[:100])
+    eng = QueryEngine(idx, max_wait_s=0.0)
+    td = eng.submit_delete([1])
+    eng.poll()
+    assert td.done and idx.n_dead == 1
+
+
+def test_engine_register_settles_queued_mutations(setup):
+    """Re-registering a name applies queued mutations against the OLD
+    binding first — the rows are staged on that index, so erroring the
+    tickets would strand rows the old index still ingests later."""
+    X, Qm, cfg, model, kb = setup
+    old = _build(setup, "flat", "dot", X[:100])
+    new = _build(setup, "flat", "dot", X[:100])
+    eng = QueryEngine(old, max_wait_s=60.0)
+    ta = eng.submit_add(X[100:104])
+    td = eng.submit_delete([0, 1])
+    eng.register("default", new)
+    assert list(ta.result()) == [100, 101, 102, 103]
+    assert td.result() == 2
+    assert old.n == 104 and old.n_dead == 2  # applied to the old index
+    assert new.n == 100 and new.pending_rows == 0
+
+
+def test_engine_rejects_bad_add(setup):
+    X, Qm, cfg, model, kb = setup
+    idx = _build(setup, "flat", "dot", X[:100])
+    eng = QueryEngine(idx, max_wait_s=60.0)
+    with pytest.raises(ValueError, match="add rows"):
+        eng.submit_add(np.zeros((2, 7), np.float32))
+    with pytest.raises(KeyError):
+        eng.submit_add(X[:2], index="nope")

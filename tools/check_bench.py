@@ -11,9 +11,11 @@ perf trajectory.
 Trajectory diffing (``--baseline DIR``) compares each file against the
 same-named snapshot in DIR row by row:
 
-  * ``us_per_call`` (lower is better) and ``derived.qps`` (higher is
-    better) regressions beyond ``--warn-ratio`` print WARN lines;
-    beyond ``--fail-ratio`` they fail the gate.
+  * ``us_per_call`` (lower is better) and the higher-is-better derived
+    throughputs (``qps`` plus any ``*_per_s`` rate, e.g. the mutation
+    rows' ``adds_per_s``/``deletes_per_s``) regressions beyond
+    ``--warn-ratio`` print WARN lines; beyond ``--fail-ratio`` they
+    fail the gate.
   * rows present in the baseline but missing from the current file
     warn (the trajectory would silently truncate otherwise).
   * files whose ``quick`` mode differs from the baseline's are skipped
@@ -91,18 +93,30 @@ def _healthy_rows(doc: dict, path: str) -> dict[str, dict]:
     return out
 
 
+def _throughput_keys(derived: dict) -> list[str]:
+    """Higher-is-better derived metrics: qps and any *_per_s rate
+    (adds_per_s / deletes_per_s on the mutation rows)."""
+    return [
+        k for k in derived
+        if k == "qps" or k.endswith("_per_s")
+    ]
+
+
 def _row_regressions(name: str, base: dict, cur: dict) -> list[tuple]:
     """[(metric, ratio)] regression factors for one row (ratio > 1 ==
-    slower); us_per_call is lower-better, derived qps higher-better."""
+    slower); us_per_call is lower-better, derived throughputs
+    (qps, *_per_s) higher-better."""
     out = []
     b_us, c_us = base.get("us_per_call", 0), cur.get("us_per_call", 0)
     if b_us and c_us:  # rows timing nothing (us == 0) carry no signal
         out.append(("us_per_call", c_us / b_us))
-    b_qps = base.get("derived", {}).get("qps")
-    c_qps = cur.get("derived", {}).get("qps")
-    if isinstance(b_qps, (int, float)) and isinstance(c_qps, (int, float)) \
-            and b_qps > 0 and c_qps > 0:
-        out.append(("qps", b_qps / c_qps))
+    b_der = base.get("derived", {})
+    c_der = cur.get("derived", {})
+    for key in _throughput_keys(b_der):
+        b_v, c_v = b_der.get(key), c_der.get(key)
+        if isinstance(b_v, (int, float)) and isinstance(c_v, (int, float)) \
+                and b_v > 0 and c_v > 0:
+            out.append((key, b_v / c_v))
     return out
 
 
