@@ -14,7 +14,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import D, dataset, row
+from benchmarks.common import D, QUICK, dataset, row
 from repro.core import ASHConfig
 from repro.index import AshIndex
 from repro.serving.engine import QueryEngine
@@ -183,4 +183,150 @@ def serving_mutation():
     return rows
 
 
-ALL = [serving_engine, serving_mutation]
+def _closed_loop(index, n_clients, reqs_each, Qm, *, nprobe=None,
+                 mutator=None, auto_compact=None, background=False):
+    """Closed-loop clients through a ServingFrontend: each thread
+    submits a 1-row request, blocks on its ticket, repeats.  Returns
+    (per-request latencies, wall seconds, engine).  ``mutator(fe,
+    stop)`` runs on its own thread for the duration when given;
+    ``background`` attaches a BackgroundCompactor so ``auto_compact``
+    leaves the serving path."""
+    import threading
+
+    from repro.serving.compactor import BackgroundCompactor
+    from repro.serving.frontend import ServingFrontend
+
+    engine = QueryEngine(index, batch_buckets=(8, 32),
+                         max_wait_s=0.002, auto_compact=auto_compact)
+    compactor = (
+        BackgroundCompactor(engine).start() if background else None
+    )
+    lats = [[] for _ in range(n_clients)]
+    errors = []
+    stop = threading.Event()
+    t0 = time.perf_counter()
+    with ServingFrontend(engine) as fe:
+        def client(cid):
+            rng = np.random.RandomState(1000 + cid)
+            try:
+                for _ in range(reqs_each):
+                    q = Qm[rng.randint(0, Qm.shape[0])][None, :]
+                    t1 = time.perf_counter()
+                    fe.search(q, k=10, nprobe=nprobe, timeout=120.0)
+                    lats[cid].append(time.perf_counter() - t1)
+            except Exception as e:
+                errors.append(e)
+
+        threads = [
+            threading.Thread(target=client, args=(c,), daemon=True)
+            for c in range(n_clients)
+        ]
+        mut_thread = None
+        if mutator is not None:
+            mut_thread = threading.Thread(
+                target=mutator, args=(fe, stop), daemon=True
+            )
+            mut_thread.start()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        stop.set()
+        if mut_thread is not None:
+            mut_thread.join(timeout=120.0)
+    dt = time.perf_counter() - t0
+    if compactor is not None:
+        compactor.wait_idle(60.0)
+        compactor.stop()
+    if errors:
+        raise errors[0]
+    return np.concatenate([np.asarray(x) for x in lats]), dt, engine
+
+
+def serving_concurrent():
+    """The concurrent-serving row: closed-loop multi-client QPS/p99
+    through the ServingFrontend driver vs the same loop single-caller
+    (concurrent clients share buckets a single caller underfills), and
+    search p99 while compaction runs in the background vs synchronous
+    auto-compaction stalling the serving path.  check_bench enforces
+    qps >= qps_single and p99_bg_compact_ms < p99_sync_compact_ms."""
+    X, Qm, gt = dataset()
+    X_np = np.asarray(X)
+    Qm = np.asarray(Qm)
+    cfg = ASHConfig(b=2, d=D // 2, n_landmarks=16)
+    key = jax.random.PRNGKey(0)
+    index = AshIndex.build(key, X, cfg, backend="flat")
+    reqs_each = 16 if QUICK else 40
+
+    # warm every bucket the closed loops can hit (driver-batched 1-row
+    # requests land in bucket 8; backlog spills into 32)
+    warm = QueryEngine(index, batch_buckets=(8, 32), max_wait_s=0.002)
+    for b in (8, 32):
+        warm.search(Qm[:b] if Qm.shape[0] >= b else Qm, k=10)
+
+    lat1, dt1, _ = _closed_loop(index, 1, 8 * reqs_each, Qm)
+    qps_single = lat1.size / dt1
+    lat8, dt8, engine = _closed_loop(index, 8, reqs_each, Qm)
+    qps = lat8.size / dt8
+    p50, p99 = np.percentile(lat8, [50, 99])
+    st = engine.stats.snapshot()
+
+    # compaction-active p99: cycles of (add B rows, delete them) push
+    # the dead fraction over auto_compact every cycle; the index
+    # returns to warmed shapes each cycle so the runs compare the
+    # compaction path itself, not stray recompiles.  Synchronous
+    # auto-compaction rebuilds survivors inline under the index
+    # barrier (searches queue behind it); the background compactor
+    # rebuilds off-thread and only swaps under the barrier.
+    B = 128
+    cycles = 4 if QUICK else 8
+
+    def mutator(fe, stop):
+        for _ in range(cycles):
+            if stop.is_set():
+                return
+            ids = fe.submit_add(
+                X_np[np.random.RandomState(5).randint(0, X_np.shape[0],
+                                                      B)]
+            ).result(120.0)
+            fe.submit_delete(ids).result(120.0)
+            # let compaction land before the next cycle so both runs
+            # walk the same (warmed) payload-shape sequence
+            t_wait = time.perf_counter()
+            while (fe.engine.index().n_dead
+                   and time.perf_counter() - t_wait < 30.0):
+                time.sleep(0.001)
+
+    def compaction_run(background):
+        idx = AshIndex.build(key, X, cfg, backend="flat",
+                             model=index.model)
+        warm2 = QueryEngine(idx, batch_buckets=(8, 32),
+                            max_wait_s=0.002)
+        warm2.search(Qm[:8], k=10)
+        warm_ids = warm2.submit_add(X_np[:B]).result()  # warm n0+B
+        warm2.search(Qm[:8], k=10)  # trace at the grown payload shape
+        warm2.submit_delete(warm_ids).result()
+        idx.compact()  # back to n0; compact internals warmed
+        warm2.search(Qm[:8], k=10)
+        lats, _, eng = _closed_loop(
+            idx, 4, reqs_each, Qm, mutator=mutator,
+            auto_compact=0.001, background=background,
+        )
+        return float(np.percentile(lats, 99)), eng
+
+    p99_sync, _ = compaction_run(background=False)
+    p99_bg, eng_bg = compaction_run(background=True)
+    comp = eng_bg.stats.snapshot()["compaction"]
+
+    return [row(
+        "serving/concurrent_flat_c8", 1e6 * dt8 / lat8.size,
+        f"qps={qps:.0f};qps_single={qps_single:.0f};"
+        f"p50_ms={1e3 * p50:.2f};p99_ms={1e3 * p99:.2f};"
+        f"p99_sync_compact_ms={1e3 * p99_sync:.2f};"
+        f"p99_bg_compact_ms={1e3 * p99_bg:.2f};"
+        f"bg_runs={comp['runs']};bg_retries={comp['retries']};"
+        f"fill={st['bucket_fill']}",
+    )]
+
+
+ALL = [serving_engine, serving_mutation, serving_concurrent]

@@ -709,6 +709,11 @@ class AshIndex:
         self._metric = C.validate_metric(metric)
         self._state = state
         self._pending_add: list[np.ndarray] = []
+        # bumped on every state rewrite (add / delete that removed
+        # rows / apply_pending that ingested rows / compact); the
+        # background compactor compares epochs to detect mutations
+        # landing between its snapshot and its atomic swap
+        self._mutation_epoch = 0
 
     # -- construction -------------------------------------------------
 
@@ -799,6 +804,7 @@ class AshIndex:
         assignment stays in submission order.  Returns self."""
         self.apply_pending()
         self._state = self._backend.add(self._state, X_new)
+        self._mutation_epoch += 1
         return self
 
     # -- mutations ----------------------------------------------------
@@ -838,6 +844,7 @@ class AshIndex:
         rows = np.concatenate(self._pending_add, axis=0)
         self._pending_add = []
         self._state = self._backend.add(self._state, jnp.asarray(rows))
+        self._mutation_epoch += 1
         return rows.shape[0]
 
     def delete(self, ids) -> int:
@@ -850,6 +857,8 @@ class AshIndex:
         just-staged id works."""
         self.apply_pending()
         self._state, removed = self._backend.delete(self._state, ids)
+        if removed:
+            self._mutation_epoch += 1
         return removed
 
     def compact(self, max_dead_fraction: float = 0.0) -> "AshIndex":
@@ -862,6 +871,7 @@ class AshIndex:
         self.apply_pending()
         if self.dead_fraction > max_dead_fraction:
             self._state = self._backend.compact(self._state)
+            self._mutation_epoch += 1
         return self
 
     # -- persistence --------------------------------------------------
@@ -988,6 +998,14 @@ class AshIndex:
     def pending_rows(self) -> int:
         """Rows staged by :meth:`stage_add`, not yet ingested."""
         return sum(p.shape[0] for p in self._pending_add)
+
+    @property
+    def mutation_epoch(self) -> int:
+        """Monotonic counter of state rewrites (adds applied, deletes
+        that removed rows, compactions).  Equal epochs guarantee the
+        searchable state is unchanged — the background compactor's
+        swap-if-unchanged check."""
+        return self._mutation_epoch
 
     @property
     def next_id(self) -> int:

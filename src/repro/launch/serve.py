@@ -12,6 +12,16 @@ reports build time, QPS, p50/p99 request latency, engine stats, and
 through the inverted-file index with coarse routing (the paper's Fig. 9
 setup); ``--engine flat`` scans everything; ``--engine sharded``
 scatter-gathers over the device mesh.
+
+``--concurrent N`` switches to the concurrent serving subsystem: a
+``ServingFrontend`` driver thread owns the flush cadence while N
+closed-loop client threads (each: submit, block on the ticket, repeat)
+share the batching — with a ``BackgroundCompactor`` attached when
+``--auto-compact`` is set, so tombstone eviction happens off the
+serving path.  ``--http PORT`` instead serves a minimal JSON API
+(stdlib ``http.server`` atop the asyncio facade): POST ``/search`` with
+``{"queries": [[...]], "k": 10}``, GET ``/stats`` for the live engine
+snapshot.
 """
 from __future__ import annotations
 
@@ -26,7 +36,178 @@ from repro.core import ASHConfig
 from repro.data.synthetic import embedding_dataset, isotropy_diagnostics
 from repro.index import AshIndex
 from repro.index import metrics as MET
+from repro.serving.compactor import BackgroundCompactor
 from repro.serving.engine import QueryEngine
+from repro.serving.frontend import ServingFrontend
+
+
+def _print_engine_report(engine, mut_tickets=()):
+    """The shared observability block: engine snapshot, prep cache,
+    flush-reason mix, queue/compaction telemetry."""
+    snap = engine.stats.snapshot()
+    print(f"[engine] {snap}")
+    print(f"[prep-cache] hit_rate={snap['prep_hit_rate']:.3f} "
+          f"({snap['prep_hits']}/{snap['prep_hits'] + snap['prep_misses']} "
+          f"rows) resident={engine.prep_cache_bytes / 1024:.1f}KiB "
+          f"budget={engine.config.prep_cache_bytes / 2**20:.0f}MiB")
+    reasons = ", ".join(
+        f"{r}={c}" for r, c in snap["flushes"].items() if c
+    )
+    print(f"[queue] hwm={snap['queue_hwm']} rows "
+          f"depth={snap['queue_depth']} "
+          f"oldest_ticket={1e3 * snap['oldest_ticket_age_s']:.2f}ms "
+          f"deadline_missed={snap['deadline_missed']} "
+          f"flushes: {reasons or 'none'}")
+    comp = snap["compaction"]
+    if comp["runs"] or comp["retries"] or snap["compactions"]:
+        print(f"[compaction] background runs={comp['runs']} "
+              f"retries={comp['retries']} swap={comp['swap_ms']:.2f}ms "
+              f"blocked={comp['blocked_ms']:.2f}ms "
+              f"synchronous={snap['compactions']}")
+    return snap
+
+
+def _run_concurrent(args, index, engine, Q, search_kw):
+    """Closed-loop multi-client serving: N threads each submit one
+    request, block on its ticket, and immediately submit the next —
+    the frontend driver owns every flush, so concurrent clients share
+    buckets that a single caller would underfill."""
+    import threading
+
+    compactor = None
+    if args.auto_compact is not None:
+        compactor = BackgroundCompactor(engine).start()
+    n_clients = args.concurrent
+    per_client = max(1, args.queries // (n_clients * args.req_batch))
+    latencies = [[] for _ in range(n_clients)]
+    errors = []
+    X_np = np.asarray(Q)  # clients re-serve the query pool
+
+    t0 = time.time()
+    with ServingFrontend(engine) as fe:
+        def client(cid):
+            rng = np.random.RandomState(args.seed + 100 + cid)
+            try:
+                for _ in range(per_client):
+                    lo = rng.randint(0, max(1, len(X_np) - args.req_batch))
+                    t_req = time.perf_counter()
+                    fe.search(X_np[lo:lo + args.req_batch], k=100,
+                              timeout=60.0, **search_kw)
+                    latencies[cid].append(time.perf_counter() - t_req)
+                    if args.mutate_fraction > 0 and (
+                        rng.rand() < args.mutate_fraction
+                    ):
+                        if rng.rand() < 0.5:
+                            fe.submit_add(
+                                X_np[lo:lo + args.req_batch]
+                            ).result(60.0)
+                        else:
+                            fe.submit_delete(
+                                rng.randint(0, index.n, args.req_batch)
+                            ).result(60.0)
+            except Exception as e:  # surface, don't hang the join
+                errors.append((cid, e))
+
+        threads = [
+            threading.Thread(target=client, args=(c,), daemon=True)
+            for c in range(n_clients)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    if compactor is not None:
+        compactor.wait_idle(30.0)
+        compactor.stop()
+    dt = time.time() - t0
+    if errors:
+        raise errors[0][1]
+    lat = np.concatenate([np.asarray(x) for x in latencies])
+    served = lat.size * args.req_batch
+    p50, p99 = np.percentile(lat, [50, 99])
+    print(f"[serve] {served} queries via {n_clients} closed-loop "
+          f"clients in {dt:.2f}s ({served / dt:.0f} QPS on this CPU)")
+    print(f"[latency] p50={1e3 * p50:.1f}ms p99={1e3 * p99:.1f}ms "
+          f"per request")
+    _print_engine_report(engine)
+    return 0
+
+
+def _run_http(args, index, engine, search_kw):
+    """Minimal JSON-over-HTTP demo: a stdlib ``ThreadingHTTPServer``
+    whose handlers dispatch into the frontend's asyncio facade — each
+    request awaits its ticket on the event loop, so handler threads
+    never park inside a flush."""
+    import asyncio
+    import json
+    import threading
+    from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+    compactor = None
+    if args.auto_compact is not None:
+        compactor = BackgroundCompactor(engine).start()
+    fe = ServingFrontend(engine).start()
+    loop = asyncio.new_event_loop()
+    loop_thread = threading.Thread(
+        target=loop.run_forever, name="ash-http-loop", daemon=True
+    )
+    loop_thread.start()
+
+    class Handler(BaseHTTPRequestHandler):
+        def log_message(self, *a):  # stay quiet; stats has the counts
+            pass
+
+        def _reply(self, code, payload):
+            body = json.dumps(payload).encode()
+            self.send_response(code)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def do_GET(self):
+            if self.path != "/stats":
+                return self._reply(404, {"error": "GET /stats only"})
+            snap = engine.stats.snapshot()
+            snap["compiled_buckets"] = snap.pop("unique_buckets", 0)
+            self._reply(200, snap)
+
+        def do_POST(self):
+            if self.path != "/search":
+                return self._reply(404, {"error": "POST /search only"})
+            try:
+                n = int(self.headers.get("Content-Length", 0))
+                req = json.loads(self.rfile.read(n))
+                q = np.asarray(req["queries"], dtype=np.float32)
+                k = int(req.get("k", 10))
+                fut = asyncio.run_coroutine_threadsafe(
+                    fe.asearch(q, k, **search_kw), loop
+                )
+                scores, ids = fut.result(timeout=60.0)
+                self._reply(200, {"scores": scores.tolist(),
+                                  "ids": ids.tolist()})
+            except Exception as e:
+                self._reply(400, {"error": str(e)})
+
+    server = ThreadingHTTPServer(("127.0.0.1", args.http), Handler)
+    print(f"[http] serving {index!r}")
+    print(f"[http] POST http://127.0.0.1:{args.http}/search "
+          f'{{"queries": [[...x{index.model.landmarks.shape[1]}]], '
+          f'"k": 10}} | GET /stats | Ctrl-C to stop')
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        server.shutdown()
+        server.server_close()
+        loop.call_soon_threadsafe(loop.stop)
+        loop_thread.join(timeout=5.0)
+        fe.stop()
+        if compactor is not None:
+            compactor.stop()
+        _print_engine_report(engine)
+    return 0
 
 
 def main(argv=None):
@@ -56,7 +237,16 @@ def main(argv=None):
                         "tombstone delete) alongside the query traffic")
     p.add_argument("--auto-compact", type=float, default=None,
                    help="dead-fraction threshold for automatic "
-                        "tombstone eviction after mutation batches")
+                        "tombstone eviction after mutation batches "
+                        "(off-thread under --concurrent/--http)")
+    p.add_argument("--concurrent", type=int, default=0, metavar="N",
+                   help="serve through a ServingFrontend driver with "
+                        "N closed-loop client threads instead of the "
+                        "single-caller stream")
+    p.add_argument("--http", type=int, default=0, metavar="PORT",
+                   help="serve a minimal JSON API on 127.0.0.1:PORT "
+                        "(POST /search, GET /stats) atop the asyncio "
+                        "facade until Ctrl-C")
     p.add_argument("--save-dir", default=None,
                    help="persist the built index (npz + JSON) here")
     p.add_argument("--seed", type=int, default=0)
@@ -96,6 +286,9 @@ def main(argv=None):
     )
     search_kw = dict(nprobe=args.nprobe, rerank=args.rerank)
 
+    if args.http:
+        return _run_http(args, index, engine, search_kw)
+
     # warmup on a throwaway engine: compile EVERY bucket shape the
     # stream can hit (steady-state size flushes AND whatever bucket the
     # final remainder pads to) without pre-warming the timed engine's
@@ -107,6 +300,10 @@ def main(argv=None):
     )
     for b in buckets:
         warm.search(Q[: min(b, args.queries)], k=100, **search_kw)
+
+    if args.concurrent:
+        return _run_concurrent(args, index, engine, Q, search_kw)
+
     X_np = np.asarray(X)
     mut_rng = np.random.RandomState(args.seed + 1)
     mut_tickets = []
@@ -138,12 +335,7 @@ def main(argv=None):
           f"({args.queries / dt:.0f} QPS on this CPU)")
     print(f"[latency] p50={1e3 * p50:.1f}ms "
           f"p99={1e3 * p99:.1f}ms per request")
-    snap = engine.stats.snapshot()
-    print(f"[engine] {snap}")
-    print(f"[prep-cache] hit_rate={snap['prep_hit_rate']:.3f} "
-          f"({snap['prep_hits']}/{snap['prep_hits'] + snap['prep_misses']} "
-          f"rows) resident={engine.prep_cache_bytes / 1024:.1f}KiB "
-          f"budget={engine.config.prep_cache_bytes / 2**20:.0f}MiB")
+    snap = _print_engine_report(engine)
     if mut_tickets:
         added = sum(t.n_rows for t in mut_tickets if t.kind == "add")
         removed = sum(t.result() for t in mut_tickets

@@ -1,10 +1,16 @@
 """Serving integrations of the ASH technique."""
-from repro.serving import engine, retrieval
+from repro.serving import compactor, engine, frontend, retrieval
+from repro.serving.compactor import BackgroundCompactor
 from repro.serving.engine import (
     EngineConfig, MutationTicket, QueryEngine, Ticket,
 )
+from repro.serving.frontend import (
+    FrontendClosed, FrontendConfig, ServingFrontend,
+)
 
 __all__ = [
-    "engine", "retrieval", "EngineConfig", "MutationTicket",
-    "QueryEngine", "Ticket",
+    "compactor", "engine", "frontend", "retrieval",
+    "BackgroundCompactor", "EngineConfig", "FrontendClosed",
+    "FrontendConfig", "MutationTicket", "QueryEngine",
+    "ServingFrontend", "Ticket",
 ]

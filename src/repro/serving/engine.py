@@ -29,11 +29,12 @@ Mechanics:
   set as a per-request call would.
 * **Queue** — bounded by ``max_pending`` rows; a group flushes when it
   can fill the largest bucket ("size"), when its oldest request exceeds
-  ``max_wait_s`` ("timeout", checked on submit/poll), under queue
-  pressure ("pressure"), or explicitly ("manual").  Flushes triggered
-  inside ``submit`` never raise — a failing fused call resolves every
-  affected ticket with the error, re-raised by that ticket's
-  ``result()``.
+  ``max_wait_s`` ("timeout", checked on submit/poll), when a request's
+  flush-by deadline arrives ("deadline"), under queue pressure
+  ("pressure"), or explicitly ("manual"; frontend shutdown flushes are
+  "drain").  Flushes triggered inside ``submit`` never raise — a
+  failing fused call resolves every affected ticket with the error,
+  re-raised by that ticket's ``result()``.
 * **Prep cache** — per-query-row LRU over the QUERY-COMPUTE projections
   (``prepare_queries``): repeated queries skip the projection matmuls
   entirely.  Keyed by (index name, query-row hash); row preps are exact,
@@ -57,18 +58,54 @@ Mechanics:
   aged ``poll()``, or when the backlog exceeds
   ``max_pending_mutations`` rows; ``auto_compact`` optionally evicts
   tombstones past a dead-fraction threshold right after a batch with
-  deletes.  Because every query flush applies the mutations queued
-  before it, any search observes exactly the mutations submitted
-  before it — and results stay bit-identical to direct
-  ``AshIndex.search`` on the equivalently-mutated index.
+  deletes (synchronously, or off-thread when a
+  ``serving.compactor.BackgroundCompactor`` is attached).  Because
+  every query flush applies the mutations queued before it, any search
+  observes exactly the mutations submitted before it — and results
+  stay bit-identical to direct ``AshIndex.search`` on the
+  equivalently-mutated index.
+
+Threading model
+---------------
+
+The engine core is thread-safe.  The lock discipline has two tiers:
+
+* ``self._lock`` — a global re-entrant lock over the cheap shared
+  state: the request queue, mutation bookkeeping, the prep LRU and the
+  stats counters.  ``submit``/``submit_add``/``submit_delete`` only
+  ever hold this lock (submission is cheap and never blocks behind a
+  fused call).
+* per-index execution locks (``mutation_barrier(name)``) — ONE fused
+  scoring call or mutation apply runs per index at a time.  A flush
+  pops its group's requests and releases the global lock before
+  scoring, so flushes of *different* indexes run concurrently; two
+  threads resolving the same group can never double-run it (the
+  second finds the group gone and blocks on the ticket event).  The
+  background compactor snapshots and swaps index state under this
+  same lock, which is what makes its swap atomic with respect to
+  searches and mutation applies.
+
+Lock order is always per-index lock -> global lock; nothing acquires a
+per-index lock while holding the global one, so the pair cannot
+deadlock.
+
+``Ticket``/``MutationTicket`` are event-backed: ``result(timeout=...)``
+blocks on a ``threading.Event`` set exactly once when the batch
+resolves.  On an engine without a driver thread, the first ``result()``
+caller flushes the group itself (single-threaded serving keeps
+working); when a ``serving.frontend.ServingFrontend`` drives the
+engine (``engine.driven``), ``result()`` only waits — the driver owns
+the flush cadence, so an eager caller cannot defeat batching by
+flushing a group early.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
+import threading
 import time
 from collections import OrderedDict
-from typing import Any, Dict, Optional, Tuple, Union
+from typing import Any, Callable, Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -107,7 +144,10 @@ class EngineConfig:
     # next query flush / poll timeout
     max_pending_mutations: int = 4096
     # evict tombstones whenever a mutation batch leaves the index's
-    # dead fraction above this (None = never compact automatically)
+    # dead fraction above this (None = never compact automatically);
+    # runs synchronously on the applying thread unless a
+    # BackgroundCompactor is attached, in which case it only signals
+    # the compaction worker
     auto_compact: Optional[float] = None
 
     def __post_init__(self):
@@ -171,14 +211,28 @@ class RequestStats:
     scoring_us: float = 0.0  # fused scoring call, whole bucket
     prep_hits: int = 0  # this request's rows found in the prep cache
     prep_misses: int = 0
-    # "size" | "timeout" | "manual" | "pressure" | "barrier" (the group
-    # was flushed because a mutation arrived for its index)
+    # "size" | "timeout" | "deadline" | "manual" | "pressure" |
+    # "barrier" (the group was flushed because a mutation arrived for
+    # its index) | "drain" (frontend shutdown served the backlog)
     flush_reason: str = ""
+    deadline_missed: bool = False  # resolved after its flush-by deadline
+
+
+_FLUSH_REASONS = (
+    "size", "timeout", "deadline", "manual", "pressure", "barrier",
+    "drain",
+)
 
 
 @dataclasses.dataclass
 class EngineStats:
-    """Aggregate counters across the engine lifetime."""
+    """Aggregate counters across the engine lifetime.
+
+    ``snapshot()`` merges the lifetime counters with live gauges
+    (current queue depth, oldest queued ticket age) supplied by the
+    owning engine, plus the background-compaction counters filled in
+    by an attached ``BackgroundCompactor``.
+    """
 
     requests: int = 0
     batches: int = 0  # fused scoring calls
@@ -190,23 +244,32 @@ class EngineStats:
     added_rows: int = 0  # rows ingested via applied mutation batches
     deleted_rows: int = 0  # rows tombstoned via applied batches
     mutation_batches: int = 0  # batched apply steps (the amortized op)
-    compactions: int = 0  # auto_compact evictions triggered
+    compactions: int = 0  # synchronous auto_compact evictions
+    deadline_missed: int = 0  # requests resolved after their deadline
+    queue_hwm: int = 0  # high-water mark of queued query rows
+    # background compaction (filled by an attached compactor)
+    compact_runs: int = 0  # off-thread survivor builds completed
+    compact_retries: int = 0  # rebuilds because mutations landed mid-run
+    compact_swap_ms: float = 0.0  # cumulative atomic-swap time
+    compact_blocked_ms: float = 0.0  # cumulative wait to acquire the
+    # mutation barrier at swap time — serving-path time compaction cost
     flushes: Dict[str, int] = dataclasses.field(
-        default_factory=lambda: {
-            "size": 0, "timeout": 0, "manual": 0, "pressure": 0,
-            "barrier": 0,
-        }
+        default_factory=lambda: {r: 0 for r in _FLUSH_REASONS}
     )
     # distinct (index, bucket, k, params) combinations that ran — the
     # engine-side upper bound on jit traces of the scoring call
     compiled_buckets: set = dataclasses.field(default_factory=set)
+    # zero-arg callable returning live gauges; set by the owning engine
+    gauges: Optional[Callable[[], Dict[str, Any]]] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
 
     def snapshot(self) -> Dict[str, Any]:
         fill = self.batched_rows / max(
             1, self.batched_rows + self.padded_rows
         )
         looked_up = self.prep_hits + self.prep_misses
-        return {
+        snap = {
             "requests": self.requests,
             "batches": self.batches,
             "rows": self.batched_rows,
@@ -219,36 +282,116 @@ class EngineStats:
             "deleted_rows": self.deleted_rows,
             "mutation_batches": self.mutation_batches,
             "compactions": self.compactions,
+            "deadline_missed": self.deadline_missed,
+            "queue_hwm": self.queue_hwm,
+            "compaction": {
+                "runs": self.compact_runs,
+                "retries": self.compact_retries,
+                "swap_ms": round(self.compact_swap_ms, 3),
+                "blocked_ms": round(self.compact_blocked_ms, 3),
+            },
             "flushes": dict(self.flushes),
             "unique_buckets": len(self.compiled_buckets),
         }
+        if self.gauges is not None:
+            snap.update(self.gauges())
+        return snap
 
 
-class Ticket:
-    """Handle for a submitted request; resolves when its group flushes."""
+class _EventTicket:
+    """Shared resolution machinery: a one-shot event, the result/error
+    slots, and done callbacks (the asyncio bridge).  Resolution happens
+    exactly once; late ``add_done_callback`` registrations fire
+    immediately on the caller's thread."""
 
-    def __init__(self, engine: "QueryEngine", group: tuple, k: int,
-                 n_rows: int):
-        self._engine = engine
-        self._group = group
-        self.k = k
-        self.n_rows = n_rows
-        self.stats = RequestStats()
-        self._result: Optional[Tuple[np.ndarray, np.ndarray]] = None
+    def __init__(self):
+        self._event = threading.Event()
+        self._cb_lock = threading.Lock()
+        self._callbacks: list = []
+        self._result: Optional[Any] = None
         self._error: Optional[BaseException] = None
 
     @property
     def done(self) -> bool:
-        return self._result is not None or self._error is not None
+        return self._event.is_set()
 
-    def result(self) -> Tuple[np.ndarray, np.ndarray]:
-        """(scores, ids), numpy arrays, each (n_rows, k).  Flushes the
-        request's group if it is still queued.  If the fused call for
-        this request's batch failed (e.g. an option the backend
-        rejects), re-raises that error here as well as at the flush
-        site."""
-        if not self.done:
-            self._engine._flush_group(self._group, "manual")
+    @property
+    def error(self) -> Optional[BaseException]:
+        """The resolution error, if the ticket failed (None while
+        pending or on success)."""
+        return self._error
+
+    def add_done_callback(self, fn) -> None:
+        """Run ``fn(self)`` when the ticket resolves (immediately if it
+        already has).  Callbacks run on the resolving thread and must
+        not block."""
+        with self._cb_lock:
+            if not self._event.is_set():
+                self._callbacks.append(fn)
+                return
+        fn(self)
+
+    def _fire(self) -> None:
+        with self._cb_lock:
+            self._event.set()
+            callbacks, self._callbacks = self._callbacks, []
+        for fn in callbacks:
+            fn(self)
+
+    def _settle(self, result) -> None:
+        self._result = result
+        self._fire()
+
+    def _fail(self, error: BaseException) -> None:
+        if self._event.is_set():  # never overwrite a resolution
+            return
+        self._error = error
+        self._fire()
+
+    def _wait(self, timeout: Optional[float]) -> None:
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"ticket unresolved after {timeout}s (is a driver "
+                f"thread or flush() serving this engine?)"
+            )
+
+
+class Ticket(_EventTicket):
+    """Handle for a submitted request; resolves when its group flushes.
+
+    Event-backed: any number of threads may block in ``result()``
+    concurrently — exactly one fused call serves the group, everyone
+    wakes on the same event."""
+
+    def __init__(self, engine: "QueryEngine", group: tuple, k: int,
+                 n_rows: int, deadline: Optional[float] = None):
+        super().__init__()
+        self._engine = engine
+        self._group = group
+        self.k = k
+        self.n_rows = n_rows
+        self.deadline = deadline  # absolute perf_counter flush-by time
+        self.stats = RequestStats()
+
+    def result(
+        self, timeout: Optional[float] = None
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """(scores, ids), numpy arrays, each (n_rows, k).
+
+        On an undriven engine, flushes the request's group if it is
+        still queued (exactly one caller runs the fused call; others
+        block on the event).  On a driven engine, blocks until the
+        driver's flush cadence resolves the ticket, up to ``timeout``
+        seconds (None = forever; raises TimeoutError on expiry).  If
+        the fused call for this request's batch failed (e.g. an option
+        the backend rejects), re-raises that error here as well as at
+        the flush site."""
+        if not self.done and not self._engine.driven:
+            try:
+                self._engine._flush_group(self._group, "manual")
+            except Exception:
+                pass  # the ticket carries the error; re-raised below
+        self._wait(timeout)
         if self._error is not None:
             raise RuntimeError(
                 "request failed during its batch's fused scoring call"
@@ -257,14 +400,15 @@ class Ticket:
         return self._result
 
 
-class MutationTicket:
+class MutationTicket(_EventTicket):
     """Handle for a submitted mutation; resolves when its index's
     queued mutation batch is applied (next query flush of that index,
     ``flush()``, an aged ``poll()``, backlog overflow — or this
-    ticket's ``result()``)."""
+    ticket's ``result()`` on an undriven engine)."""
 
     def __init__(self, engine: "QueryEngine", index_name: str,
                  kind: str, n_rows: int):
+        super().__init__()
         self._engine = engine
         self._index = index_name
         self.kind = kind  # "add" | "delete"
@@ -272,21 +416,20 @@ class MutationTicket:
         self.t_enqueue = time.perf_counter()
         self.apply_s = 0.0  # duration of the whole batched apply step
         self.ids: Optional[np.ndarray] = None  # adds: assigned user ids
-        self._result: Optional[Any] = None
-        self._error: Optional[BaseException] = None
 
-    @property
-    def done(self) -> bool:
-        return self._result is not None or self._error is not None
-
-    def result(self):
+    def result(self, timeout: Optional[float] = None):
         """Adds: the (n,) int64 user ids the rows received (also on
         ``.ids`` immediately after submit).  Deletes: the number of
-        rows newly tombstoned.  Applies the index's pending mutation
-        batch if it is still queued; re-raises the batch's error if
-        the apply failed."""
-        if not self.done:
-            self._engine._apply_mutations(self._index)
+        rows newly tombstoned.  On an undriven engine, applies the
+        index's pending mutation batch if it is still queued; on a
+        driven engine waits for the driver (up to ``timeout``).
+        Re-raises the batch's error if the apply failed."""
+        if not self.done and not self._engine.driven:
+            try:
+                self._engine._apply_mutations(self._index)
+            except Exception:
+                pass  # the ticket carries the error; re-raised below
+        self._wait(timeout)
         if self._error is not None:
             raise RuntimeError(
                 "mutation failed during its batched apply step"
@@ -300,12 +443,14 @@ class _Request:
     k: int
     ticket: Ticket
     t_enqueue: float
+    deadline: Optional[float] = None  # absolute flush-by time
 
 
 class QueryEngine:
-    """See the module docstring.  Single-threaded core: ``submit`` /
-    ``poll`` / ``flush`` are meant to be driven by one serving loop
-    (async transport is a ROADMAP follow-up)."""
+    """See the module docstring.  Thread-safe: any number of threads
+    may ``submit``/``result`` concurrently; ``poll``/``flush`` may be
+    driven by a serving loop, a ``ServingFrontend`` driver thread, or
+    the callers themselves (undriven ``result()`` flushes)."""
 
     def __init__(
         self,
@@ -318,6 +463,10 @@ class QueryEngine:
         elif overrides:
             config = dataclasses.replace(config, **overrides)
         self.config = config
+        self._lock = threading.RLock()
+        # signalled whenever queued rows drain (frontend backpressure)
+        self._space = threading.Condition(self._lock)
+        self._index_locks: Dict[str, threading.RLock] = {}
         self._indexes: Dict[str, AshIndex] = {}
         self._pending: "OrderedDict[tuple, list[_Request]]" = OrderedDict()
         self._pending_rows = 0
@@ -329,7 +478,15 @@ class QueryEngine:
         self._add_tickets: Dict[str, list] = {}
         self._pending_deletes: Dict[str, list] = {}
         self._mutation_t0: Dict[str, float] = {}
+        # set by ServingFrontend: when True, submit() signals the
+        # driver instead of flushing inline and result() only waits
+        self.driven = False
+        self._on_work: Optional[Callable[[], None]] = None
+        # set by BackgroundCompactor.attach(): auto_compact requests
+        # route to the worker instead of compacting on this thread
+        self._compactor = None
         self.stats = EngineStats()
+        self.stats.gauges = self._live_gauges
         if isinstance(indexes, AshIndex):
             self.register("default", indexes)
         elif indexes:
@@ -347,10 +504,16 @@ class QueryEngine:
         its next ``apply_pending``.  An apply failure lands on the
         mutation tickets (re-raised by their ``result()``), never here.
         """
-        if name in self._indexes:
+        rebind = False
+        with self._lock:
+            rebind = name in self._indexes
+            if name not in self._index_locks:
+                self._index_locks[name] = threading.RLock()
+        if rebind:
             self._try_flush(self._apply_mutations, name)
             self.invalidate_prep_cache(name)
-        self._indexes[name] = index
+        with self._lock:
+            self._indexes[name] = index
         return self
 
     def index(self, name: str = "default") -> AshIndex:
@@ -360,15 +523,28 @@ class QueryEngine:
     def index_names(self) -> Tuple[str, ...]:
         return tuple(self._indexes)
 
+    def mutation_barrier(self, name: str = "default") -> threading.RLock:
+        """The per-index execution lock: held by every fused scoring
+        call and mutation apply of ``name``.  Holding it guarantees no
+        search or mutation of that index is in flight — the
+        background compactor snapshots and swaps under it, and
+        external code may use it the same way (it is re-entrant)."""
+        with self._lock:
+            lock = self._index_locks.get(name)
+            if lock is None:
+                lock = self._index_locks[name] = threading.RLock()
+            return lock
+
     def invalidate_prep_cache(self, name: Optional[str] = None) -> None:
-        if name is None:
-            self._prep_cache.clear()
-            self._prep_cache_nbytes = 0
-            return
-        for key in [k for k in self._prep_cache if k[0] == name]:
-            self._prep_cache_nbytes -= self._entry_nbytes(
-                self._prep_cache.pop(key)
-            )
+        with self._lock:
+            if name is None:
+                self._prep_cache.clear()
+                self._prep_cache_nbytes = 0
+                return
+            for key in [k for k in self._prep_cache if k[0] == name]:
+                self._prep_cache_nbytes -= self._entry_nbytes(
+                    self._prep_cache.pop(key)
+                )
 
     @property
     def prep_cache_bytes(self) -> int:
@@ -386,10 +562,17 @@ class QueryEngine:
         index: str = "default",
         nprobe: Optional[int] = None,
         rerank: int = 0,
+        deadline_s: Optional[float] = None,
         **opts,
     ) -> Ticket:
-        """Queue a request; returns a :class:`Ticket`.  May flush (this
-        group on size, any group on timeout or queue pressure)."""
+        """Queue a request; returns a :class:`Ticket`.  Undriven, may
+        flush (this group on size, any group on timeout or queue
+        pressure); driven, signals the frontend driver instead.
+
+        ``deadline_s`` is a flush-by bound relative to now: the group
+        flushes no later than the deadline even if the ``max_wait_s``
+        timeout has not aged out, and a request resolved past its
+        deadline is counted in ``stats.deadline_missed``."""
         if index not in self._indexes:
             raise KeyError(
                 f"unknown index {index!r}; registered: {self.index_names}"
@@ -409,6 +592,8 @@ class QueryEngine:
             )
         if k < 1:
             raise ValueError(f"k must be >= 1: {k}")
+        if deadline_s is not None and deadline_s < 0:
+            raise ValueError(f"deadline_s must be >= 0: {deadline_s}")
         backend = idx.backend
         if backend != "ivf":
             nprobe = None  # only IVF routes coarsely; don't split groups
@@ -427,24 +612,37 @@ class QueryEngine:
         group = (index, nprobe, rerank, shortlist,
                  tuple(sorted(opts.items())))
 
-        # bounded queue: free space by serving, never by dropping
-        if (
-            self._pending_rows + q.shape[0] > self.config.max_pending
-            and self._pending_rows > 0
-        ):
-            self._try_flush(self._flush_all, "pressure")
+        driven = self.driven
+        if not driven:
+            # bounded queue: free space by serving, never by dropping
+            with self._lock:
+                pressured = (
+                    self._pending_rows + q.shape[0] > self.config.max_pending
+                    and self._pending_rows > 0
+                )
+            if pressured:
+                self._try_flush(self._flush_all, "pressure")
 
-        ticket = Ticket(self, group, k, q.shape[0])
-        self._pending.setdefault(group, []).append(
-            _Request(q, k, ticket, time.perf_counter())
-        )
-        self._pending_rows += q.shape[0]
-        self.stats.requests += 1
+        now = time.perf_counter()
+        deadline = None if deadline_s is None else now + deadline_s
+        ticket = Ticket(self, group, k, q.shape[0], deadline)
+        with self._lock:
+            self._pending.setdefault(group, []).append(
+                _Request(q, k, ticket, now, deadline)
+            )
+            self._pending_rows += q.shape[0]
+            self.stats.requests += 1
+            self.stats.queue_hwm = max(
+                self.stats.queue_hwm, self._pending_rows
+            )
+            group_full = (
+                self._group_rows(group) >= self.config.batch_buckets[-1]
+            )
+            over_bound = self._pending_rows > self.config.max_pending
 
-        if (
-            self._group_rows(group) >= self.config.batch_buckets[-1]
-            or self._pending_rows > self.config.max_pending
-        ):
+        if driven:
+            self._notify_work()
+        elif group_full or over_bound:
             # bucket fillable, or a single request alone exceeds the
             # queue bound: serve now rather than sit past max_pending
             self._try_flush(self._flush_group, group, "size")
@@ -483,11 +681,17 @@ class QueryEngine:
             )
         self._barrier(index)
         ticket = MutationTicket(self, index, "add", q.shape[0])
-        ticket.ids = idx.stage_add(q)
-        self._add_tickets.setdefault(index, []).append(ticket)
-        self._mutation_t0.setdefault(index, ticket.t_enqueue)
-        self.stats.mutations += 1
+        with self.mutation_barrier(index):
+            # staging mutates index state: serialize against in-flight
+            # applies so id assignment stays in submission order
+            ticket.ids = idx.stage_add(q)
+            with self._lock:
+                self._add_tickets.setdefault(index, []).append(ticket)
+                self._mutation_t0.setdefault(index, ticket.t_enqueue)
+                self.stats.mutations += 1
         self._maybe_apply(index)
+        if self.driven:
+            self._notify_work()
         return ticket
 
     def submit_delete(self, ids, *, index: str = "default") -> MutationTicket:
@@ -496,16 +700,19 @@ class QueryEngine:
         ids are ignored).  Same barrier/batching semantics as
         :meth:`submit_add`; deletes never pay a re-sort at all — only
         an eventual ``compact()`` does."""
-        idx = self._require_index(index)
+        self._require_index(index)
         del_ids = np.asarray(ids).reshape(-1).astype(np.int64)
         self._barrier(index)
         ticket = MutationTicket(self, index, "delete", int(del_ids.size))
-        self._pending_deletes.setdefault(index, []).append(
-            (del_ids, ticket)
-        )
-        self._mutation_t0.setdefault(index, ticket.t_enqueue)
-        self.stats.mutations += 1
+        with self._lock:
+            self._pending_deletes.setdefault(index, []).append(
+                (del_ids, ticket)
+            )
+            self._mutation_t0.setdefault(index, ticket.t_enqueue)
+            self.stats.mutations += 1
         self._maybe_apply(index)
+        if self.driven:
+            self._notify_work()
         return ticket
 
     def _require_index(self, index: str) -> AshIndex:
@@ -520,7 +727,9 @@ class QueryEngine:
         "barrier") so queries submitted before a mutation never see
         post-mutation state.  Errors stay on the affected query
         tickets, exactly like submit-triggered flushes."""
-        for group in [g for g in self._pending if g[0] == name]:
+        with self._lock:
+            groups = [g for g in self._pending if g[0] == name]
+        for group in groups:
             self._try_flush(self._flush_group, group, "barrier")
 
     def _mutation_backlog(self, name: str) -> int:
@@ -529,7 +738,12 @@ class QueryEngine:
         )
 
     def _maybe_apply(self, name: str) -> None:
-        if self._mutation_backlog(name) >= self.config.max_pending_mutations:
+        with self._lock:
+            over = (
+                self._mutation_backlog(name)
+                >= self.config.max_pending_mutations
+            )
+        if over:
             self._try_flush(self._apply_mutations, name)
 
     def _apply_mutations(self, name: str) -> int:
@@ -537,75 +751,131 @@ class QueryEngine:
         every staged row, then the queued deletes (order-equivalent to
         FIFO — delete targets are ids, which adds never disturb), then
         an optional auto-compaction.  Returns rows added + removed."""
-        idx = self._indexes.get(name)
-        if idx is None:
-            return 0
-        adds = self._add_tickets.pop(name, [])
-        dels = self._pending_deletes.pop(name, [])
-        self._mutation_t0.pop(name, None)
-        if not adds and not dels and idx.pending_rows == 0:
-            return 0
-        t0 = time.perf_counter()
-        try:
-            applied = idx.apply_pending()
-            removed = 0
-            for del_ids, ticket in dels:
-                ticket._result = idx.delete(del_ids)
-                removed += ticket._result
-        except Exception as e:
+        with self.mutation_barrier(name):
+            with self._lock:
+                idx = self._indexes.get(name)
+                if idx is None:
+                    return 0
+                adds = self._add_tickets.pop(name, [])
+                dels = self._pending_deletes.pop(name, [])
+                self._mutation_t0.pop(name, None)
+            if not adds and not dels and idx.pending_rows == 0:
+                return 0
+            t0 = time.perf_counter()
+            try:
+                applied = idx.apply_pending()
+                removed = 0
+                for del_ids, ticket in dels:
+                    removed_now = idx.delete(del_ids)
+                    ticket._result = removed_now
+                    removed += removed_now
+            except Exception as e:
+                for ticket in adds + [t for _, t in dels]:
+                    ticket._fail(e)
+                raise
+            if (
+                dels
+                and self.config.auto_compact is not None
+                and idx.dead_fraction > self.config.auto_compact
+            ):
+                if self._compactor is not None:
+                    # compaction cost leaves the serving path: the
+                    # worker builds survivor arrays off-thread and
+                    # swaps them in between flushes
+                    self._compactor.request(name)
+                else:
+                    n_before = idx.n
+                    idx.compact(self.config.auto_compact)
+                    if idx.n != n_before:
+                        with self._lock:
+                            self.stats.compactions += 1
+            dt = time.perf_counter() - t0
+            for ticket in adds:
+                ticket._result = ticket.ids
             for ticket in adds + [t for _, t in dels]:
-                if not ticket.done:
-                    ticket._error = e
-            raise
-        for ticket in adds:
-            ticket._result = ticket.ids
-        if (
-            dels
-            and self.config.auto_compact is not None
-            and idx.dead_fraction > self.config.auto_compact
-        ):
-            n_before = idx.n
-            idx.compact(self.config.auto_compact)
-            if idx.n != n_before:
-                self.stats.compactions += 1
-        dt = time.perf_counter() - t0
-        for ticket in adds + [t for _, t in dels]:
-            ticket.apply_s = dt
-        self.stats.mutation_batches += 1
-        self.stats.added_rows += applied
-        self.stats.deleted_rows += removed
-        return applied + removed
+                ticket.apply_s = dt
+                ticket._fire()
+            with self._lock:
+                self.stats.mutation_batches += 1
+                self.stats.added_rows += applied
+                self.stats.deleted_rows += removed
+            return applied + removed
 
     # -- flushing -----------------------------------------------------
 
     def poll(self) -> int:
         """Flush groups whose oldest request exceeded ``max_wait_s``
-        and apply mutation batches older than it.  Call this from the
-        serving loop's idle path.  Returns the number of requests
-        completed (mutations resolve their own tickets)."""
+        ("timeout") or whose earliest flush-by deadline arrived
+        ("deadline"), and apply mutation batches older than
+        ``max_wait_s``.  Call this from the serving loop's idle path
+        (the ``ServingFrontend`` driver calls it on every tick).
+        Returns the number of requests completed (mutations resolve
+        their own tickets)."""
         now = time.perf_counter()
+        due = []
+        with self._lock:
+            for group, reqs in self._pending.items():
+                if not reqs:
+                    continue
+                if now - reqs[0].t_enqueue >= self.config.max_wait_s:
+                    due.append((group, "timeout"))
+                    continue
+                deadlines = [
+                    r.deadline for r in reqs if r.deadline is not None
+                ]
+                if deadlines and now >= min(deadlines):
+                    due.append((group, "deadline"))
+            aged = [
+                nm for nm, t0 in self._mutation_t0.items()
+                if now - t0 >= self.config.max_wait_s
+            ]
         done = 0
-        for group in list(self._pending):
-            reqs = self._pending.get(group)
-            if reqs and now - reqs[0].t_enqueue >= self.config.max_wait_s:
-                done += self._flush_group(group, "timeout")
-        for name, t0 in list(self._mutation_t0.items()):
-            if now - t0 >= self.config.max_wait_s:
-                self._apply_mutations(name)
+        for group, reason in due:
+            done += self._flush_group(group, reason)
+        for name in aged:
+            self._apply_mutations(name)
+        return done
+
+    def flush_ready(self) -> int:
+        """Driver-facing size/pressure cadence: flush every group that
+        can fill the largest bucket ("size"), and — as a safety net if
+        the queue bound is exceeded — everything ("pressure").
+        Returns requests completed."""
+        with self._lock:
+            big = self.config.batch_buckets[-1]
+            ready = [g for g in self._pending if self._group_rows(g) >= big]
+            pressured = self._pending_rows > self.config.max_pending
+        done = 0
+        for group in ready:
+            done += self._flush_group(group, "size")
+        if pressured:
+            done += self._flush_all("pressure")
         return done
 
     def flush(self) -> int:
         """Serve everything queued, now — query groups AND mutation
         batches.  Returns requests completed; an empty flush is a
         no-op returning 0."""
-        done = self._flush_all("manual")
-        for name in list(self._mutation_t0):
+        return self._drain("manual")
+
+    def drain(self) -> int:
+        """Like :meth:`flush` but tagged "drain" in the flush-reason
+        telemetry — the frontend's shutdown path."""
+        return self._drain("drain")
+
+    def _drain(self, reason: str) -> int:
+        done = self._flush_all(reason)
+        with self._lock:
+            names = list(self._mutation_t0)
+        for name in names:
             self._apply_mutations(name)
         return done
 
     def _flush_all(self, reason: str) -> int:
         done = 0
-        for group in list(self._pending):
+        with self._lock:
+            groups = list(self._pending)
+        for group in groups:
             done += self._flush_group(group, reason)
         return done
 
@@ -623,53 +893,114 @@ class QueryEngine:
 
     @property
     def pending_requests(self) -> int:
-        return sum(len(v) for v in self._pending.values())
+        with self._lock:
+            return sum(len(v) for v in self._pending.values())
+
+    @property
+    def pending_rows(self) -> int:
+        """Queued query rows (the ``max_pending`` bound applies to
+        this; the frontend's backpressure gate watches it)."""
+        return self._pending_rows
 
     def _group_rows(self, group: tuple) -> int:
         return sum(
             r.queries.shape[0] for r in self._pending.get(group, ())
         )
 
+    def _live_gauges(self) -> Dict[str, Any]:
+        """Live queue gauges merged into ``stats.snapshot()``."""
+        now = time.perf_counter()
+        with self._lock:
+            oldest = min(
+                (r.t_enqueue for reqs in self._pending.values()
+                 for r in reqs),
+                default=None,
+            )
+            return {
+                "queue_depth": self._pending_rows,
+                "oldest_ticket_age_s": (
+                    0.0 if oldest is None else round(now - oldest, 6)
+                ),
+            }
+
+    def _notify_work(self) -> None:
+        cb = self._on_work
+        if cb is not None:
+            cb()
+
+    def _abort_pending(self, exc: BaseException) -> int:
+        """Fail every queued query ticket with ``exc`` (frontend
+        ``stop(drain=False)``).  Mutation batches are APPLIED, not
+        failed — their rows are already staged on the index, so
+        failing the tickets would strand state the index ingests on
+        its next apply anyway."""
+        with self._lock:
+            names = list(self._mutation_t0)
+        for name in names:
+            self._try_flush(self._apply_mutations, name)
+        with self._lock:
+            popped = list(self._pending.items())
+            self._pending.clear()
+            self._pending_rows = 0
+            self._space.notify_all()
+        n = 0
+        for _, reqs in popped:
+            for r in reqs:
+                r.ticket._fail(exc)
+                n += 1
+        return n
+
     def _flush_group(self, group: tuple, reason: str) -> int:
-        if group in self._pending:
-            # every queued query of this index was submitted AFTER the
-            # mutations still pending for it (each mutation submission
-            # barrier-flushed the older queries before staging), so
-            # applying the backlog here makes the batch observe exactly
-            # the mutations submitted before it — including during a
-            # barrier flush, where the NEWEST mutation is not queued
-            # yet and therefore (correctly) not applied.
-            self._apply_mutations(group[0])
-        reqs = self._pending.pop(group, None)
-        if not reqs:
-            return 0
-        self._pending_rows -= sum(r.queries.shape[0] for r in reqs)
-        self.stats.flushes[reason] += 1
-        # chunk FIFO so no batch exceeds the largest bucket (a single
-        # oversized request still rides alone, padded to a multiple)
-        big = self.config.batch_buckets[-1]
-        chunks: list[list[_Request]] = [[]]
-        rows = 0
-        for r in reqs:
-            m = r.queries.shape[0]
-            if chunks[-1] and rows + m > big:
-                chunks.append([])
-                rows = 0
-            chunks[-1].append(r)
-            rows += m
-        for i, chunk in enumerate(chunks):
-            try:
-                self._run_batch(group, chunk, reason)
-            except Exception as e:
-                # the failed chunk's tickets carry the error already
-                # (_run_batch); later chunks were popped off the queue
-                # too, so resolve them with it as well — no request may
-                # end up neither served nor errored
-                for later in chunks[i + 1:]:
-                    for r in later:
-                        r.ticket._error = e
-                raise
-        return len(reqs)
+        name = group[0]
+        with self.mutation_barrier(name):
+            with self._lock:
+                queued = group in self._pending
+            if queued:
+                # every queued query of this index was submitted AFTER
+                # the mutations still pending for it (each mutation
+                # submission barrier-flushed the older queries before
+                # staging), so applying the backlog here makes the
+                # batch observe exactly the mutations submitted before
+                # it — including during a barrier flush, where the
+                # NEWEST mutation is not queued yet and therefore
+                # (correctly) not applied.
+                self._apply_mutations(name)
+            with self._lock:
+                reqs = self._pending.pop(group, None)
+                if not reqs:
+                    return 0
+                self._pending_rows -= sum(
+                    r.queries.shape[0] for r in reqs
+                )
+                self.stats.flushes[reason] += 1
+                self._space.notify_all()  # queue rows freed
+            # chunk FIFO so no batch exceeds the largest bucket (a
+            # single oversized request still rides alone, padded to a
+            # multiple)
+            big = self.config.batch_buckets[-1]
+            chunks: list[list[_Request]] = [[]]
+            rows = 0
+            for r in reqs:
+                m = r.queries.shape[0]
+                if chunks[-1] and rows + m > big:
+                    chunks.append([])
+                    rows = 0
+                chunks[-1].append(r)
+                rows += m
+            for i, chunk in enumerate(chunks):
+                try:
+                    self._run_batch(group, chunk, reason)
+                except Exception as e:
+                    # the failed chunk's tickets carry the error
+                    # already (_run_batch); later chunks were popped
+                    # off the queue too, so resolve them with it as
+                    # well — no request may end up neither served nor
+                    # errored
+                    for later in chunks[i + 1:]:
+                        for r in later:
+                            r.ticket._fail(e)
+                    raise
+            return len(reqs)
 
     # -- the fused scoring call ---------------------------------------
 
@@ -711,20 +1042,22 @@ class QueryEngine:
             # explicit flush()/poll(); submit-triggered flushes swallow
             # it (_try_flush) so the caller still gets its Ticket
             for r in reqs:
-                r.ticket._error = e
+                r.ticket._fail(e)
             raise
         scoring_us = (time.perf_counter() - t_score) * 1e6
         scores = np.asarray(scores)
         ids = np.asarray(ids)
 
-        self.stats.batches += 1
-        self.stats.batched_rows += n_real
-        self.stats.padded_rows += bucket - n_real
-        self.stats.compiled_buckets.add(
-            (name, idx.backend, bucket, k_run, nprobe, rerank, opts)
-        )
+        with self._lock:
+            self.stats.batches += 1
+            self.stats.batched_rows += n_real
+            self.stats.padded_rows += bucket - n_real
+            self.stats.compiled_buckets.add(
+                (name, idx.backend, bucket, k_run, nprobe, rerank, opts)
+            )
 
         offset = 0
+        missed = 0
         for r in reqs:
             m = r.queries.shape[0]
             s = scores[offset:offset + m]
@@ -739,17 +1072,24 @@ class QueryEngine:
                 i = np.concatenate(
                     [i, np.full((m, pad), -1, i.dtype)], axis=1
                 )
+            now = time.perf_counter()
             st = r.ticket.stats
             st.queue_wait_s = t_score - r.t_enqueue
-            st.latency_s = time.perf_counter() - r.t_enqueue
+            st.latency_s = now - r.t_enqueue
             st.batch_rows = n_real
             st.bucket_rows = bucket
             st.scoring_us = scoring_us
             st.prep_hits = int(hit_rows[offset:offset + m].sum())
             st.prep_misses = m - st.prep_hits
             st.flush_reason = reason
-            r.ticket._result = (s, i)
+            if r.deadline is not None and now > r.deadline:
+                st.deadline_missed = True
+                missed += 1
+            r.ticket._settle((s, i))
             offset += m
+        if missed:
+            with self._lock:
+                self.stats.deadline_missed += missed
 
     # -- prep cache ---------------------------------------------------
 
@@ -762,7 +1102,8 @@ class QueryEngine:
         bucket = rows.shape[0]
         hit_rows = np.zeros(n_real, dtype=bool)
         if not self.config.prep_cache_enabled:
-            self.stats.prep_misses += n_real
+            with self._lock:
+                self.stats.prep_misses += n_real
             return idx.prepare(jnp.asarray(rows)), hit_rows
 
         keys = [
@@ -772,17 +1113,18 @@ class QueryEngine:
         ]
         row_preps: list = [None] * bucket
         miss = []
-        for i, key in enumerate(keys):
-            cached = self._prep_cache.get(key)
-            if cached is not None:
-                self._prep_cache.move_to_end(key)
-                row_preps[i] = cached
-                if i < n_real:
-                    hit_rows[i] = True
-            else:
-                miss.append(i)
-        self.stats.prep_hits += int(hit_rows.sum())
-        self.stats.prep_misses += n_real - int(hit_rows.sum())
+        with self._lock:
+            for i, key in enumerate(keys):
+                cached = self._prep_cache.get(key)
+                if cached is not None:
+                    self._prep_cache.move_to_end(key)
+                    row_preps[i] = cached
+                    if i < n_real:
+                        hit_rows[i] = True
+                else:
+                    miss.append(i)
+            self.stats.prep_hits += int(hit_rows.sum())
+            self.stats.prep_misses += n_real - int(hit_rows.sum())
 
         if not miss:
             return self._stack_prep(row_preps), hit_rows
@@ -802,19 +1144,21 @@ class QueryEngine:
                       (mp.q, mp.q_proj, mp.ip_q_landmarks, mp.q_sq_norm))
         for j, i in enumerate(miss):
             row_preps[i] = tuple(a[j] for a in mp_np)
-        for i in miss:
-            if i < n_real:
-                self._cache_put(keys[i], row_preps[i])
-        self._evict()
+        with self._lock:
+            for i in miss:
+                if i < n_real:
+                    self._cache_put(keys[i], row_preps[i])
+            self._evict()
         return self._stack_prep(row_preps), hit_rows
 
     def _cache_prep_rows(self, keys, prep: QueryPrep, idxs) -> None:
         arrs = tuple(np.asarray(a) for a in
                      (prep.q, prep.q_proj, prep.ip_q_landmarks,
                       prep.q_sq_norm))
-        for i in idxs:
-            self._cache_put(keys[i], tuple(a[i] for a in arrs))
-        self._evict()
+        with self._lock:
+            for i in idxs:
+                self._cache_put(keys[i], tuple(a[i] for a in arrs))
+            self._evict()
 
     @staticmethod
     def _entry_nbytes(entry: tuple) -> int:

@@ -65,8 +65,9 @@ def test_diff_qps_regression_and_vanished_rows(tmp_path):
 
 def test_diff_mutation_rate_regressions(tmp_path):
     """adds_per_s / deletes_per_s (the serving_mutation rows) are
-    higher-is-better throughputs: a drop fails like a qps drop, and
-    non-rate derived values (p99_ms etc.) are never rate-compared."""
+    higher-is-better throughputs: a drop fails like a qps drop; the
+    *_ms latencies are lower-is-better and diffed with the inverted
+    ratio (a 500x p99 blowup fails the gate)."""
     base = tmp_path / "base"
     base.mkdir()
     _write(base / "BENCH_serving.json",
@@ -82,7 +83,61 @@ def test_diff_mutation_rate_regressions(tmp_path):
     fails, warns = check_bench.diff(cur, str(base), 1.5, 3.0)
     assert any("adds_per_s regressed 5.00x" in f for f in fails)
     assert not any("deletes_per_s" in m for m in fails + warns)
-    assert not any("p99_ms" in m for m in fails + warns)
+    assert any("p99_ms regressed 500.00x" in f for f in fails)
+
+
+def test_diff_latency_ms_lower_is_better(tmp_path):
+    """*_ms latencies: warn at 1.5x, fail at 3x, and an IMPROVEMENT
+    (latency dropping) never trips the gate."""
+    base = tmp_path / "base"
+    base.mkdir()
+    _write(base / "BENCH_serving.json",
+           _doc([_row("serving/engine_flat_b8", 0.0,
+                      {"p50_ms": 10.0, "p99_ms": 10.0,
+                       "worst_apply_ms": 10.0})], group="serving"))
+    cur = _write(
+        tmp_path / "BENCH_serving.json",
+        _doc([_row("serving/engine_flat_b8", 0.0,
+                   {"p50_ms": 18.0, "p99_ms": 40.0,
+                    "worst_apply_ms": 1.0})], group="serving"),
+    )
+    fails, warns = check_bench.diff(cur, str(base), 1.5, 3.0)
+    assert any("p50_ms regressed 1.80x" in w for w in warns)
+    assert any("p99_ms regressed 4.00x" in f for f in fails)
+    assert not any("worst_apply_ms" in m for m in fails + warns)
+
+
+def test_concurrent_row_invariants(tmp_path):
+    """Rows carrying the concurrent-serving metric pairs are gated
+    structurally: qps < qps_single fails, and background-compaction
+    p99 at or above the synchronous p99 fails."""
+    good = _write(tmp_path / "good.json", _doc([_row(
+        "serving/concurrent_flat_c8", 1.0,
+        {"qps": 2000.0, "qps_single": 250.0,
+         "p99_sync_compact_ms": 100.0, "p99_bg_compact_ms": 20.0},
+    )], group="serving"))
+    assert check_bench.check(good) == []
+
+    slow = _write(tmp_path / "slow.json", _doc([_row(
+        "serving/concurrent_flat_c8", 1.0,
+        {"qps": 100.0, "qps_single": 250.0},
+    )], group="serving"))
+    probs = check_bench.check(slow)
+    assert any("single-caller" in p for p in probs)
+
+    stall = _write(tmp_path / "stall.json", _doc([_row(
+        "serving/concurrent_flat_c8", 1.0,
+        {"p99_sync_compact_ms": 50.0, "p99_bg_compact_ms": 50.0},
+    )], group="serving"))
+    probs = check_bench.check(stall)
+    assert any("not off the serving path" in p for p in probs)
+
+    # rows without the metric pairs (everything pre-concurrent) are
+    # untouched by the invariants
+    plain = _write(tmp_path / "plain.json", _doc([_row(
+        "serving/engine_flat_b8", 1.0, {"qps": 100.0, "p99_ms": 5.0},
+    )], group="serving"))
+    assert check_bench.check(plain) == []
 
 
 def test_diff_skips_quick_vs_full(tmp_path):

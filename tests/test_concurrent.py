@@ -1,0 +1,499 @@
+"""Concurrent serving subsystem: event-backed tickets, the
+ServingFrontend driver thread, backpressure/deadlines, the asyncio
+facade, and background compaction.
+
+The load-bearing properties:
+
+* **exactly-once resolution** — N threads racing one ticket's
+  ``result()`` trigger exactly ONE fused scoring call (the per-index
+  execution lock serializes; losers find the group gone and wait on
+  the event), and no ticket is ever lost or resolved twice.
+* **linearizable mutation order** — under concurrent mixed
+  search/add/delete traffic, every search observes exactly the
+  mutations submitted before it (submission order is the contract),
+  so the whole run is bit-identical to a serial replay of the same
+  submission sequence on a twin index.
+* **compaction invisibility** — background compaction may swap
+  survivor state at ANY point between flushes; results stay
+  bit-identical to a fresh build over the survivors regardless of
+  when the swap lands.
+"""
+import asyncio
+import threading
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, st
+from repro.index import flat as F
+from repro.serving.compactor import BackgroundCompactor
+from repro.serving.engine import QueryEngine
+from repro.serving.frontend import (
+    FrontendClosed, FrontendConfig, ServingFrontend,
+)
+from test_mutation import (  # noqa: F401  (setup is a fixture)
+    BACKENDS, CHUNK, N0, _assert_matches_fresh_build, _build, _Oracle,
+    setup,
+)
+
+
+def _mk(setup, backend="flat", n=N0, **eng_kw):
+    X, Qm, cfg, model, kb = setup
+    idx = _build(setup, backend, "dot", X[:n])
+    eng_kw.setdefault("batch_buckets", (8,))
+    eng_kw.setdefault("k_buckets", (10,))
+    return idx, QueryEngine(idx, **eng_kw)
+
+
+# ---------------------------------------------------------------------------
+# Ticket re-entrancy / exactly-once resolution
+# ---------------------------------------------------------------------------
+
+
+def test_ticket_result_hammered_runs_one_fused_call(setup):
+    """8 threads racing one ticket's result(): exactly one fused call
+    serves the group (jit cache grows by at most the one new trace),
+    every caller gets the same arrays, resolution fires once."""
+    X, Qm, cfg, model, kb = setup
+    idx, eng = _mk(setup, max_wait_s=60.0)
+    ticket = eng.submit(np.asarray(Qm[:2]), k=5)
+    resolved = []
+    ticket.add_done_callback(lambda t: resolved.append(t))
+    before = F._search_prepped._cache_size()
+
+    results, errors = [], []
+    barrier = threading.Barrier(8)
+
+    def hammer():
+        try:
+            barrier.wait()
+            results.append(ticket.result(timeout=30.0))
+        except Exception as e:
+            errors.append(e)
+
+    threads = [threading.Thread(target=hammer) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert len(results) == 8
+    assert eng.stats.batches == 1  # ONE fused call despite 8 racers
+    assert F._search_prepped._cache_size() - before <= 1
+    assert len(resolved) == 1  # done callback fired exactly once
+    s0, i0 = results[0]
+    for s, i in results[1:]:  # everyone woke on the same resolution
+        assert s is s0 and i is i0
+
+
+def test_mutation_ticket_result_hammered_applies_once(setup):
+    X, Qm, cfg, model, kb = setup
+    idx, eng = _mk(setup, n=100, max_wait_s=60.0)
+    ticket = eng.submit_delete(np.arange(10))
+    barrier = threading.Barrier(8)
+    results = []
+
+    def hammer():
+        barrier.wait()
+        results.append(ticket.result(timeout=30.0))
+
+    threads = [threading.Thread(target=hammer) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert results == [10] * 8
+    assert eng.stats.mutation_batches == 1
+    assert idx.n_dead == 10
+
+
+def test_ticket_result_timeout(setup):
+    """On a driven engine result() waits instead of flushing — an
+    unserved ticket times out rather than jumping the driver."""
+    X, Qm, cfg, model, kb = setup
+    idx, eng = _mk(setup, max_wait_s=60.0)
+    eng.driven = True  # driven, but nobody is driving
+    t = eng.submit(np.asarray(Qm[:1]), k=5)
+    with pytest.raises(TimeoutError, match="driver"):
+        t.result(timeout=0.05)
+    eng.driven = False
+    s, i = t.result(timeout=5.0)  # undriven again: caller may flush
+    assert s.shape == (1, 5)
+
+
+# ---------------------------------------------------------------------------
+# ServingFrontend: driver cadence, backpressure, deadlines, lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_frontend_driver_owns_flushes(setup):
+    """Tickets resolve without any caller flushing: the driver's
+    timeout cadence serves them; result() never runs a flush (the
+    fused-call count matches the driver's batches)."""
+    X, Qm, cfg, model, kb = setup
+    idx, eng = _mk(setup, max_wait_s=0.002)
+    with ServingFrontend(eng) as fe:
+        tickets = [fe.submit(np.asarray(Qm[i:i + 1]), k=5)
+                   for i in range(4)]
+        out = [t.result(timeout=10.0) for t in tickets]
+    assert all(s.shape == (1, 5) for s, _ in out)
+    reasons = {t.stats.flush_reason for t in tickets}
+    assert reasons <= {"timeout", "size", "drain"}
+    assert not eng.driven  # stop() returned the engine to undriven
+
+
+def test_frontend_matches_direct_search(setup):
+    """Driver-batched results are bit-identical to direct search."""
+    X, Qm, cfg, model, kb = setup
+    idx, eng = _mk(setup, max_wait_s=0.001)
+    with ServingFrontend(eng) as fe:
+        s, i = fe.search(np.asarray(Qm), k=5, timeout=10.0)
+    sd, id_ = idx.search(Qm, k=5)
+    np.testing.assert_array_equal(s, np.asarray(sd))
+    np.testing.assert_array_equal(i, np.asarray(id_))
+
+
+def test_frontend_deadline_flush_and_stats(setup):
+    """A request deadline shorter than max_wait_s forces the flush at
+    the deadline ("deadline" reason); the stats snapshot carries the
+    queue gauges."""
+    X, Qm, cfg, model, kb = setup
+    idx, eng = _mk(setup, max_wait_s=60.0)  # timeout alone would hang
+    with ServingFrontend(eng, default_deadline_s=0.01) as fe:
+        t = fe.submit(np.asarray(Qm[:1]), k=5)
+        s, i = t.result(timeout=10.0)
+    assert t.stats.flush_reason in ("deadline", "drain")
+    snap = eng.stats.snapshot()
+    assert snap["flushes"]["deadline"] >= (
+        1 if t.stats.flush_reason == "deadline" else 0
+    )
+    assert {"queue_depth", "oldest_ticket_age_s", "queue_hwm"} <= set(snap)
+
+
+def test_frontend_backpressure_bounds_queue(setup):
+    """Submitters block at max_queue_rows instead of growing the
+    queue; everything still gets served and the high-water mark never
+    exceeds the bound."""
+    X, Qm, cfg, model, kb = setup
+    idx, eng = _mk(setup, max_wait_s=0.001)
+    bound = 6
+    with ServingFrontend(eng, max_queue_rows=bound) as fe:
+        errors = []
+
+        def client(cid):
+            try:
+                for j in range(6):
+                    fe.search(np.asarray(Qm[(cid + j) % 6][None, :]),
+                              k=5, timeout=10.0)
+            except Exception as e:
+                errors.append(e)
+
+        threads = [threading.Thread(target=client, args=(c,))
+                   for c in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors
+    assert eng.stats.queue_hwm <= bound
+    assert eng.stats.requests == 48
+
+
+def test_frontend_submit_timeout_when_clogged(setup):
+    """A queue that cannot drain (huge max_wait, bucket never fills)
+    times blocked submitters out rather than hanging them."""
+    X, Qm, cfg, model, kb = setup
+    idx, eng = _mk(setup, max_wait_s=60.0)
+    fe = ServingFrontend(eng, max_queue_rows=2,
+                         submit_timeout_s=0.05).start()
+    try:
+        fe.submit(np.asarray(Qm[:2]), k=5)  # fills the bound
+        with pytest.raises(TimeoutError, match="queue full"):
+            fe.submit(np.asarray(Qm[:2]), k=5)
+    finally:
+        fe.stop()  # drain serves the queued request
+
+
+def test_frontend_stop_drains_and_closes(setup):
+    X, Qm, cfg, model, kb = setup
+    idx, eng = _mk(setup, max_wait_s=60.0)
+    fe = ServingFrontend(eng).start()
+    ta = fe.submit_add(X[N0:N0 + 4])
+    t = fe.submit(np.asarray(Qm[:1]), k=5)
+    fe.stop(drain=True)
+    assert t.done and t.stats.flush_reason == "drain"
+    assert list(ta.result(timeout=1.0)) == list(range(N0, N0 + 4))
+    with pytest.raises(FrontendClosed):
+        fe.submit(np.asarray(Qm[:1]), k=5)
+    with pytest.raises(FrontendClosed):
+        fe.submit_add(X[:1])
+    fe.stop()  # idempotent
+
+
+def test_frontend_abort_fails_tickets_but_applies_mutations(setup):
+    """stop(drain=False): queued query tickets fail with
+    FrontendClosed; mutations still apply (their rows are already
+    staged on the index — failing them would strand state)."""
+    X, Qm, cfg, model, kb = setup
+    idx, eng = _mk(setup, max_wait_s=60.0)
+    fe = ServingFrontend(eng).start()
+    td = fe.submit_delete([0, 1, 2])
+    t = fe.submit(np.asarray(Qm[:1]), k=5)  # after the mutation: a
+    # mutation submitted later would barrier-flush this group
+    fe.stop(drain=False)
+    with pytest.raises(RuntimeError):
+        t.result(timeout=1.0)
+    assert isinstance(t.error, FrontendClosed)
+    assert td.result(timeout=1.0) == 3 and idx.n_dead == 3
+
+
+def test_frontend_config_validation(setup):
+    X, Qm, cfg, model, kb = setup
+    with pytest.raises(ValueError, match="poll_interval_s"):
+        FrontendConfig(poll_interval_s=0.0)
+    with pytest.raises(ValueError, match="max_queue_rows"):
+        FrontendConfig(max_queue_rows=0)
+
+
+def test_frontend_asyncio_facade(setup):
+    """await frontend.asearch(...) resolves on the event loop via the
+    ticket's done callback; errors surface as exceptions; the
+    mutation coroutines resolve to ids / removed counts."""
+    X, Qm, cfg, model, kb = setup
+    idx, eng = _mk(setup, max_wait_s=0.001)
+    sd, id_ = idx.search(Qm[:2], k=5)  # pre-mutation reference
+    with ServingFrontend(eng) as fe:
+        async def run():
+            s, i = await fe.asearch(np.asarray(Qm[:2]), k=5)
+            ids = await fe.asubmit_add(X[N0:N0 + 4])
+            removed = await fe.asubmit_delete(ids[:2])
+            return (s, i), list(ids), removed
+
+        (s, i), ids, removed = asyncio.run(run())
+    assert s.shape == (2, 5)
+    assert ids == list(range(N0, N0 + 4)) and removed == 2
+    np.testing.assert_array_equal(s, np.asarray(sd))
+    np.testing.assert_array_equal(i, np.asarray(id_))
+
+
+# ---------------------------------------------------------------------------
+# The acceptance stress test: 8 threads, mixed traffic, serial replay
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ("flat", "ivf"))
+def test_stress_mixed_traffic_matches_serial_replay(setup, backend):
+    """≥8 threads of mixed search/add/delete through the frontend —
+    with background compaction swapping mid-stream — finish with zero
+    lost or double-resolved tickets, and every search is bit-identical
+    to the same submission sequence replayed serially on a twin index.
+
+    Submissions are serialized by a test-side log lock (defining THE
+    submission order the engine contract promises to honor); execution
+    and resolution stay fully concurrent (driver thread + barrier
+    flushes + compactor swaps)."""
+    X, Qm, cfg, model, kb = setup
+    search_kw = {"nprobe": 4} if backend == "ivf" else {}
+    idx = _build(setup, backend, "dot", X[:N0])
+    twin = _build(setup, backend, "dot", X[:N0])
+    eng = QueryEngine(idx, batch_buckets=(8,), k_buckets=(10,),
+                      max_wait_s=0.002, auto_compact=0.05)
+    compactor = BackgroundCompactor(eng).start()
+
+    log = []  # ("add", pool_rows) | ("del", ids) | ("search", q, ticket)
+    log_lock = threading.Lock()
+    resolutions = []  # one entry per done-callback firing
+    errors = []
+    n_threads = 8
+    start = threading.Barrier(n_threads)
+
+    with ServingFrontend(eng) as fe:
+        def worker(wid):
+            rng = np.random.RandomState(1000 + wid)
+            try:
+                start.wait()
+                for _ in range(6):
+                    op = rng.rand()
+                    if op < 0.2:
+                        rows = rng.randint(0, X.shape[0], 4)
+                        with log_lock:
+                            t = fe.submit_add(X[rows])
+                            log.append(("add", rows))
+                    elif op < 0.4:
+                        with log_lock:
+                            hi = idx.next_id
+                            victims = rng.randint(0, hi, 6)
+                            t = fe.submit_delete(victims)
+                            log.append(("del", victims))
+                    else:
+                        q = np.asarray(
+                            Qm[rng.randint(0, Qm.shape[0], 2)]
+                        )
+                        with log_lock:
+                            t = fe.submit(q, k=10, **search_kw)
+                            log.append(("search", q, t))
+                    t.add_done_callback(
+                        lambda _t: resolutions.append(_t)
+                    )
+                    t.result(timeout=60.0)
+            except Exception as e:
+                errors.append((wid, e))
+
+        threads = [threading.Thread(target=worker, args=(w,))
+                   for w in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    compactor.wait_idle(30.0)
+    compactor.stop()
+    assert not errors, errors[:3]
+
+    # zero lost, zero double-resolved: every logged ticket resolved,
+    # and the done callback fired exactly once per ticket
+    tickets = [e[2] for e in log if e[0] == "search"]
+    assert all(t.done for t in tickets)
+    assert len(resolutions) == len(log)
+    assert len(set(map(id, resolutions))) == len(log)
+
+    # serial replay: same submission order, direct mutations on the
+    # twin; every concurrent search == the twin's state at its log
+    # position.  flat scans a fixed-width payload, so coalescing
+    # requests from different workers into one fused batch cannot
+    # change any row's arithmetic — scores compare bitwise.  IVF sizes
+    # its candidate gather to the widest probe list IN THE BATCH, so
+    # coalescing legitimately changes the reduction shape — ids must
+    # still match exactly, scores to fp32 accumulation noise.
+    for entry in log:
+        if entry[0] == "add":
+            twin.add(np.asarray(X[entry[1]]))
+        elif entry[0] == "del":
+            twin.delete(entry[1])
+        else:
+            _, q, t = entry
+            s_t, i_t = twin.search(q, k=10, **search_kw)
+            s_c, i_c = t.result()
+            if backend == "flat":
+                np.testing.assert_array_equal(s_c, np.asarray(s_t))
+            else:
+                np.testing.assert_allclose(
+                    s_c, np.asarray(s_t), rtol=1e-5, atol=1e-4
+                )
+            np.testing.assert_array_equal(i_c, np.asarray(i_t))
+
+
+# ---------------------------------------------------------------------------
+# Compaction invisibility under concurrency
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@given(
+    metric=st.sampled_from(("dot", "l2")),
+    seed=st.integers(min_value=0, max_value=10**6),
+)
+def test_background_compaction_invisible(setup, backend, metric, seed):
+    """Interleaved searches/adds/deletes with the background compactor
+    swapping whenever the dead fraction crosses the threshold: results
+    stay bit-identical to a fresh build over the survivors regardless
+    of when each swap lands (the test_mutation equivalence, now with
+    the rewrite racing the script on a worker thread)."""
+    X, Qm, cfg, model, kb = setup
+    rng = np.random.RandomState(seed)
+    idx = _build(setup, backend, metric, X[:N0])
+    oracle = _Oracle(N0)
+    eng = QueryEngine(idx, batch_buckets=(8,), k_buckets=(10,),
+                      max_wait_s=0.002, auto_compact=0.02)
+    search_kw = {"nprobe": 4} if backend == "ivf" else {}
+
+    with BackgroundCompactor(eng) as compactor:
+        for _ in range(rng.randint(2, 5)):
+            op = rng.rand()
+            if op < 0.35:
+                pool_rows = rng.randint(0, X.shape[0], CHUNK)
+                t = eng.submit_add(X[pool_rows])
+                expect = oracle.add(list(pool_rows))
+                np.testing.assert_array_equal(t.result(), expect)
+            elif op < 0.7 and len(oracle.alive) > CHUNK + 8:
+                victims = rng.choice(
+                    sorted(oracle.alive), size=CHUNK, replace=False
+                )
+                assert eng.submit_delete(victims).result() == CHUNK
+                oracle.delete(victims)
+            else:
+                s, ids = eng.submit(np.asarray(Qm), k=10,
+                                    **search_kw).result()
+                dead = np.setdiff1d(
+                    np.arange(len(oracle.src)), sorted(oracle.alive)
+                )
+                assert not np.isin(ids, dead).any()
+        compactor.wait_idle(30.0)
+    assert idx.n_live == len(oracle.alive)
+    _assert_matches_fresh_build(
+        setup, idx, oracle, backend, metric, search_kw
+    )
+
+
+def test_compactor_swap_is_epoch_guarded(setup):
+    """A mutation landing between snapshot and swap forces a retry:
+    the stale survivor build is dropped, the retry includes the
+    delta, and the counters record it."""
+    X, Qm, cfg, model, kb = setup
+    idx, eng = _mk(setup, n=200, max_wait_s=60.0)
+    comp = BackgroundCompactor(eng, max_dead_fraction=0.0)
+    try:
+        eng.submit_delete(np.arange(40)).result()
+        # race a mutation in between snapshot and swap by monkeypatching
+        # the backend compact to mutate mid-build
+        real_backend = idx._backend
+        raced = []
+
+        def racing_compact(state):
+            out = real_backend.compact(state)
+            if not raced:
+                raced.append(True)
+                idx.delete([50])  # lands after the snapshot
+            return out
+
+        class RacedBackend(real_backend):
+            compact = staticmethod(racing_compact)
+
+        idx._backend = RacedBackend
+        assert comp.run_once("default")
+        assert eng.stats.compact_retries == 1
+        assert eng.stats.compact_runs == 1
+        assert idx.n == 159 and idx.n_dead == 0  # delta included
+    finally:
+        comp.stop()
+
+
+def test_compactor_skips_below_threshold_and_empty(setup):
+    X, Qm, cfg, model, kb = setup
+    idx, eng = _mk(setup, n=100, max_wait_s=60.0)
+    comp = BackgroundCompactor(eng, max_dead_fraction=0.5)
+    try:
+        eng.submit_delete(np.arange(10)).result()
+        assert not comp.run_once("default")  # 10% < 50%
+        assert idx.n == 100 and idx.n_dead == 10
+        assert not comp.run_once("missing")  # unknown name: no-op
+        idx.delete(np.arange(100))  # all dead: never compact to empty
+        assert not comp.run_once("default")
+        assert idx.n == 100
+    finally:
+        comp.stop()
+
+
+def test_engine_auto_compact_routes_to_attached_compactor(setup):
+    """With a compactor attached, auto_compact only signals the
+    worker — the applying thread never compacts inline — and the
+    telemetry lands in the background counters."""
+    X, Qm, cfg, model, kb = setup
+    idx, eng = _mk(setup, n=200, max_wait_s=60.0, auto_compact=0.1)
+    with BackgroundCompactor(eng) as comp:
+        eng.submit_delete(np.arange(80)).result()
+        comp.wait_idle(30.0)
+    snap = eng.stats.snapshot()
+    assert snap["compactions"] == 0  # no synchronous eviction
+    assert snap["compaction"]["runs"] == 1
+    assert snap["compaction"]["swap_ms"] >= 0.0
+    assert idx.n == 120 and idx.n_dead == 0

@@ -6,16 +6,22 @@
 Health checks (always on) fail (exit 1) when a file is missing or
 malformed, contains no rows, or carries ERROR rows — so a benchmark
 function silently dying turns CI red instead of quietly truncating the
-perf trajectory.
+perf trajectory.  Rows carrying the concurrent-serving invariant pairs
+are also checked structurally: ``qps`` must not fall below
+``qps_single`` (concurrent clients sharing buckets can only help), and
+``p99_bg_compact_ms`` must stay strictly below ``p99_sync_compact_ms``
+(off-thread compaction must actually leave the serving path).
 
 Trajectory diffing (``--baseline DIR``) compares each file against the
 same-named snapshot in DIR row by row:
 
-  * ``us_per_call`` (lower is better) and the higher-is-better derived
-    throughputs (``qps`` plus any ``*_per_s`` rate, e.g. the mutation
-    rows' ``adds_per_s``/``deletes_per_s``) regressions beyond
-    ``--warn-ratio`` print WARN lines; beyond ``--fail-ratio`` they
-    fail the gate.
+  * ``us_per_call`` and the derived latencies (any ``*_ms`` metric:
+    ``p50_ms``/``p99_ms``/``worst_apply_ms``/...) are lower-is-better;
+    the higher-is-better derived throughputs (``qps`` plus any
+    ``*_per_s`` rate, e.g. the mutation rows'
+    ``adds_per_s``/``deletes_per_s``) invert the ratio.  Regressions
+    beyond ``--warn-ratio`` print WARN lines; beyond ``--fail-ratio``
+    they fail the gate.
   * rows present in the baseline but missing from the current file
     warn (the trajectory would silently truncate otherwise).
   * files whose ``quick`` mode differs from the baseline's are skipped
@@ -51,6 +57,34 @@ def _rows_of(doc: dict, path: str) -> list:
     return rows
 
 
+def _invariant_problems(path: str, r: dict) -> list[str]:
+    """Structural invariants on rows that carry the concurrent-serving
+    metric pairs (keyed on metric presence, not row names, so future
+    rows inherit the gate)."""
+    problems = []
+    der = r.get("derived") or {}
+
+    def _num(key):
+        v = der.get(key)
+        return v if isinstance(v, (int, float)) else None
+
+    qps, single = _num("qps"), _num("qps_single")
+    if qps is not None and single is not None and qps < single:
+        problems.append(
+            f"{path}: {r['name']} concurrent qps {qps:g} < "
+            f"single-caller qps {single:g} (batch sharing regressed)"
+        )
+    bg = _num("p99_bg_compact_ms")
+    sync = _num("p99_sync_compact_ms")
+    if bg is not None and sync is not None and bg >= sync:
+        problems.append(
+            f"{path}: {r['name']} p99_bg_compact_ms {bg:g} >= "
+            f"p99_sync_compact_ms {sync:g} (background compaction "
+            f"not off the serving path)"
+        )
+    return problems
+
+
 def check(path: str) -> list[str]:
     """Problems found in one bench JSON file ([] == healthy)."""
     try:
@@ -76,6 +110,8 @@ def check(path: str) -> list[str]:
             problems.append(
                 f"{path}: ERROR row {r['name']}: {r['error']}"
             )
+        else:
+            problems.extend(_invariant_problems(path, r))
     return problems
 
 
@@ -95,17 +131,24 @@ def _healthy_rows(doc: dict, path: str) -> dict[str, dict]:
 
 def _throughput_keys(derived: dict) -> list[str]:
     """Higher-is-better derived metrics: qps and any *_per_s rate
-    (adds_per_s / deletes_per_s on the mutation rows)."""
+    (adds_per_s / deletes_per_s on the mutation rows).  qps_single is
+    a reference point inside the concurrent row, not a trajectory."""
     return [
         k for k in derived
         if k == "qps" or k.endswith("_per_s")
     ]
 
 
+def _latency_keys(derived: dict) -> list[str]:
+    """Lower-is-better derived metrics: any *_ms latency
+    (p50_ms / p99_ms / worst_apply_ms / p99_*_compact_ms)."""
+    return [k for k in derived if k.endswith("_ms")]
+
+
 def _row_regressions(name: str, base: dict, cur: dict) -> list[tuple]:
     """[(metric, ratio)] regression factors for one row (ratio > 1 ==
-    slower); us_per_call is lower-better, derived throughputs
-    (qps, *_per_s) higher-better."""
+    slower); us_per_call and *_ms latencies are lower-better, derived
+    throughputs (qps, *_per_s) higher-better."""
     out = []
     b_us, c_us = base.get("us_per_call", 0), cur.get("us_per_call", 0)
     if b_us and c_us:  # rows timing nothing (us == 0) carry no signal
@@ -117,6 +160,11 @@ def _row_regressions(name: str, base: dict, cur: dict) -> list[tuple]:
         if isinstance(b_v, (int, float)) and isinstance(c_v, (int, float)) \
                 and b_v > 0 and c_v > 0:
             out.append((key, b_v / c_v))
+    for key in _latency_keys(b_der):
+        b_v, c_v = b_der.get(key), c_der.get(key)
+        if isinstance(b_v, (int, float)) and isinstance(c_v, (int, float)) \
+                and b_v > 0 and c_v > 0:
+            out.append((key, c_v / b_v))
     return out
 
 
