@@ -300,6 +300,37 @@ class IVFBackend:
         )
 
     @staticmethod
+    def probe_sets(state, prep, nprobe=None):
+        """Host-visible coarse assignment: (m, nprobe) int32 probed
+        list ids per query, best-first — exactly the lists the
+        gathered search scans at that nprobe (a smaller nprobe's set
+        is a column prefix).  The serving engine's candidate-row cost
+        model consumes these to dedup lists shared across a batch
+        group before splitting it against a row budget."""
+        nprobe = IVFBackend.resolve_nprobe(state, nprobe)
+        return np.asarray(IV._probe_lists(state, prep, nprobe))
+
+    @staticmethod
+    def search_probed(state, prep, probe, *, k, rerank=0):
+        """Top-k over an explicit probed-list set (budgeted gather
+        entry point); ``probe`` as returned by :meth:`probe_sets`."""
+        return IV._search_probed(
+            state, prep, jnp.asarray(probe, dtype=jnp.int32),
+            k=k, rerank=rerank,
+        )
+
+    @staticmethod
+    def list_sizes(state):
+        """Live row count per inverted list, host numpy (nlist,):
+        what probing a list costs the gathered scan.  Tombstoned rows
+        are dropped pre-DMA, so they bill as zero."""
+        inv = np.asarray(state.invlists)
+        valid = inv >= 0
+        if state.live is not None:
+            valid &= np.asarray(state.live)[np.maximum(inv, 0)]
+        return valid.sum(axis=1).astype(np.int64)
+
+    @staticmethod
     def add(state, X_new):
         return IV._add(state, X_new)
 

@@ -204,7 +204,25 @@ def _compact(index: IVFIndex) -> IVFIndex:
     )
 
 
-@functools.partial(jax.jit, static_argnames=("k", "nprobe", "rerank"))
+@jax.jit
+def _pad_single(prep: QueryPrep) -> QueryPrep:
+    """m=1 -> m=2 by appending an all-zero query row.
+
+    XLA lowers the degenerate single-query batch differently from
+    every m >= 2 (last-ulp score drift), which would break the serving
+    engine's bit-identity guarantee between per-request and bucketed
+    calls.  The pad runs as its OWN jit program — never fused into the
+    scoring trace — so the padded call dispatches the exact m=2
+    executable real two-query batches use; padding inside the scoring
+    trace would compile a third program ("pad then score") that XLA
+    again fuses its own way.  (Concatenation is pure data movement, so
+    a jitted pad emits bit-identical arrays to an eager one at a
+    fraction of the dispatch cost.)"""
+    return jax.tree_util.tree_map(
+        lambda a: jnp.concatenate([a, jnp.zeros_like(a)], axis=0), prep
+    )
+
+
 def _search_prepped(
     index: IVFIndex,
     prep: QueryPrep,
@@ -223,19 +241,16 @@ def _search_prepped(
     if nprobe >= index.invlists.shape[0]:
         return _full_scan(index, prep, k, rerank)
     if prep.q.shape[0] == 1:
-        # XLA lowers the degenerate single-query batch differently from
-        # every m >= 2 (last-ulp score drift), which would break the
-        # serving engine's bit-identity guarantee between per-request
-        # and bucketed calls; compute at m=2 and slice.
-        prep = jax.tree_util.tree_map(
-            lambda a: jnp.concatenate([a, jnp.zeros_like(a)], axis=0),
-            prep,
+        s, i = _score_gathered(
+            index, _pad_single(prep), k, nprobe, rerank
         )
-        s, i = _score_gathered(index, prep, k, nprobe, rerank)
         return s[:1], i[:1]
     return _score_gathered(index, prep, k, nprobe, rerank)
 
 
+@functools.partial(
+    jax.jit, static_argnames=("k", "rerank", "use_pallas")
+)
 def _full_scan(
     index: IVFIndex,
     prep: QueryPrep,
@@ -256,6 +271,21 @@ def _full_scan(
     )
 
 
+def _probe_lists(
+    index: IVFIndex, prep: QueryPrep, nprobe: int
+) -> jax.Array:
+    """Coarse assignment: the ``nprobe`` nearest centroids per query,
+    best-first.  Nearest by L2 == max <q,mu> - ||mu||^2/2, computed
+    from the prep's landmark inner products (already materialized for
+    residual centering), so exposing it costs one top-k."""
+    coarse = (
+        prep.ip_q_landmarks
+        - 0.5 * index.model.landmark_sq_norms[None, :]
+    )
+    return jax.lax.top_k(coarse, nprobe)[1]  # (m, nprobe)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "nprobe", "rerank"))
 def _score_gathered(
     index: IVFIndex,
     prep: QueryPrep,
@@ -263,17 +293,63 @@ def _score_gathered(
     nprobe: int,
     rerank: int,
 ) -> tuple[jax.Array, jax.Array]:
-    """Partial probes: gather each query's candidate lists and lower to
-    a gathered ``ScanPlan`` — the masked-gather kernel family scores
-    straight off the packed codes (pad ids mask to ``-inf``) and fuses
-    the selection; no (m, nprobe*L) score matrix reaches HBM on TPU."""
+    """Partial probes: coarse-route, then score the probed lists."""
+    probe = _probe_lists(index, prep, nprobe)
+    return _score_probed_impl(index, prep, probe, k, rerank)
+
+
+def _search_probed(
+    index: IVFIndex,
+    prep: QueryPrep,
+    probe: jax.Array,
+    k: int = 10,
+    rerank: int = 0,
+) -> tuple[jax.Array, jax.Array]:
+    """Top-k over an explicit probed-list set (budgeted gather).
+
+    ``probe`` is (m, nprobe) int32 list ids per query — callers that
+    already hold the coarse assignment (the serving engine's
+    candidate-row cost model computes it host-side to plan row
+    budgets) skip the in-jit coarse top-k and land on the same
+    gathered ``ScanPlan`` lowering as ``_search_prepped``.
+    Bit-identical to it when ``probe`` equals the coarse assignment."""
+    if prep.q.shape[0] == 1:
+        # mirror _search_prepped's eager m=1 -> 2 padding (see
+        # _pad_single); the pad row's probe must be the zero-query's
+        # coarse assignment — not an arbitrary filler — for the padded
+        # batch to match _search_prepped's bit-for-bit
+        prep = _pad_single(prep)
+        pad_probe = _probe_lists(index, prep, probe.shape[1])[1:]
+        probe = jnp.concatenate([probe, pad_probe], axis=0)
+        s, i = _score_probed(index, prep, probe, k, rerank)
+        return s[:1], i[:1]
+    return _score_probed(index, prep, probe, k, rerank)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "rerank"))
+def _score_probed(
+    index: IVFIndex,
+    prep: QueryPrep,
+    probe: jax.Array,
+    k: int = 10,
+    rerank: int = 0,
+) -> tuple[jax.Array, jax.Array]:
+    """Jit entry over :func:`_score_probed_impl` for explicit probes."""
+    return _score_probed_impl(index, prep, probe, k, rerank)
+
+
+def _score_probed_impl(
+    index: IVFIndex,
+    prep: QueryPrep,
+    probe: jax.Array,
+    k: int,
+    rerank: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Gather each query's candidate lists and lower to a gathered
+    ``ScanPlan`` — the masked-gather kernel family scores straight off
+    the packed codes (pad ids mask to ``-inf``) and fuses the
+    selection; no (m, nprobe*L) score matrix reaches HBM on TPU."""
     m = prep.q.shape[0]
-    # coarse routing: nearest centroids by L2 (== max <q,mu> - ||mu||^2/2)
-    coarse = (
-        prep.ip_q_landmarks
-        - 0.5 * index.model.landmark_sq_norms[None, :]
-    )
-    _, probe = jax.lax.top_k(coarse, nprobe)  # (m, nprobe)
     cand_rows = index.invlists[probe].reshape(m, -1)  # (m, nprobe*L)
     if index.live is not None:
         # drop tombstoned rows pre-DMA: mapped to the -1 pad id, the

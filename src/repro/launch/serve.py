@@ -58,6 +58,16 @@ def _print_engine_report(engine, mut_tickets=()):
           f"oldest_ticket={1e3 * snap['oldest_ticket_age_s']:.2f}ms "
           f"deadline_missed={snap['deadline_missed']} "
           f"flushes: {reasons or 'none'}")
+    ic = snap.get("ivf_cost", {})
+    if ic.get("effective_nprobe") or ic.get("splits"):
+        eff = ", ".join(
+            f"nprobe={n}:{c}" for n, c in sorted(
+                ic["effective_nprobe"].items(), key=lambda kv: int(kv[0])
+            )
+        )
+        print(f"[ivf-cost] rows_per_q={ic['rows_per_query']} "
+              f"splits={ic['splits']} degraded={ic['degraded']} "
+              f"flushes: {eff or 'none'}")
     comp = snap["compaction"]
     if comp["runs"] or comp["retries"] or snap["compactions"]:
         print(f"[compaction] background runs={comp['runs']} "
@@ -230,6 +240,17 @@ def main(argv=None):
     p.add_argument("--metric", choices=("dot", "l2", "cos"),
                    default="dot")
     p.add_argument("--nprobe", type=int, default=8)
+    p.add_argument("--row-budget", type=int, default=None,
+                   help="IVF cost model: cap the deduped candidate-row "
+                        "bill per fused call — over-budget groups "
+                        "flush early and split into within-budget "
+                        "sub-batches (requires --engine ivf)")
+    p.add_argument("--adaptive-nprobe", type=int, default=None,
+                   metavar="NPROBE_MIN",
+                   help="scale nprobe down a halving ladder toward "
+                        "this floor under queue pressure, trading "
+                        "recall for tail latency (requires "
+                        "--engine ivf)")
     p.add_argument("--rerank", type=int, default=0)
     p.add_argument("--mutate-fraction", type=float, default=0.0,
                    help="fraction of stream slots that carry a "
@@ -278,11 +299,20 @@ def main(argv=None):
 
     gt_s, gt_i = MET.exact_topk(Q, X, k=10, metric=args.metric)
 
+    engine_kw = {}
+    if args.row_budget is not None:
+        engine_kw["row_budget"] = args.row_budget
+    if args.adaptive_nprobe is not None:
+        engine_kw["nprobe_min"] = args.adaptive_nprobe
+    if engine_kw and args.engine != "ivf":
+        p.error("--row-budget/--adaptive-nprobe require --engine ivf")
+
     buckets = tuple(int(b) for b in args.buckets.split(","))
     engine = QueryEngine(
         index, batch_buckets=buckets,
         max_wait_s=args.max_wait_ms / 1e3,
         auto_compact=args.auto_compact,
+        **engine_kw,
     )
     search_kw = dict(nprobe=args.nprobe, rerank=args.rerank)
 
@@ -300,6 +330,16 @@ def main(argv=None):
     )
     for b in buckets:
         warm.search(Q[: min(b, args.queries)], k=100, **search_kw)
+    if args.adaptive_nprobe is not None:
+        # under pressure flushes walk the halving ladder from --nprobe
+        # down to the floor; compile every rung now so a degraded
+        # flush never charges a fresh trace to a live ticket
+        n_w = args.nprobe
+        while n_w > args.adaptive_nprobe:
+            n_w = max(args.adaptive_nprobe, n_w // 2)
+            for b in buckets:
+                warm.search(Q[: min(b, args.queries)], k=100,
+                            nprobe=n_w, rerank=args.rerank)
 
     if args.concurrent:
         return _run_concurrent(args, index, engine, Q, search_kw)

@@ -131,6 +131,23 @@ class EngineConfig:
     ``prep_cache_entries`` is an optional additional row-count bound
     (None = rows limited by bytes only).  Setting either to 0 disables
     the cache.
+
+    ``row_budget`` / ``nprobe_min`` are the IVF tail-latency knobs.
+    ``row_budget`` caps the deduped candidate-row bill (union of live
+    rows across the probed lists of every query in a fused call) of
+    each IVF sub-batch: groups whose bill exceeds it flush early
+    (reason "budget") and split into within-budget sub-batches, so one
+    fused gather never serializes an unbounded scan behind every
+    ticket in the group.  Both the early flush and the split respect a
+    batch-bucket floor — a chunk below the smallest bucket pads back
+    up to it, so cutting finer would add dispatches without shrinking
+    any gather.  ``nprobe_min`` arms load-adaptive probing:
+    under queue pressure (see :meth:`QueryEngine.queue_pressure`)
+    flushes walk a halving ladder from the requested nprobe down to
+    ``nprobe_min``, trading recall for latency; the trade is surfaced
+    in ``snapshot()["ivf_cost"]``.  ``pressure_age_s`` is the
+    oldest-ticket age treated as pressure 1.0 (None = 10x
+    ``max_wait_s``).  Both knobs default off (None).
     """
 
     batch_buckets: Tuple[int, ...] = (8, 32, 128)
@@ -139,6 +156,12 @@ class EngineConfig:
     max_wait_s: float = 0.002  # flush-on-timeout age
     prep_cache_bytes: int = 64 << 20  # LRU byte budget; 0 disables
     prep_cache_entries: Optional[int] = None  # extra row bound; 0 disables
+    # IVF cost model: candidate-row bill cap per fused call (None = off)
+    row_budget: Optional[int] = None
+    # load-adaptive probing floor (None = never degrade nprobe)
+    nprobe_min: Optional[int] = None
+    # oldest-ticket age mapping to pressure 1.0 (None = 10x max_wait_s)
+    pressure_age_s: Optional[float] = None
     # mutation backlog bound, in staged add rows + queued delete ids:
     # past it the batch applies immediately instead of waiting for the
     # next query flush / poll timeout
@@ -176,6 +199,18 @@ class EngineConfig:
             raise ValueError(
                 f"auto_compact must be in [0, 1): {self.auto_compact}"
             )
+        if self.row_budget is not None and self.row_budget < 1:
+            raise ValueError(
+                f"row_budget must be >= 1: {self.row_budget}"
+            )
+        if self.nprobe_min is not None and self.nprobe_min < 1:
+            raise ValueError(
+                f"nprobe_min must be >= 1: {self.nprobe_min}"
+            )
+        if self.pressure_age_s is not None and self.pressure_age_s <= 0:
+            raise ValueError(
+                f"pressure_age_s must be > 0: {self.pressure_age_s}"
+            )
 
     @property
     def prep_cache_enabled(self) -> bool:
@@ -211,16 +246,23 @@ class RequestStats:
     scoring_us: float = 0.0  # fused scoring call, whole bucket
     prep_hits: int = 0  # this request's rows found in the prep cache
     prep_misses: int = 0
-    # "size" | "timeout" | "deadline" | "manual" | "pressure" |
-    # "barrier" (the group was flushed because a mutation arrived for
-    # its index) | "drain" (frontend shutdown served the backlog)
+    # "size" | "budget" (the group's deduped candidate-row bill hit
+    # EngineConfig.row_budget) | "timeout" | "deadline" | "manual" |
+    # "pressure" | "barrier" (the group was flushed because a mutation
+    # arrived for its index) | "drain" (frontend shutdown served the
+    # backlog)
     flush_reason: str = ""
     deadline_missed: bool = False  # resolved after its flush-by deadline
+    # IVF cost model (0 when off / non-IVF): the nprobe this request's
+    # fused call actually probed, and the deduped candidate-row bill of
+    # its sub-batch
+    effective_nprobe: int = 0
+    scanned_rows: int = 0
 
 
 _FLUSH_REASONS = (
-    "size", "timeout", "deadline", "manual", "pressure", "barrier",
-    "drain",
+    "size", "budget", "timeout", "deadline", "manual", "pressure",
+    "barrier", "drain",
 )
 
 
@@ -253,6 +295,19 @@ class EngineStats:
     compact_swap_ms: float = 0.0  # cumulative atomic-swap time
     compact_blocked_ms: float = 0.0  # cumulative wait to acquire the
     # mutation barrier at swap time — serving-path time compaction cost
+    # IVF cost model: sub-batches created by the row budget beyond the
+    # bucket chunking, fused calls run below the requested nprobe, the
+    # cumulative deduped candidate-row bill and the query rows it
+    # covered, and a fused-call histogram per effective nprobe (the
+    # recall-trade surface: degraded probes show up as mass below the
+    # requested nprobe)
+    ivf_splits: int = 0
+    ivf_degraded: int = 0
+    ivf_scanned_rows: int = 0
+    ivf_queries: int = 0
+    effective_nprobe: Dict[int, int] = dataclasses.field(
+        default_factory=dict
+    )
     flushes: Dict[str, int] = dataclasses.field(
         default_factory=lambda: {r: 0 for r in _FLUSH_REASONS}
     )
@@ -289,6 +344,18 @@ class EngineStats:
                 "retries": self.compact_retries,
                 "swap_ms": round(self.compact_swap_ms, 3),
                 "blocked_ms": round(self.compact_blocked_ms, 3),
+            },
+            "ivf_cost": {
+                "splits": self.ivf_splits,
+                "degraded": self.ivf_degraded,
+                "scanned_rows": self.ivf_scanned_rows,
+                "rows_per_query": round(
+                    self.ivf_scanned_rows / max(1, self.ivf_queries), 1
+                ),
+                "effective_nprobe": {
+                    str(n): c
+                    for n, c in sorted(self.effective_nprobe.items())
+                },
             },
             "flushes": dict(self.flushes),
             "unique_buckets": len(self.compiled_buckets),
@@ -444,6 +511,12 @@ class _Request:
     ticket: Ticket
     t_enqueue: float
     deadline: Optional[float] = None  # absolute flush-by time
+    # IVF cost model: (m, nprobe) host-side coarse assignment,
+    # best-first, computed at submit.  Advisory — it drives row
+    # accounting (budget trigger + split planning) only; execution
+    # recomputes the exact assignment in-jit, so a last-ulp routing
+    # difference can never change results
+    probe: Optional[np.ndarray] = None
 
 
 class QueryEngine:
@@ -478,6 +551,23 @@ class QueryEngine:
         self._add_tickets: Dict[str, list] = {}
         self._pending_deletes: Dict[str, list] = {}
         self._mutation_t0: Dict[str, float] = {}
+        # IVF cost-model caches: per-index host copies of the coarse
+        # quantizer (landmarks^T, 0.5*||mu||^2) and per-mutation-epoch
+        # live list sizes
+        self._coarse_parts: Dict[str, tuple] = {}
+        self._list_sizes: Dict[str, tuple] = {}
+        # (name, row digest) -> full best-first list order.  Coarse
+        # assignment depends only on the landmarks (fixed per binding;
+        # mutations never move them), so repeated queries skip the
+        # host matmul+argsort entirely; storing the FULL order makes
+        # hits nprobe-independent (a degraded probe reads a prefix)
+        self._probe_orders: "OrderedDict[tuple, np.ndarray]" = \
+            OrderedDict()
+        # per-group running bill: group -> (mutation epoch, probed-list
+        # mask, billed live rows).  submit() folds each new probe in
+        # incrementally so the budget check stays O(nprobe) per request
+        # instead of re-deduping the whole group's probes every time
+        self._group_bills: Dict[tuple, tuple] = {}
         # set by ServingFrontend: when True, submit() signals the
         # driver instead of flushing inline and result() only waits
         self.driven = False
@@ -514,6 +604,12 @@ class QueryEngine:
             self.invalidate_prep_cache(name)
         with self._lock:
             self._indexes[name] = index
+            self._coarse_parts.pop(name, None)
+            self._list_sizes.pop(name, None)
+            for key in [k for k in self._probe_orders if k[0] == name]:
+                del self._probe_orders[key]
+            for g in [g for g in self._group_bills if g[0] == name]:
+                del self._group_bills[g]
         return self
 
     def index(self, name: str = "default") -> AshIndex:
@@ -551,6 +647,213 @@ class QueryEngine:
         """Current byte footprint of the prep LRU (for capacity
         planning against ``EngineConfig.prep_cache_bytes``)."""
         return self._prep_cache_nbytes
+
+    # -- IVF candidate-row cost model ---------------------------------
+
+    def queue_pressure(self) -> float:
+        """Load signal in [0, 1]: the max of queue fill (queued query
+        rows vs ``max_pending``) and oldest-ticket age vs the pressure
+        horizon (``pressure_age_s``, default 10x ``max_wait_s``) —
+        the same gauges ``snapshot()`` reports as ``queue_depth`` /
+        ``oldest_ticket_age_s``.  The frontend driver samples it once
+        per tick and threads it through ``flush_ready``/``poll``; the
+        load-adaptive ladder maps it to an effective nprobe."""
+        cfg = self.config
+        horizon = cfg.pressure_age_s
+        if horizon is None:
+            horizon = 10.0 * cfg.max_wait_s
+        now = time.perf_counter()
+        with self._lock:
+            depth = self._pending_rows / max(1, cfg.max_pending)
+            oldest = min(
+                (reqs[0].t_enqueue for reqs in self._pending.values()
+                 if reqs),
+                default=None,
+            )
+        age = (
+            0.0 if oldest is None
+            else (now - oldest) / max(horizon, 1e-9)
+        )
+        return float(min(1.0, max(depth, age, 0.0)))
+
+    def _effective_nprobe(self, nprobe: int, pressure: float) -> int:
+        """Load-adaptive probing: walk a halving ladder from the
+        requested ``nprobe`` down to ``nprobe_min`` as pressure rises.
+        Pressure below 1/len(ladder) never degrades (an idle queue
+        always serves full fidelity), pressure 1.0 lands on the floor;
+        the ladder is a small closed set, so degraded flushes stay on
+        a bounded family of jit traces."""
+        lo = self.config.nprobe_min
+        if lo is None or nprobe <= lo or pressure <= 0.0:
+            return nprobe
+        ladder = [nprobe]
+        while ladder[-1] > lo:
+            ladder.append(max(lo, ladder[-1] // 2))
+        rung = min(int(min(pressure, 1.0) * len(ladder)),
+                   len(ladder) - 1)
+        return ladder[rung]
+
+    def _cost_model_on(self, idx: AshIndex, nprobe) -> bool:
+        """The cost model engages for partial-probe IVF groups when
+        either knob is armed.  nprobe >= nlist runs the dense
+        full-scan path — no gather to budget."""
+        cfg = self.config
+        return (
+            idx.backend == "ivf"
+            and nprobe is not None
+            and nprobe < idx._state.invlists.shape[0]
+            and (cfg.row_budget is not None
+                 or cfg.nprobe_min is not None)
+        )
+
+    def _host_probe(
+        self, name: str, idx: AshIndex, q: np.ndarray, nprobe: int
+    ) -> np.ndarray:
+        """Approximate coarse assignment, host numpy: (m, nprobe) list
+        ids, best-first (so a degraded nprobe reads a column prefix).
+        Matches the in-jit routing up to matmul summation order —
+        plenty for row accounting, and never touched by execution.
+        Single-row probes (the dominant serving shape) are served from
+        a per-query LRU of full list orders when the traffic repeats."""
+        pkey = None
+        if q.shape[0] == 1:
+            pkey = (name, hashlib.blake2b(
+                q.tobytes(), digest_size=16).digest())
+            with self._lock:
+                order = self._probe_orders.get(pkey)
+                if order is not None:
+                    self._probe_orders.move_to_end(pkey)
+                    return order[None, :nprobe]
+        with self._lock:
+            parts = self._coarse_parts.get(name)
+        if parts is None:
+            st = idx._state
+            lm_t = np.ascontiguousarray(
+                np.asarray(st.model.landmarks, dtype=np.float32).T
+            )
+            half = 0.5 * np.asarray(
+                st.model.landmark_sq_norms, dtype=np.float32
+            )
+            parts = (lm_t, half)
+            with self._lock:
+                self._coarse_parts[name] = parts
+        lm_t, half = parts
+        coarse = q @ lm_t - half[None, :]
+        if pkey is not None:
+            # single-row fast path: a full argsort of one nlist-sized
+            # row beats partition + gather, and caching the whole
+            # order serves any later nprobe as a prefix
+            order = np.argsort(-coarse[0], kind="stable").astype(
+                np.int32)
+            with self._lock:
+                self._probe_orders[pkey] = order
+                while len(self._probe_orders) > 8192:
+                    self._probe_orders.popitem(last=False)
+            return order[None, :nprobe]
+        if nprobe >= coarse.shape[1]:
+            order = np.argsort(-coarse, axis=1, kind="stable")
+            return order[:, :nprobe].astype(np.int32)
+        part = np.argpartition(-coarse, nprobe - 1, axis=1)[:, :nprobe]
+        vals = np.take_along_axis(coarse, part, axis=1)
+        order = np.argsort(-vals, axis=1, kind="stable")
+        return np.take_along_axis(part, order, axis=1).astype(np.int32)
+
+    def _live_list_sizes(self, name: str, idx: AshIndex) -> np.ndarray:
+        """(nlist,) live rows per inverted list — the price of probing
+        each list — cached per mutation epoch."""
+        epoch = idx.mutation_epoch
+        with self._lock:
+            cached = self._list_sizes.get(name)
+            if cached is not None and cached[0] == epoch:
+                return cached[1]
+        sizes = IVFBackend.list_sizes(idx._state)
+        with self._lock:
+            self._list_sizes[name] = (epoch, sizes)
+        return sizes
+
+    def _union_bill(
+        self, sizes: np.ndarray, probes: "list[np.ndarray]"
+    ) -> int:
+        """Deduped candidate-row bill: total live rows across the
+        union of the probed lists (a list shared by several queries is
+        billed once — correlated traffic batches further under the
+        same budget than uncorrelated traffic)."""
+        if not probes:
+            return 0
+        lists = np.unique(np.concatenate([p.ravel() for p in probes]))
+        lists = lists[(lists >= 0) & (lists < sizes.size)]
+        return int(sizes[lists].sum())
+
+    @staticmethod
+    def _fold_bill(
+        sizes: np.ndarray, mask: np.ndarray, billed: int,
+        probe: np.ndarray,
+    ) -> int:
+        """Fold one probe into a (mask, billed) accumulator in place:
+        bill only the lists not yet marked, mark them.  Equivalent to
+        re-running :meth:`_union_bill` over every folded probe."""
+        if probe.ndim == 2 and probe.shape[0] == 1:
+            # single-row probes (the dominant serving shape) hold
+            # distinct lists by construction — skip the sort-dedup
+            lists = probe.ravel()
+        else:
+            lists = np.unique(probe.ravel())
+        lists = lists[(lists >= 0) & (lists < sizes.size)]
+        fresh = lists[~mask[lists]]
+        mask[fresh] = True
+        return billed + int(sizes[fresh].sum())
+
+    def _bill_probe(
+        self, group: tuple, name: str, idx: AshIndex,
+        probe: np.ndarray,
+    ) -> None:
+        """Account a newly queued probe against the group's cached
+        running bill (caller holds the lock; the request is already
+        queued).  Fresh cache: one O(nprobe) fold.  Missing or
+        epoch-stale cache (first probe, or a mutation changed the
+        list sizes): rebuild from everything queued."""
+        epoch = idx.mutation_epoch
+        sizes = self._live_list_sizes(name, idx)
+        cached = self._group_bills.get(group)
+        if cached is not None and cached[0] == epoch:
+            _, mask, billed = cached
+            billed = self._fold_bill(sizes, mask, billed, probe)
+        else:
+            mask = np.zeros(sizes.size, dtype=bool)
+            billed = 0
+            for r in self._pending.get(group, ()):
+                if r.probe is not None:
+                    billed = self._fold_bill(
+                        sizes, mask, billed, r.probe
+                    )
+        self._group_bills[group] = (epoch, mask, billed)
+
+    def _group_over_budget(self, group: tuple) -> bool:
+        """Whether the group's queued probes already bill past
+        ``row_budget`` (caller holds the lock).  Served from the
+        running bill when its mutation epoch is current; otherwise
+        re-deduped from the queue.  A group that cannot yet fill the
+        smallest batch bucket is never budget-flushed: its fused call
+        pads up to that bucket regardless, so flushing early would
+        only lower the fill without shrinking the gather."""
+        budget = self.config.row_budget
+        if budget is None:
+            return False
+        if self._group_rows(group) < self.config.batch_buckets[0]:
+            return False
+        name = group[0]
+        idx = self._indexes.get(name)
+        if idx is None:
+            return False
+        cached = self._group_bills.get(group)
+        if cached is not None and cached[0] == idx.mutation_epoch:
+            return cached[2] > budget
+        reqs = self._pending.get(group, ())
+        probes = [r.probe for r in reqs if r.probe is not None]
+        if not probes:
+            return False
+        sizes = self._live_list_sizes(name, idx)
+        return self._union_bill(sizes, probes) > budget
 
     # -- request intake -----------------------------------------------
 
@@ -623,13 +926,19 @@ class QueryEngine:
             if pressured:
                 self._try_flush(self._flush_all, "pressure")
 
+        probe = None
+        if self._cost_model_on(idx, nprobe):
+            probe = self._host_probe(index, idx, q, nprobe)
+
         now = time.perf_counter()
         deadline = None if deadline_s is None else now + deadline_s
         ticket = Ticket(self, group, k, q.shape[0], deadline)
         with self._lock:
             self._pending.setdefault(group, []).append(
-                _Request(q, k, ticket, now, deadline)
+                _Request(q, k, ticket, now, deadline, probe)
             )
+            if probe is not None:
+                self._bill_probe(group, index, idx, probe)
             self._pending_rows += q.shape[0]
             self.stats.requests += 1
             self.stats.queue_hwm = max(
@@ -639,13 +948,30 @@ class QueryEngine:
                 self._group_rows(group) >= self.config.batch_buckets[-1]
             )
             over_bound = self._pending_rows > self.config.max_pending
+            # cost model: a group whose deduped candidate-row bill
+            # already exceeds the budget gains nothing by waiting for
+            # the bucket to fill — every extra query only deepens the
+            # serialized gather behind all its tickets
+            budget_full = (
+                not group_full
+                and probe is not None
+                and self._group_over_budget(group)
+            )
 
         if driven:
-            self._notify_work()
+            # wake the driver only when this submit made something
+            # flushable — a fillable bucket, an over-budget bill, or
+            # queue pressure.  Sub-bucket groups ride the driver's
+            # poll tick instead (bounded by poll_interval_s), so a
+            # burst of submits costs one driver scan, not one per row
+            if group_full or budget_full or over_bound:
+                self._notify_work()
         elif group_full or over_bound:
             # bucket fillable, or a single request alone exceeds the
             # queue bound: serve now rather than sit past max_pending
             self._try_flush(self._flush_group, group, "size")
+        elif budget_full:
+            self._try_flush(self._flush_group, group, "budget")
         else:
             self._try_flush(self.poll)
         return ticket
@@ -803,14 +1129,16 @@ class QueryEngine:
 
     # -- flushing -----------------------------------------------------
 
-    def poll(self) -> int:
+    def poll(self, pressure: Optional[float] = None) -> int:
         """Flush groups whose oldest request exceeded ``max_wait_s``
         ("timeout") or whose earliest flush-by deadline arrived
         ("deadline"), and apply mutation batches older than
         ``max_wait_s``.  Call this from the serving loop's idle path
-        (the ``ServingFrontend`` driver calls it on every tick).
-        Returns the number of requests completed (mutations resolve
-        their own tickets)."""
+        (the ``ServingFrontend`` driver calls it on every tick,
+        passing its per-tick ``queue_pressure()`` sample so
+        load-adaptive probing sees the pre-flush backlog).  Returns
+        the number of requests completed (mutations resolve their own
+        tickets)."""
         now = time.perf_counter()
         due = []
         with self._lock:
@@ -831,25 +1159,35 @@ class QueryEngine:
             ]
         done = 0
         for group, reason in due:
-            done += self._flush_group(group, reason)
+            done += self._flush_group(group, reason, pressure)
         for name in aged:
             self._apply_mutations(name)
         return done
 
-    def flush_ready(self) -> int:
-        """Driver-facing size/pressure cadence: flush every group that
-        can fill the largest bucket ("size"), and — as a safety net if
-        the queue bound is exceeded — everything ("pressure").
-        Returns requests completed."""
+    def flush_ready(self, pressure: Optional[float] = None) -> int:
+        """Driver-facing size/budget/pressure cadence: flush every
+        group that can fill the largest bucket ("size") or whose
+        deduped candidate-row bill exceeds ``row_budget`` ("budget"),
+        and — as a safety net if the queue bound is exceeded —
+        everything ("pressure").  Returns requests completed."""
         with self._lock:
             big = self.config.batch_buckets[-1]
-            ready = [g for g in self._pending if self._group_rows(g) >= big]
+            ready = [
+                (g, "size") for g in self._pending
+                if self._group_rows(g) >= big
+            ]
+            if self.config.row_budget is not None:
+                seen = {g for g, _ in ready}
+                ready += [
+                    (g, "budget") for g in self._pending
+                    if g not in seen and self._group_over_budget(g)
+                ]
             pressured = self._pending_rows > self.config.max_pending
         done = 0
-        for group in ready:
-            done += self._flush_group(group, "size")
+        for group, reason in ready:
+            done += self._flush_group(group, reason, pressure)
         if pressured:
-            done += self._flush_all("pressure")
+            done += self._flush_all("pressure", pressure)
         return done
 
     def flush(self) -> int:
@@ -871,12 +1209,14 @@ class QueryEngine:
             self._apply_mutations(name)
         return done
 
-    def _flush_all(self, reason: str) -> int:
+    def _flush_all(
+        self, reason: str, pressure: Optional[float] = None
+    ) -> int:
         done = 0
         with self._lock:
             groups = list(self._pending)
         for group in groups:
-            done += self._flush_group(group, reason)
+            done += self._flush_group(group, reason, pressure)
         return done
 
     @staticmethod
@@ -910,17 +1250,27 @@ class QueryEngine:
     def _live_gauges(self) -> Dict[str, Any]:
         """Live queue gauges merged into ``stats.snapshot()``."""
         now = time.perf_counter()
+        cfg = self.config
+        horizon = cfg.pressure_age_s
+        if horizon is None:
+            horizon = 10.0 * cfg.max_wait_s
         with self._lock:
             oldest = min(
                 (r.t_enqueue for reqs in self._pending.values()
                  for r in reqs),
                 default=None,
             )
+            age = 0.0 if oldest is None else now - oldest
+            pressure = min(1.0, max(
+                self._pending_rows / max(1, cfg.max_pending),
+                age / max(horizon, 1e-9),
+            ))
             return {
                 "queue_depth": self._pending_rows,
                 "oldest_ticket_age_s": (
-                    0.0 if oldest is None else round(now - oldest, 6)
+                    0.0 if oldest is None else round(age, 6)
                 ),
+                "queue_pressure": round(pressure, 4),
             }
 
     def _notify_work(self) -> None:
@@ -941,6 +1291,7 @@ class QueryEngine:
         with self._lock:
             popped = list(self._pending.items())
             self._pending.clear()
+            self._group_bills.clear()
             self._pending_rows = 0
             self._space.notify_all()
         n = 0
@@ -950,8 +1301,15 @@ class QueryEngine:
                 n += 1
         return n
 
-    def _flush_group(self, group: tuple, reason: str) -> int:
+    def _flush_group(
+        self, group: tuple, reason: str,
+        pressure: Optional[float] = None,
+    ) -> int:
         name = group[0]
+        if pressure is None and self.config.nprobe_min is not None:
+            # undriven flush with adaptive probing armed: sample the
+            # backlog before popping this group out of it
+            pressure = self.queue_pressure()
         with self.mutation_barrier(name):
             with self._lock:
                 queued = group in self._pending
@@ -967,6 +1325,7 @@ class QueryEngine:
                 self._apply_mutations(name)
             with self._lock:
                 reqs = self._pending.pop(group, None)
+                self._group_bills.pop(group, None)
                 if not reqs:
                     return 0
                 self._pending_rows -= sum(
@@ -974,22 +1333,15 @@ class QueryEngine:
                 )
                 self.stats.flushes[reason] += 1
                 self._space.notify_all()  # queue rows freed
-            # chunk FIFO so no batch exceeds the largest bucket (a
-            # single oversized request still rides alone, padded to a
-            # multiple)
-            big = self.config.batch_buckets[-1]
-            chunks: list[list[_Request]] = [[]]
-            rows = 0
-            for r in reqs:
-                m = r.queries.shape[0]
-                if chunks[-1] and rows + m > big:
-                    chunks.append([])
-                    rows = 0
-                chunks[-1].append(r)
-                rows += m
+            eff_nprobe, chunks, bills = self._plan_chunks(
+                group, reqs, pressure
+            )
             for i, chunk in enumerate(chunks):
                 try:
-                    self._run_batch(group, chunk, reason)
+                    self._run_batch(
+                        group, chunk, reason,
+                        eff_nprobe=eff_nprobe, billed=bills[i],
+                    )
                 except Exception as e:
                     # the failed chunk's tickets carry the error
                     # already (_run_batch); later chunks were popped
@@ -1002,12 +1354,116 @@ class QueryEngine:
                     raise
             return len(reqs)
 
+    def _plan_chunks(
+        self,
+        group: tuple,
+        reqs: "list[_Request]",
+        pressure: Optional[float],
+    ) -> Tuple[Optional[int], "list[list[_Request]]", "list[int]"]:
+        """Sub-batch a popped group for execution.
+
+        Always: FIFO chunks bounded by the largest bucket (a single
+        oversized request still rides alone, padded to a multiple).
+        IVF cost model: each chunk's deduped candidate-row bill (union
+        of live rows across its queries' probed lists) additionally
+        stays within ``row_budget`` — queries sharing lists batch
+        together cheaply, disjoint ones split — and under queue
+        pressure the whole flush degrades to the ladder's effective
+        nprobe (billed on the probe column prefix).  A budget split
+        never cuts a chunk below the smallest bucket: such a chunk
+        pads back up to that bucket anyway, so the split would add a
+        dispatch without shrinking any gather.  The budget's bite is
+        keeping a backlogged group off the big bucket — one
+        serialized monster gather becomes several small-bucket calls.
+        Returns (effective nprobe or None, chunks, per-chunk bills).
+        """
+        name, nprobe, _, _, _ = group
+        big = self.config.batch_buckets[-1]
+        small = self.config.batch_buckets[0]
+        probes = [r.probe for r in reqs]
+        costed = nprobe is not None and all(
+            p is not None for p in probes
+        )
+        eff = nprobe
+        budget = None
+        sizes = None
+        if costed:
+            if self.config.nprobe_min is not None:
+                eff = self._effective_nprobe(
+                    nprobe, pressure if pressure is not None else 0.0
+                )
+            budget = self.config.row_budget
+            idx = self._indexes.get(name)
+            costed = idx is not None
+            if costed:
+                sizes = self._live_list_sizes(name, idx)
+
+        chunks: "list[list[_Request]]" = [[]]
+        bills: "list[int]" = [0]
+        rows = 0
+        # running union of the current chunk's probed lists, folded
+        # incrementally (one O(nprobe) mask probe per request, not a
+        # re-dedup of the whole chunk per request)
+        mask = np.zeros(sizes.size, dtype=bool) if costed else None
+        splits = 0
+        for r in reqs:
+            m = r.queries.shape[0]
+            lists = None
+            if costed and r.probe is not None:
+                p = r.probe[:, :eff] if eff < r.probe.shape[1] \
+                    else r.probe
+                lists = np.unique(p.ravel())
+                lists = lists[(lists >= 0) & (lists < sizes.size)]
+            over_rows = bool(chunks[-1]) and rows + m > big
+            over_budget = False
+            if not over_rows and lists is not None \
+                    and budget is not None and chunks[-1] \
+                    and rows >= small:
+                fresh = lists[~mask[lists]]
+                over_budget = (
+                    bills[-1] + int(sizes[fresh].sum()) > budget
+                )
+            if over_rows or over_budget:
+                if over_budget:
+                    splits += 1
+                chunks.append([])
+                bills.append(0)
+                rows = 0
+                if mask is not None:
+                    mask[:] = False
+            chunks[-1].append(r)
+            rows += m
+            if lists is not None:
+                fresh = lists[~mask[lists]]
+                mask[fresh] = True
+                bills[-1] += int(sizes[fresh].sum())
+
+        if costed:
+            with self._lock:
+                self.stats.ivf_splits += splits
+                self.stats.ivf_scanned_rows += sum(bills)
+                self.stats.ivf_queries += sum(
+                    r.queries.shape[0] for r in reqs
+                )
+                self.stats.effective_nprobe[eff] = (
+                    self.stats.effective_nprobe.get(eff, 0)
+                    + len(chunks)
+                )
+                if eff < nprobe:
+                    self.stats.ivf_degraded += len(chunks)
+        return (eff if costed else nprobe), chunks, bills
+
     # -- the fused scoring call ---------------------------------------
 
     def _run_batch(
-        self, group: tuple, reqs: "list[_Request]", reason: str
+        self, group: tuple, reqs: "list[_Request]", reason: str,
+        *, eff_nprobe: Optional[int] = None, billed: int = 0,
     ) -> None:
         name, nprobe, rerank, shortlist, opts = group
+        if eff_nprobe is not None:
+            # cost model / load-adaptive probing: the flush planner may
+            # have degraded nprobe below the group's requested value
+            nprobe = eff_nprobe
         idx = self._indexes[name]
         try:
             rows = np.concatenate([r.queries for r in reqs], axis=0)
@@ -1082,6 +1538,9 @@ class QueryEngine:
             st.prep_hits = int(hit_rows[offset:offset + m].sum())
             st.prep_misses = m - st.prep_hits
             st.flush_reason = reason
+            if r.probe is not None and nprobe is not None:
+                st.effective_nprobe = nprobe
+                st.scanned_rows = billed
             if r.deadline is not None and now > r.deadline:
                 st.deadline_missed = True
                 missed += 1
@@ -1183,10 +1642,11 @@ class QueryEngine:
 
     @staticmethod
     def _stack_prep(row_preps) -> QueryPrep:
-        q, q_proj, ipl, qsq = (
-            jnp.asarray(np.stack([r[f] for r in row_preps]))
-            for f in range(4)
-        )
+        # stack on host, then one device_put for all four fields — four
+        # separate jnp.asarray dispatches dominate small-bucket flushes
+        q, q_proj, ipl, qsq = jax.device_put(tuple(
+            np.stack([r[f] for r in row_preps]) for f in range(4)
+        ))
         return QueryPrep(
             q=q, q_proj=q_proj, ip_q_landmarks=ipl, q_sq_norm=qsq
         )

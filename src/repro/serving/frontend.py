@@ -10,9 +10,11 @@ flushing a half-full bucket, and nobody owns the timeout cadence.
 ``ServingFrontend`` puts the engine in **driven** mode and runs ONE
 dedicated driver thread that owns every flush decision:
 
-* **size-triggered** — the driver wakes on every submission (an event,
-  not a poll race) and flushes any group that can fill the largest
-  batch bucket;
+* **size-triggered** — the driver wakes the instant a submission makes
+  a group flushable (bucket fillable, over-budget bill, or queue
+  pressure — an event, not a poll race) and flushes any group that can
+  fill the largest batch bucket; sub-bucket submissions don't wake it
+  (they ride the poll tick), so a burst costs one driver scan;
 * **deadline/timeout-triggered** — each driver tick runs
   ``engine.poll()``, which flushes groups past ``max_wait_s`` and
   groups whose earliest per-request ``deadline_s`` arrived;
@@ -179,8 +181,12 @@ class ServingFrontend:
             if self._closed:
                 return  # stop() drains after the join
             try:
-                eng.flush_ready()  # size + pressure
-                eng.poll()  # timeout + deadline + aged mutations
+                # one pressure sample per tick, taken before any flush
+                # drains the backlog, so every group flushed this tick
+                # sees the same load-adaptive nprobe decision
+                p = eng.queue_pressure()
+                eng.flush_ready(p)  # size + budget + pressure
+                eng.poll(p)  # timeout + deadline + aged mutations
             except Exception:
                 # fused-call errors already resolved their tickets;
                 # the driver must outlive them

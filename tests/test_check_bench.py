@@ -140,6 +140,87 @@ def test_concurrent_row_invariants(tmp_path):
     assert check_bench.check(plain) == []
 
 
+def test_ivf_cost_model_gate(tmp_path):
+    """serving/engine_ivf* rows that ran the cost model (row_budget
+    derived field present) must beat serving/direct_ivf: p99 at or
+    below direct's, qps at >= 2x.  Uncosted rows are never gated."""
+    direct = _row("serving/direct_ivf", 1.0,
+                  {"qps": 250.0, "p99_ms": 24.0})
+
+    good = _write(tmp_path / "good.json", _doc([
+        direct,
+        _row("serving/engine_ivf_b8", 1.0,
+             {"qps": 640.0, "p99_ms": 23.0, "row_budget": 18000}),
+    ], group="serving"))
+    assert check_bench.check(good) == []
+
+    # costed row losing the tail to the direct path
+    tail = _write(tmp_path / "tail.json", _doc([
+        direct,
+        _row("serving/engine_ivf_b8", 1.0,
+             {"qps": 640.0, "p99_ms": 90.0, "row_budget": 18000}),
+    ], group="serving"))
+    probs = check_bench.check(tail)
+    assert any("lost the tail" in p for p in probs)
+
+    # costed row below the 2x throughput bar
+    slow = _write(tmp_path / "slow.json", _doc([
+        direct,
+        _row("serving/engine_ivf_b8-32", 1.0,
+             {"qps": 300.0, "p99_ms": 20.0, "row_budget": 18000}),
+    ], group="serving"))
+    probs = check_bench.check(slow)
+    assert any("lost the throughput win" in p for p in probs)
+
+    # uncosted contrast row (no row_budget field): ungated even when
+    # it loses both tail and throughput
+    contrast = _write(tmp_path / "contrast.json", _doc([
+        direct,
+        _row("serving/engine_ivf_b32", 1.0,
+             {"qps": 100.0, "p99_ms": 170.0}),
+    ], group="serving"))
+    assert check_bench.check(contrast) == []
+
+    # client-count-suffixed names (the closed-loop rows) gate the
+    # same way: direct_ivf_c32 is found by prefix
+    suffixed = _write(tmp_path / "suffixed.json", _doc([
+        _row("serving/direct_ivf_c32", 1.0,
+             {"qps": 900.0, "p99_ms": 110.0}),
+        _row("serving/engine_ivf_c32_b8", 1.0,
+             {"qps": 1200.0, "p99_ms": 20.0, "row_budget": 10000}),
+    ], group="serving"))
+    probs = check_bench.check(suffixed)
+    assert any("lost the throughput win" in p for p in probs)
+    assert not any("lost the tail" in p for p in probs)
+
+    # no direct_ivf row in the file: nothing to gate against
+    lone = _write(tmp_path / "lone.json", _doc([
+        _row("serving/engine_ivf_b8", 1.0,
+             {"qps": 10.0, "p99_ms": 900.0, "row_budget": 18000}),
+    ], group="serving"))
+    assert check_bench.check(lone) == []
+
+    # quick (smoke-size) runs skip the gate: the 2x bar is a
+    # full-geometry claim (tiny corpora leave nothing to amortize)
+    quick = _write(tmp_path / "quick.json", _doc([
+        direct,
+        _row("serving/engine_ivf_b8", 1.0,
+             {"qps": 300.0, "p99_ms": 90.0, "row_budget": 18000}),
+    ], group="serving", quick=True))
+    assert check_bench.check(quick) == []
+
+    # ERROR rows never reach the cross-row gate (the health check
+    # already failed the file; a malformed direct row must not crash)
+    broken = _write(tmp_path / "broken.json", _doc([
+        _row("serving/direct_ivf", 0.0, error="boom"),
+        _row("serving/engine_ivf_b8", 1.0,
+             {"qps": 10.0, "p99_ms": 900.0, "row_budget": 18000}),
+    ], group="serving"))
+    probs = check_bench.check(broken)
+    assert any("ERROR row" in p for p in probs)
+    assert not any("lost the" in p for p in probs)
+
+
 def test_diff_skips_quick_vs_full(tmp_path):
     base = tmp_path / "base"
     base.mkdir()

@@ -10,7 +10,14 @@ perf trajectory.  Rows carrying the concurrent-serving invariant pairs
 are also checked structurally: ``qps`` must not fall below
 ``qps_single`` (concurrent clients sharing buckets can only help), and
 ``p99_bg_compact_ms`` must stay strictly below ``p99_sync_compact_ms``
-(off-thread compaction must actually leave the serving path).
+(off-thread compaction must actually leave the serving path).  Engine
+IVF rows that ran the candidate-row cost model (marked by a
+``row_budget`` derived field) are gated against the direct IVF row of
+the same file: ``p99_ms`` at or below direct's and ``qps`` at >= 2x —
+the batching layer must beat the path it wraps, or it has no job.
+(Full-size files only: quick smoke corpora are too small for batch
+amortization to reach the bar, so quick runs keep the health and
+concurrent-row checks but skip this gate.)
 
 Trajectory diffing (``--baseline DIR``) compares each file against the
 same-named snapshot in DIR row by row:
@@ -85,6 +92,59 @@ def _invariant_problems(path: str, r: dict) -> list[str]:
     return problems
 
 
+def _num_of(der: dict, key: str):
+    v = der.get(key)
+    return v if isinstance(v, (int, float)) else None
+
+
+def _ivf_cost_problems(path: str, rows: "dict[str, dict]") -> list[str]:
+    """Cross-row gate for the IVF cost model: every
+    ``serving/engine_ivf*`` row that ran with the candidate-row cost
+    model (marked by a ``row_budget`` derived field) must beat the
+    file's ``serving/direct_ivf*`` row (exact name preferred, else the
+    first such row — e.g. a client-count-suffixed ``direct_ivf_c32``)
+    — ``p99_ms`` at or below it and ``qps`` at >= 2x.  Batching that
+    loses the tail AND the throughput to the path it wraps has no job;
+    uncosted contrast rows (no ``row_budget`` field) stay ungated.
+    Full-size runs only (the caller skips quick files): at smoke-test
+    corpus sizes the per-query device work is too small for batch
+    amortization to reach 2x, so the bar is a full-geometry claim —
+    same reasoning as the quick-vs-full diff skip."""
+    direct = rows.get("serving/direct_ivf")
+    if direct is None:
+        cands = sorted(
+            n for n in rows if n.startswith("serving/direct_ivf")
+        )
+        direct = rows[cands[0]] if cands else None
+    if direct is None:
+        return []
+    d_der = direct.get("derived") or {}
+    d_qps, d_p99 = _num_of(d_der, "qps"), _num_of(d_der, "p99_ms")
+    if d_qps is None or d_p99 is None:
+        return []
+    problems = []
+    for name, r in sorted(rows.items()):
+        if not name.startswith("serving/engine_ivf"):
+            continue
+        der = r.get("derived") or {}
+        if _num_of(der, "row_budget") is None:
+            continue
+        p99, qps = _num_of(der, "p99_ms"), _num_of(der, "qps")
+        if p99 is not None and p99 > d_p99:
+            problems.append(
+                f"{path}: {name} p99_ms {p99:g} > direct_ivf p99_ms "
+                f"{d_p99:g} (cost-model batching lost the tail to the "
+                f"direct path)"
+            )
+        if qps is not None and qps < 2 * d_qps:
+            problems.append(
+                f"{path}: {name} qps {qps:g} < 2x direct_ivf qps "
+                f"{d_qps:g} (cost-model batching lost the throughput "
+                f"win)"
+            )
+    return problems
+
+
 def check(path: str) -> list[str]:
     """Problems found in one bench JSON file ([] == healthy)."""
     try:
@@ -103,6 +163,7 @@ def check(path: str) -> list[str]:
         return problems + [str(e)]
     if not rows:
         problems.append(f"{path}: no benchmark rows")
+    healthy: "dict[str, dict]" = {}
     for r in rows:
         if not isinstance(r, dict) or not ROW_KEYS <= set(r):
             problems.append(f"{path}: malformed row {r!r}")
@@ -112,6 +173,9 @@ def check(path: str) -> list[str]:
             )
         else:
             problems.extend(_invariant_problems(path, r))
+            healthy[r["name"]] = r
+    if not doc.get("quick"):
+        problems.extend(_ivf_cost_problems(path, healthy))
     return problems
 
 
