@@ -278,6 +278,87 @@ def serving_mutation():
     return rows
 
 
+def serving_durability():
+    """Durability cost on the serving path: the same ~25% mutation
+    request mix served with no WAL and with the WAL attached at each
+    fsync policy.  Reports acked mutations/sec and the search p99 per
+    mode — the number behind the fsync trade-off table in the README.
+    check_bench gates interval_muts_per_s >= 0.8x nowal_muts_per_s
+    (the default policy must not cost the serving path more than 20%
+    of its mutation throughput)."""
+    import gc
+    import shutil
+    import tempfile
+
+    from repro.serving.wal import DurableIndex
+
+    # settle the allocator before the first (nowal baseline) mode: this
+    # stage runs last, and collecting the preceding stages' engine/
+    # ticket graphs mid-measurement shows up directly in its p99
+    gc.collect()
+
+    X, Qm, gt = dataset()
+    X_np = np.asarray(X)
+    Qm = np.asarray(Qm)
+    cfg = ASHConfig(b=2, d=D // 2, n_landmarks=16)
+    key = jax.random.PRNGKey(0)
+    base = AshIndex.build(key, X, cfg, backend="flat")
+    reqs = _request_stream(Qm)
+    per_mode = {}
+    wal_note = ""
+    us_interval = 0.0
+    for mode in ("nowal", "always", "interval", "off"):
+        for pass_ in ("warm", "timed"):
+            idx = AshIndex.build(
+                key, X, cfg, backend="flat", model=base.model
+            )
+            engine = QueryEngine(
+                idx, batch_buckets=(8, 32), max_wait_s=0.005,
+                auto_compact=0.3,
+            )
+            durable = None
+            tmp = None
+            if mode != "nowal":
+                tmp = tempfile.mkdtemp(prefix=f"ash-bench-wal-{mode}-")
+                durable = DurableIndex.create(
+                    idx, tmp, fsync=mode
+                )
+                engine.attach_durability(durable)
+            jax.block_until_ready(
+                jax.tree_util.tree_leaves(idx._state)
+            )
+            for b in (8, 32):
+                engine.submit(Qm[:b], k=10)
+                engine.flush()
+            tickets, muts, dt = _mutation_stream(
+                engine, X_np, Qm, reqs, None, mutate_every=4
+            )
+            if durable is not None:
+                if pass_ == "timed" and mode == "interval":
+                    st = durable.stats()
+                    wal_note = (
+                        f";wal_appends={st['appends']};"
+                        f"wal_bytes={st['appended_bytes']};"
+                        f"wal_fsyncs={st['fsyncs']}"
+                    )
+                durable.close()
+                shutil.rmtree(tmp, ignore_errors=True)
+        p99 = np.percentile([t.stats.latency_s for t in tickets], 99)
+        per_mode[mode] = (len(muts) / dt, 1e3 * p99)
+        if mode == "interval":
+            us_interval = 1e6 * dt / len(reqs)
+    derived = ";".join(
+        f"{m}_muts_per_s={r:.1f};p99_{m}_ms={p:.2f}"
+        for m, (r, p) in per_mode.items()
+    )
+    # free the per-mode engines/ticket graphs before the next stage —
+    # eight index builds of residue otherwise skews later timings
+    del engine, idx, tickets, muts
+    gc.collect()
+    return [row("serving/durability_flat", us_interval,
+                derived + wal_note)]
+
+
 def _closed_loop_direct(index, n_clients, reqs_each, pool, nprobe):
     """The no-engine baseline for the closed-loop rows: each client
     thread calls ``index.search`` per request and blocks on the device
@@ -517,5 +598,9 @@ def serving_adaptive():
     )]
 
 
+# serving_durability runs LAST: its four per-mode engine builds leave
+# enough allocator/jit-cache residue to visibly inflate the
+# sync-vs-background compaction p99 comparison in serving_concurrent
+# when it runs earlier in the process
 ALL = [serving_engine, serving_mutation, serving_concurrent,
-       serving_adaptive]
+       serving_adaptive, serving_durability]

@@ -5,9 +5,12 @@ flat, IVF and sharded backends; ``repro.serving.engine`` batches
 requests on top of it.
 """
 from repro.index import common, flat, ivf, metrics, distributed
-from repro.index.api import AshIndex, available_backends, register_backend
+from repro.index.api import (
+    AshIndex, CorruptIndexError, available_backends, register_backend,
+)
 from repro.index.metrics import exact_topk, recall_at, recall_curve
 
-__all__ = ["AshIndex", "available_backends", "register_backend",
+__all__ = ["AshIndex", "CorruptIndexError", "available_backends",
+           "register_backend",
            "common", "flat", "ivf", "metrics", "distributed",
            "exact_topk", "recall_at", "recall_curve"]

@@ -26,7 +26,10 @@ from __future__ import annotations
 import dataclasses
 import json
 import math
+import os
 import pathlib
+import shutil
+import zlib
 from typing import Any, Optional
 
 import jax
@@ -42,8 +45,23 @@ from repro.index import common as C
 from repro.index import distributed as DX
 from repro.index import flat as F
 from repro.index import ivf as IV
+from repro.testing import faults
 
 FORMAT_VERSION = 1
+
+
+class CorruptIndexError(ValueError):
+    """A saved index failed an integrity check on load.
+
+    Subclasses ``ValueError`` so pre-existing ``except ValueError``
+    callers keep working; carries *where* and *which check* so an
+    operator can tell a half-written save from bit rot."""
+
+    def __init__(self, path, check: str):
+        self.path = str(path)
+        self.check = check
+        super().__init__(f"corrupt index at {self.path}: {check}")
+
 
 _BACKENDS: dict[str, type] = {}
 
@@ -97,6 +115,164 @@ def _decode_array(a: np.ndarray, tag: str) -> jax.Array:
     if tag == "bfloat16":
         return jnp.asarray(a.view(_BF16))
     return jnp.asarray(a)
+
+
+# -- crash-safe on-disk layout ----------------------------------------
+#
+# A saved index is two files under one directory: arrays.npz and
+# config.json (the manifest).  The manifest carries a crc32 per npz
+# entry, computed over the encoded bytes, so load() can refuse bit rot
+# before deserializing garbage.  Writes are atomic at every boundary:
+#
+#   fresh target   — write into a dot-prefixed temp dir next to it,
+#                    fsync files + dirs, one os.replace of the dir;
+#   existing target — write arrays.new.npz + config.new.json, fsync,
+#                    then os.replace each (arrays first).  A crash
+#                    between the two renames leaves new arrays under
+#                    the old manifest; load() detects the checksum
+#                    mismatch and rolls FORWARD from config.new.json
+#                    (both .new files were durable before any rename).
+
+_FAULT_SAVE_REPLACE = faults.point("save.replace")
+_FAULT_SAVE_BETWEEN = faults.point("save.between_replace")
+
+
+def _fsync_file(path: pathlib.Path) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: pathlib.Path) -> None:
+    try:
+        fd = os.open(path, os.O_RDONLY | getattr(os, "O_DIRECTORY", 0))
+    except OSError:
+        return  # platform without directory fsync
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _write_npz(path: pathlib.Path, encoded: dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        np.savez(f, **encoded)  # file object: no .npz suffix games
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def _write_manifest(path: pathlib.Path, meta: dict[str, Any]) -> None:
+    with open(path, "w") as f:
+        f.write(json.dumps(meta, indent=2))
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def _save_fresh(p: pathlib.Path, encoded, meta) -> None:
+    p.parent.mkdir(parents=True, exist_ok=True)
+    tmp = p.parent / f".{p.name}.tmp-{os.getpid()}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    _write_npz(tmp / "arrays.npz", encoded)
+    _write_manifest(tmp / "config.json", meta)
+    _fsync_dir(tmp)
+    faults.fire(_FAULT_SAVE_REPLACE)
+    os.replace(tmp, p)
+    _fsync_dir(p.parent)
+
+
+def _save_over(p: pathlib.Path, encoded, meta) -> None:
+    _write_npz(p / "arrays.new.npz", encoded)
+    _write_manifest(p / "config.new.json", meta)
+    _fsync_dir(p)
+    os.replace(p / "arrays.new.npz", p / "arrays.npz")
+    faults.fire(_FAULT_SAVE_BETWEEN)
+    os.replace(p / "config.new.json", p / "config.json")
+    _fsync_dir(p)
+
+
+def _read_index_files(
+    p: pathlib.Path, manifest: str = "config.json"
+) -> tuple[dict[str, Any], dict[str, np.ndarray]]:
+    """Read + integrity-check one (manifest, arrays.npz) pair; returns
+    (meta, still-encoded arrays).  Every failure mode — missing file,
+    bad JSON, unreadable zip, missing entries, checksum mismatch —
+    raises :class:`CorruptIndexError` naming the failed check."""
+    mpath = p / manifest
+    if not mpath.is_file():
+        raise CorruptIndexError(p, f"{manifest} missing")
+    try:
+        meta = json.loads(mpath.read_text())
+    except (ValueError, OSError) as e:
+        raise CorruptIndexError(p, f"{manifest} unreadable: {e}") from e
+    if not isinstance(meta, dict) or "format_version" not in meta:
+        raise CorruptIndexError(p, f"{manifest} is not an index manifest")
+    if meta["format_version"] != FORMAT_VERSION:
+        raise CorruptIndexError(
+            p,
+            f"format_version {meta['format_version']} != {FORMAT_VERSION}",
+        )
+    apath = p / "arrays.npz"
+    if not apath.is_file():
+        raise CorruptIndexError(p, "arrays.npz missing")
+    try:
+        with np.load(apath) as npz:
+            encoded = {name: np.asarray(npz[name]) for name in npz.files}
+    except CorruptIndexError:
+        raise
+    except Exception as e:  # BadZipFile / ValueError / zlib / EOF / OS
+        raise CorruptIndexError(p, f"arrays.npz unreadable: {e}") from e
+    for name in encoded:
+        if name not in meta.get("dtypes", {}):
+            raise CorruptIndexError(
+                p, f"arrays.npz entry {name!r} missing from manifest dtypes"
+            )
+    checksums = meta.get("checksums")
+    if checksums is not None:  # pre-manifest saves have none
+        missing = set(checksums) - set(encoded)
+        if missing:
+            raise CorruptIndexError(
+                p, f"arrays.npz missing entries {sorted(missing)}"
+            )
+        extra = set(encoded) - set(checksums)
+        if extra:
+            raise CorruptIndexError(
+                p, f"arrays.npz has unmanifested entries {sorted(extra)}"
+            )
+        for name, want in checksums.items():
+            got = zlib.crc32(np.ascontiguousarray(encoded[name]).tobytes())
+            if got != want:
+                raise CorruptIndexError(
+                    p,
+                    f"checksum mismatch for {name!r}: "
+                    f"crc32 {got:#010x} != manifest {want:#010x}",
+                )
+    return meta, encoded
+
+
+def _read_index_dir(
+    p: pathlib.Path,
+) -> tuple[dict[str, Any], dict[str, np.ndarray]]:
+    """:func:`_read_index_files` + roll-forward: if the live pair is
+    inconsistent but a durable ``config.new.json`` matches the arrays
+    (crash between an over-save's two renames), finish that save and
+    load it; otherwise re-raise the original corruption error."""
+    try:
+        return _read_index_files(p)
+    except CorruptIndexError as err:
+        if not (p / "config.new.json").is_file():
+            raise
+        try:
+            meta, encoded = _read_index_files(p, "config.new.json")
+        except CorruptIndexError:
+            raise err from None
+        os.replace(p / "config.new.json", p / "config.json")
+        (p / "arrays.new.npz").unlink(missing_ok=True)
+        _fsync_dir(p)
+        return meta, encoded
 
 
 def _model_arrays(model: ASHModel) -> dict[str, Any]:
@@ -907,10 +1083,17 @@ class AshIndex:
 
     # -- persistence --------------------------------------------------
 
-    def save(self, path) -> None:
-        """Write ``arrays.npz`` + ``config.json`` under ``path/``."""
+    def save(self, path, *, extra_meta: Optional[dict] = None) -> None:
+        """Write ``arrays.npz`` + ``config.json`` under ``path/``
+        atomically: a crash at any instant leaves either the previous
+        save or the new one, never a torn mix (fresh targets go
+        through a temp dir + one ``os.replace``; existing targets
+        through durable ``.new`` files that :meth:`load` can roll
+        forward).  The manifest carries a crc32 per array that
+        :meth:`load` verifies.  ``extra_meta`` entries are merged into
+        the manifest (the durability layer stores its WAL high-water
+        mark this way)."""
         p = pathlib.Path(path)
-        p.mkdir(parents=True, exist_ok=True)
         arrays, backend_meta = self._backend.to_arrays(self._state)
         if self._pending_add:
             # staged-but-unapplied rows ride along so a batched
@@ -919,10 +1102,12 @@ class AshIndex:
             arrays["pending_add"] = np.concatenate(
                 self._pending_add, axis=0
             )
-        encoded, dtypes = {}, {}
+        encoded, dtypes, checksums = {}, {}, {}
         for name, a in arrays.items():
             encoded[name], dtypes[name] = _encode_array(a)
-        np.savez(p / "arrays.npz", **encoded)
+            checksums[name] = zlib.crc32(
+                np.ascontiguousarray(encoded[name]).tobytes()
+            )
         cfg = self.config
         meta = {
             "format_version": FORMAT_VERSION,
@@ -936,26 +1121,32 @@ class AshIndex:
             },
             "dtypes": dtypes,
             "backend_meta": backend_meta,
+            "checksums": checksums,
         }
-        (p / "config.json").write_text(json.dumps(meta, indent=2))
+        if extra_meta:
+            meta.update(extra_meta)
+        if p.exists():
+            _save_over(p, encoded, meta)
+        else:
+            _save_fresh(p, encoded, meta)
 
     @classmethod
     def load(cls, path, **opts) -> "AshIndex":
         """Inverse of :meth:`save`; search results are bit-identical to
         the saved index.  ``opts`` (e.g. ``mesh=``/``axes=`` for the
-        sharded backend) override the backend placement."""
+        sharded backend) override the backend placement.  Every
+        integrity failure — missing files, truncated or bit-flipped
+        ``arrays.npz``, checksum mismatch — raises
+        :class:`CorruptIndexError` naming the failed check."""
         p = pathlib.Path(path)
-        meta = json.loads((p / "config.json").read_text())
-        if meta["format_version"] != FORMAT_VERSION:
-            raise ValueError(
-                f"index format {meta['format_version']} != "
-                f"{FORMAT_VERSION}"
-            )
-        with np.load(p / "arrays.npz") as npz:
+        meta, encoded = _read_index_dir(p)
+        try:
             arrays = {
-                name: _decode_array(npz[name], meta["dtypes"][name])
-                for name in npz.files
+                name: _decode_array(a, meta["dtypes"][name])
+                for name, a in encoded.items()
             }
+        except Exception as e:
+            raise CorruptIndexError(p, f"array decode failed: {e}") from e
         pending = arrays.pop("pending_add", None)
         config = ASHConfig(**meta["config"])
         impl = _get_backend(meta["backend"])

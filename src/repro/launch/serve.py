@@ -39,6 +39,7 @@ from repro.index import metrics as MET
 from repro.serving.compactor import BackgroundCompactor
 from repro.serving.engine import QueryEngine
 from repro.serving.frontend import ServingFrontend
+from repro.serving.wal import DurableIndex
 
 
 def _print_engine_report(engine, mut_tickets=()):
@@ -74,7 +75,35 @@ def _print_engine_report(engine, mut_tickets=()):
               f"retries={comp['retries']} swap={comp['swap_ms']:.2f}ms "
               f"blocked={comp['blocked_ms']:.2f}ms "
               f"synchronous={snap['compactions']}")
+    dur = snap.get("durability", {})
+    for name, ws in dur.get("indexes", {}).items():
+        print(f"[durability] index={name} wal_seq={ws['last_seqno']} "
+              f"appends={ws['appends']} "
+              f"({ws['appended_bytes'] / 1024:.1f}KiB) "
+              f"fsync={ws['fsync']}:{ws['fsyncs']} "
+              f"checkpoints={ws['checkpoints']}"
+              f"@seq{ws['checkpoint_seqno']} "
+              f"failures={dur.get('wal_failures', 0)}")
+    sup = snap.get("supervision", {})
+    if sup.get("driver_failures") or sup.get("compact_failures"):
+        print(f"[supervision] driver_failures="
+              f"{sup['driver_failures']} "
+              f"(streak {sup['driver_consecutive_failures']}, "
+              f"last {sup['driver_last_error']}) "
+              f"compact_failures={sup['compact_failures']} "
+              f"(last {sup['compact_last_error']})")
     return snap
+
+
+def _final_checkpoint(engine):
+    """Clean-shutdown checkpoint: fold the WAL into a fresh checkpoint
+    so the next start replays nothing."""
+    durable = engine.durability("default")
+    if durable is None:
+        return
+    seq = durable.checkpoint(barrier=engine.mutation_barrier())
+    durable.close()
+    print(f"[checkpoint] seq={seq} (wal truncated)")
 
 
 def _run_concurrent(args, index, engine, Q, search_kw):
@@ -140,6 +169,7 @@ def _run_concurrent(args, index, engine, Q, search_kw):
     print(f"[latency] p50={1e3 * p50:.1f}ms p99={1e3 * p99:.1f}ms "
           f"per request")
     _print_engine_report(engine)
+    _final_checkpoint(engine)
     return 0
 
 
@@ -270,6 +300,19 @@ def main(argv=None):
                         "facade until Ctrl-C")
     p.add_argument("--save-dir", default=None,
                    help="persist the built index (npz + JSON) here")
+    p.add_argument("--wal", default=None, metavar="DIR",
+                   help="durability directory: mutation WAL + atomic "
+                        "checkpoints.  If DIR already holds a "
+                        "checkpoint the index is RECOVERED from it "
+                        "(checkpoint + WAL replay) instead of served "
+                        "from the fresh build")
+    p.add_argument("--fsync", choices=("always", "interval", "off"),
+                   default="interval",
+                   help="WAL fsync policy: 'always' makes every "
+                        "acknowledged mutation survive power loss, "
+                        "'interval' bounds the loss window, 'off' "
+                        "leaves it to the OS (process crashes lose "
+                        "nothing under any policy)")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
@@ -297,6 +340,21 @@ def main(argv=None):
         index.save(args.save_dir)
         print(f"[save] {args.save_dir}")
 
+    durable = None
+    if args.wal:
+        if DurableIndex.exists(args.wal):
+            durable = DurableIndex.open(args.wal, fsync=args.fsync)
+            index = durable.index
+            print(f"[recovery] {durable.report.describe()}")
+            print(f"[recovery] serving the recovered index "
+                  f"(fresh build discarded): {index!r}")
+        else:
+            durable = DurableIndex.create(
+                index, args.wal, fsync=args.fsync
+            )
+            print(f"[wal] durability at {args.wal} "
+                  f"(fsync={args.fsync}, checkpoint 0 written)")
+
     gt_s, gt_i = MET.exact_topk(Q, X, k=10, metric=args.metric)
 
     engine_kw = {}
@@ -314,6 +372,8 @@ def main(argv=None):
         auto_compact=args.auto_compact,
         **engine_kw,
     )
+    if durable is not None:
+        engine.attach_durability(durable)
     search_kw = dict(nprobe=args.nprobe, rerank=args.rerank)
 
     if args.http:
@@ -391,6 +451,7 @@ def main(argv=None):
         rec = MET.recall_curve(ids, gt_i, Rs=(10, 100))
         print(f"[recall] 10-recall@10={rec.get(10):.4f} "
               f"10-recall@100={rec.get(100):.4f}")
+    _final_checkpoint(engine)
     return 0
 
 

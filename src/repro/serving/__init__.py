@@ -1,5 +1,5 @@
 """Serving integrations of the ASH technique."""
-from repro.serving import compactor, engine, frontend, retrieval
+from repro.serving import compactor, engine, frontend, retrieval, wal
 from repro.serving.compactor import BackgroundCompactor
 from repro.serving.engine import (
     EngineConfig, MutationTicket, QueryEngine, Ticket,
@@ -7,10 +7,14 @@ from repro.serving.engine import (
 from repro.serving.frontend import (
     FrontendClosed, FrontendConfig, ServingFrontend,
 )
+from repro.serving.wal import (
+    DurableIndex, RecoveryReport, WriteAheadLog,
+)
 
 __all__ = [
-    "compactor", "engine", "frontend", "retrieval",
-    "BackgroundCompactor", "EngineConfig", "FrontendClosed",
-    "FrontendConfig", "MutationTicket", "QueryEngine",
-    "ServingFrontend", "Ticket",
+    "compactor", "engine", "frontend", "retrieval", "wal",
+    "BackgroundCompactor", "DurableIndex", "EngineConfig",
+    "FrontendClosed", "FrontendConfig", "MutationTicket",
+    "QueryEngine", "RecoveryReport", "ServingFrontend", "Ticket",
+    "WriteAheadLog",
 ]

@@ -50,6 +50,12 @@ import time
 from typing import Optional
 
 from repro.serving.engine import QueryEngine
+from repro.testing import faults
+
+# the instant before the survivor state is installed: a crash here
+# loses the compaction (never a correctness event — recovery replays
+# the WAL over the last checkpoint) but must never corrupt anything
+_FAULT_SWAP = faults.point("compactor.swap")
 
 
 class BackgroundCompactor:
@@ -60,6 +66,7 @@ class BackgroundCompactor:
         engine: QueryEngine,
         max_dead_fraction: Optional[float] = None,
         max_retries: int = 3,
+        max_failures: int = 3,
     ):
         self.engine = engine
         # threshold precedence: explicit arg, else the engine's
@@ -68,6 +75,8 @@ class BackgroundCompactor:
             max_dead_fraction = engine.config.auto_compact or 0.0
         self.max_dead_fraction = max_dead_fraction
         self.max_retries = max_retries
+        # consecutive run_once failures before healthy() turns False
+        self.max_failures = max_failures
         self._work = threading.Event()
         self._idle = threading.Event()
         self._idle.set()
@@ -142,15 +151,45 @@ class BackgroundCompactor:
                     name = self._requested.pop()
                 try:
                     self.run_once(name)
-                except Exception:
-                    # a failed build must not kill the worker; the
-                    # index keeps serving with tombstones masked
-                    pass
+                    with self.engine._lock:
+                        self.engine.stats \
+                            .compact_consecutive_failures = 0
+                except Exception as e:
+                    # a failed build must not kill the worker (the
+                    # index keeps serving with tombstones masked) —
+                    # but it must not vanish either: record it where
+                    # snapshot()["supervision"] and healthy() look
+                    with self.engine._lock:
+                        self.engine.stats.compact_failures += 1
+                        self.engine.stats \
+                            .compact_consecutive_failures += 1
+                        self.engine.stats.compact_last_error = repr(e)
+
+    # -- supervision --------------------------------------------------
+
+    def healthy(self) -> bool:
+        """False once the worker thread is gone (while started and not
+        stopped) or stuck in a failure streak of ``max_failures`` or
+        more."""
+        if self._closed or (self._started and not self._worker.is_alive()):
+            return False
+        with self.engine._lock:
+            streak = self.engine.stats.compact_consecutive_failures
+        return streak < self.max_failures
+
+    @property
+    def last_error(self) -> Optional[str]:
+        with self.engine._lock:
+            return self.engine.stats.compact_last_error
 
     def run_once(self, name: str = "default") -> bool:
         """One snapshot → build → epoch-checked swap cycle (with
         bounded retries).  Synchronous — tests and drain paths call it
-        directly.  True iff a survivor state was swapped in."""
+        directly.  True iff a survivor state was swapped in.  After a
+        successful swap, an attached :class:`DurableIndex` is
+        checkpointed (then its covered WAL segments dropped) so the
+        log stays bounded — the natural truncation point, since the
+        compacted state is exactly what replay would rebuild."""
         eng = self.engine
         barrier = eng.mutation_barrier(name)
         for attempt in range(self.max_retries + 1):
@@ -171,12 +210,14 @@ class BackgroundCompactor:
             new_state = idx._backend.compact(snapshot)
             # 3. swap iff no mutation landed since the snapshot
             t_wait = time.perf_counter()
+            swapped = False
             with barrier:
                 t_swap = time.perf_counter()
                 blocked_ms = (t_swap - t_wait) * 1e3
                 if eng._indexes.get(name) is not idx:
                     return False  # name was rebound mid-build
                 if idx.mutation_epoch == epoch:
+                    faults.fire(_FAULT_SWAP)
                     idx._state = new_state
                     idx._mutation_epoch += 1
                     swap_ms = (time.perf_counter() - t_swap) * 1e3
@@ -184,9 +225,24 @@ class BackgroundCompactor:
                         eng.stats.compact_runs += 1
                         eng.stats.compact_swap_ms += swap_ms
                         eng.stats.compact_blocked_ms += blocked_ms
-                    return True
+                    swapped = True
+            if swapped:
+                # checkpoint-then-truncate OFF the barrier (the
+                # checkpoint re-acquires it only for its brief
+                # snapshot+rotate step) so serving never waits on the
+                # checkpoint write
+                self._checkpoint_after_swap(name, barrier)
+                return True
             # stale build: a mutation landed mid-rebuild — retry from
             # a fresh snapshot (which includes the delta)
             with eng._lock:
                 eng.stats.compact_retries += 1
         return False
+
+    def _checkpoint_after_swap(self, name: str, barrier) -> None:
+        durable = self.engine.durability(name)
+        if durable is None:
+            return
+        with barrier:  # WAL appends are serialized by the barrier
+            durable.log_marker("compact")
+        durable.checkpoint(barrier=barrier)

@@ -113,8 +113,16 @@ import numpy as np
 
 from repro.core.types import QueryPrep
 from repro.index.api import AshIndex, IVFBackend
+from repro.testing import faults
 
 NEG_INF = float("-inf")
+
+# crash-recovery windows of the mutation apply path: before anything
+# durable happened, after the WAL records exist but before the backend
+# applied them, and after the apply but before any ticket fired
+_FAULT_APPLY = faults.point("engine.apply")
+_FAULT_APPLY_LOGGED = faults.point("engine.apply.logged")
+_FAULT_APPLY_APPLIED = faults.point("engine.apply.applied")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -305,6 +313,20 @@ class EngineStats:
     ivf_degraded: int = 0
     ivf_scanned_rows: int = 0
     ivf_queries: int = 0
+    # durability: WAL append failures surfaced by the apply path (the
+    # batch is requeued and retried, never silently dropped)
+    wal_failures: int = 0
+    wal_last_error: Optional[str] = None
+    # background-thread supervision (frontend driver / compactor
+    # worker): lifetime + consecutive failure counts and the last
+    # captured error, so a dying thread is visible in snapshot()
+    # instead of silently hanging callers
+    driver_failures: int = 0
+    driver_consecutive_failures: int = 0
+    driver_last_error: Optional[str] = None
+    compact_failures: int = 0
+    compact_consecutive_failures: int = 0
+    compact_last_error: Optional[str] = None
     effective_nprobe: Dict[int, int] = dataclasses.field(
         default_factory=dict
     )
@@ -344,6 +366,16 @@ class EngineStats:
                 "retries": self.compact_retries,
                 "swap_ms": round(self.compact_swap_ms, 3),
                 "blocked_ms": round(self.compact_blocked_ms, 3),
+            },
+            "supervision": {
+                "driver_failures": self.driver_failures,
+                "driver_consecutive_failures":
+                    self.driver_consecutive_failures,
+                "driver_last_error": self.driver_last_error,
+                "compact_failures": self.compact_failures,
+                "compact_consecutive_failures":
+                    self.compact_consecutive_failures,
+                "compact_last_error": self.compact_last_error,
             },
             "ivf_cost": {
                 "splits": self.ivf_splits,
@@ -483,6 +515,12 @@ class MutationTicket(_EventTicket):
         self.t_enqueue = time.perf_counter()
         self.apply_s = 0.0  # duration of the whole batched apply step
         self.ids: Optional[np.ndarray] = None  # adds: assigned user ids
+        # durability: the WAL seqno this mutation was logged under
+        # (None until the apply path logs it; stays None without an
+        # attached DurableIndex).  _rows retains an add's row block
+        # until it is logged, so a WAL record can carry the payload.
+        self.wal_seqno: Optional[int] = None
+        self._rows: Optional[np.ndarray] = None
 
     def result(self, timeout: Optional[float] = None):
         """Adds: the (n,) int64 user ids the rows received (also on
@@ -575,6 +613,9 @@ class QueryEngine:
         # set by BackgroundCompactor.attach(): auto_compact requests
         # route to the worker instead of compacting on this thread
         self._compactor = None
+        # per-index DurableIndex (attach_durability): the apply path
+        # WAL-logs every mutation batch before its tickets resolve
+        self._wals: Dict[str, Any] = {}
         self.stats = EngineStats()
         self.stats.gauges = self._live_gauges
         if isinstance(indexes, AshIndex):
@@ -611,6 +652,29 @@ class QueryEngine:
             for g in [g for g in self._group_bills if g[0] == name]:
                 del self._group_bills[g]
         return self
+
+    def attach_durability(self, durable, *, index: str = "default"):
+        """Bind a :class:`~repro.serving.wal.DurableIndex` to ``index``:
+        from now on :meth:`_apply_mutations` appends every mutation
+        batch to its WAL *before* the batch's tickets resolve, so an
+        acknowledged mutation always survives a crash (modulo the
+        WAL's fsync policy).  ``durable`` must wrap the registered
+        index object — rebinding the name afterwards without a
+        matching re-attach is an error the next apply will surface."""
+        idx = self._require_index(index)
+        if durable.index is not idx:
+            raise ValueError(
+                f"durable.index is not the index registered as "
+                f"{index!r}; attach after register()"
+            )
+        with self._lock:
+            self._wals[index] = durable
+        return self
+
+    def durability(self, index: str = "default"):
+        """The attached :class:`DurableIndex` of ``index`` (or None)."""
+        with self._lock:
+            return self._wals.get(index)
 
     def index(self, name: str = "default") -> AshIndex:
         return self._indexes[name]
@@ -1011,6 +1075,7 @@ class QueryEngine:
             # staging mutates index state: serialize against in-flight
             # applies so id assignment stays in submission order
             ticket.ids = idx.stage_add(q)
+            ticket._rows = q  # retained until the apply path logs it
             with self._lock:
                 self._add_tickets.setdefault(index, []).append(ticket)
                 self._mutation_t0.setdefault(index, ticket.t_enqueue)
@@ -1073,20 +1138,74 @@ class QueryEngine:
             self._try_flush(self._apply_mutations, name)
 
     def _apply_mutations(self, name: str) -> int:
-        """Apply the index's queued mutation batch: ONE backend add for
-        every staged row, then the queued deletes (order-equivalent to
-        FIFO — delete targets are ids, which adds never disturb), then
-        an optional auto-compaction.  Returns rows added + removed."""
+        """Apply the index's queued mutation batch: WAL-log every
+        queued mutation (when durability is attached — the batch is
+        requeued intact if logging fails, so no acknowledged-but-
+        unlogged state can exist), then ONE backend add for every
+        staged row, then the queued deletes (order-equivalent to FIFO
+        — delete targets are ids, which adds never disturb), then an
+        optional auto-compaction.  Tickets fire only after their
+        records are in the log.  Returns rows added + removed."""
         with self.mutation_barrier(name):
             with self._lock:
                 idx = self._indexes.get(name)
                 if idx is None:
                     return 0
+                has_work = bool(
+                    self._add_tickets.get(name)
+                    or self._pending_deletes.get(name)
+                    or idx.pending_rows
+                )
+            if not has_work:
+                return 0
+            # fired before the batch leaves the queues: a failure here
+            # (crash or transient error) leaves everything queued for a
+            # clean retry
+            faults.fire(_FAULT_APPLY)
+            with self._lock:
                 adds = self._add_tickets.pop(name, [])
                 dels = self._pending_deletes.pop(name, [])
                 self._mutation_t0.pop(name, None)
+                wal = self._wals.get(name)
             if not adds and not dels and idx.pending_rows == 0:
                 return 0
+            if wal is not None and (adds or dels):
+                try:
+                    # submission order: adds before deletes, matching
+                    # the apply below — replay is order-faithful.  A
+                    # ticket logged by an earlier, failed apply keeps
+                    # its seqno (idempotent retry, no double record).
+                    for ticket in adds:
+                        if ticket.wal_seqno is None:
+                            ticket.wal_seqno = wal.log_add(
+                                ticket._rows, ticket.ids
+                            )
+                        ticket._rows = None
+                    for del_ids, ticket in dels:
+                        if ticket.wal_seqno is None:
+                            ticket.wal_seqno = wal.log_delete(del_ids)
+                except Exception as e:
+                    # logging failed (disk full, ...): requeue the
+                    # whole batch for a later retry — tickets stay
+                    # unresolved rather than acknowledging work the
+                    # log does not hold
+                    with self._lock:
+                        self._add_tickets[name] = (
+                            adds + self._add_tickets.get(name, [])
+                        )
+                        self._pending_deletes[name] = (
+                            dels + self._pending_deletes.get(name, [])
+                        )
+                        pending = (
+                            adds + [t for _, t in dels]
+                        )
+                        self._mutation_t0[name] = min(
+                            t.t_enqueue for t in pending
+                        )
+                        self.stats.wal_failures += 1
+                        self.stats.wal_last_error = repr(e)
+                    raise
+            faults.fire(_FAULT_APPLY_LOGGED)
             t0 = time.perf_counter()
             try:
                 applied = idx.apply_pending()
@@ -1099,6 +1218,7 @@ class QueryEngine:
                 for ticket in adds + [t for _, t in dels]:
                     ticket._fail(e)
                 raise
+            faults.fire(_FAULT_APPLY_APPLIED)
             if (
                 dels
                 and self.config.auto_compact is not None
@@ -1115,6 +1235,8 @@ class QueryEngine:
                     if idx.n != n_before:
                         with self._lock:
                             self.stats.compactions += 1
+                        if wal is not None:
+                            wal.log_marker("compact")
             dt = time.perf_counter() - t0
             for ticket in adds:
                 ticket._result = ticket.ids
@@ -1265,13 +1387,21 @@ class QueryEngine:
                 self._pending_rows / max(1, cfg.max_pending),
                 age / max(horizon, 1e-9),
             ))
-            return {
+            gauges = {
                 "queue_depth": self._pending_rows,
                 "oldest_ticket_age_s": (
                     0.0 if oldest is None else round(age, 6)
                 ),
                 "queue_pressure": round(pressure, 4),
+                "durability": {
+                    "wal_failures": self.stats.wal_failures,
+                    "wal_last_error": self.stats.wal_last_error,
+                    "indexes": {
+                        nm: d.stats() for nm, d in self._wals.items()
+                    },
+                },
             }
+            return gauges
 
     def _notify_work(self) -> None:
         cb = self._on_work

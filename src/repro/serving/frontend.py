@@ -89,6 +89,11 @@ class FrontendConfig:
     submit_timeout_s: Optional[float] = None
     default_deadline_s: Optional[float] = None
     drain_timeout_s: float = 30.0
+    # supervision: after this many CONSECUTIVE driver-tick failures the
+    # driver fails every queued query ticket with the captured cause
+    # (and keeps doing so while the fault persists) instead of letting
+    # callers hang until their timeout
+    max_driver_failures: int = 5
 
     def __post_init__(self):
         if self.poll_interval_s <= 0:
@@ -98,6 +103,11 @@ class FrontendConfig:
         if self.max_queue_rows is not None and self.max_queue_rows < 1:
             raise ValueError(
                 f"max_queue_rows must be >= 1: {self.max_queue_rows}"
+            )
+        if self.max_driver_failures < 1:
+            raise ValueError(
+                f"max_driver_failures must be >= 1: "
+                f"{self.max_driver_failures}"
             )
 
 
@@ -187,10 +197,41 @@ class ServingFrontend:
                 p = eng.queue_pressure()
                 eng.flush_ready(p)  # size + budget + pressure
                 eng.poll(p)  # timeout + deadline + aged mutations
-            except Exception:
-                # fused-call errors already resolved their tickets;
-                # the driver must outlive them
-                pass
+                with eng._lock:
+                    eng.stats.driver_consecutive_failures = 0
+            except Exception as e:
+                # fused-call errors already resolved their tickets and
+                # the driver must outlive them — but record every
+                # failure, and once the fault proves persistent stop
+                # hanging callers: fail the queued tickets with the
+                # captured cause
+                with eng._lock:
+                    eng.stats.driver_failures += 1
+                    eng.stats.driver_consecutive_failures += 1
+                    eng.stats.driver_last_error = repr(e)
+                    streak = eng.stats.driver_consecutive_failures
+                if streak >= self.config.max_driver_failures:
+                    try:
+                        eng._abort_pending(e)
+                    except Exception:
+                        pass
+
+    # -- supervision --------------------------------------------------
+
+    def healthy(self) -> bool:
+        """False once the driver thread is gone or stuck in a failure
+        streak of ``max_driver_failures`` or more (details in
+        ``engine.stats.snapshot()["supervision"]``)."""
+        if not self.running or not self._driver.is_alive():
+            return False
+        with self.engine._lock:
+            streak = self.engine.stats.driver_consecutive_failures
+        return streak < self.config.max_driver_failures
+
+    @property
+    def last_error(self) -> Optional[str]:
+        with self.engine._lock:
+            return self.engine.stats.driver_last_error
 
     # -- blocking submission ------------------------------------------
 

@@ -1,0 +1,8 @@
+"""Test-support machinery importable from production code.
+
+Only :mod:`repro.testing.faults` lives here: zero-cost fault-injection
+points the durability stack compiles in, armed exclusively by tests.
+"""
+from repro.testing import faults
+
+__all__ = ["faults"]

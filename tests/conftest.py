@@ -50,3 +50,22 @@ def pytest_collection_modifyitems(config, items):
         name = getattr(module, "__name__", "")
         if name not in TIER1_EXCLUDED:
             item.add_marker(pytest.mark.tier1)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _fresh_jit_caches_for_training_stack(request):
+    """Drop jax's compiled-executable caches when a single-process run
+    crosses from the core suites into the model/training stack.
+
+    A full `pytest -x -q` run compiles several hundred XLA CPU
+    executables before the training modules start; compiling the large
+    grad graphs on top of that much accumulated LLVM JIT state can
+    segfault the CPU compiler.  CI never sees this because the tier1 /
+    not-tier1 halves run as separate processes — this fixture gives the
+    excluded modules the same fresh-compiler start locally.  Clearing
+    per excluded module (not per test) keeps the recompile cost to one
+    warmup per module.
+    """
+    if request.module.__name__ in TIER1_EXCLUDED:
+        jax.clear_caches()
+    yield

@@ -140,6 +140,55 @@ def test_concurrent_row_invariants(tmp_path):
     assert check_bench.check(plain) == []
 
 
+def test_durability_row_invariant(tmp_path):
+    """The durability row is gated structurally: the default (interval)
+    fsync policy must keep >= 0.8x the no-WAL mutation throughput.
+    Rows without the metric pair are untouched."""
+    good = _write(tmp_path / "good.json", _doc([_row(
+        "serving/durability_flat", 1.0,
+        {"nowal_muts_per_s": 100.0, "interval_muts_per_s": 95.0,
+         "always_muts_per_s": 40.0, "off_muts_per_s": 99.0},
+    )], group="serving"))
+    assert check_bench.check(good) == []
+
+    slow = _write(tmp_path / "slow.json", _doc([_row(
+        "serving/durability_flat", 1.0,
+        {"nowal_muts_per_s": 100.0, "interval_muts_per_s": 70.0},
+    )], group="serving"))
+    probs = check_bench.check(slow)
+    assert any("durability budget" in p for p in probs)
+
+    # a slow `always` policy alone never trips the gate — only the
+    # default policy carries the throughput promise
+    fsync_heavy = _write(tmp_path / "fsync.json", _doc([_row(
+        "serving/durability_flat", 1.0,
+        {"nowal_muts_per_s": 100.0, "interval_muts_per_s": 90.0,
+         "always_muts_per_s": 5.0},
+    )], group="serving"))
+    assert check_bench.check(fsync_heavy) == []
+
+
+def test_diff_durability_rates_are_throughputs(tmp_path):
+    """The per-mode mutation rates end in _per_s, so the trajectory
+    diff treats a drop as a regression (inverted ratio) and the
+    per-mode p99s end in _ms (lower is better)."""
+    base = tmp_path / "base"
+    base.mkdir()
+    _write(base / "BENCH_serving.json",
+           _doc([_row("serving/durability_flat", 0.0,
+                      {"interval_muts_per_s": 100.0,
+                       "p99_interval_ms": 2.0})], group="serving"))
+    cur = _write(
+        tmp_path / "BENCH_serving.json",
+        _doc([_row("serving/durability_flat", 0.0,
+                   {"interval_muts_per_s": 20.0,
+                    "p99_interval_ms": 8.0})], group="serving"),
+    )
+    fails, warns = check_bench.diff(cur, str(base), 1.5, 3.0)
+    assert any("interval_muts_per_s regressed 5.00x" in f for f in fails)
+    assert any("p99_interval_ms regressed 4.00x" in f for f in fails)
+
+
 def test_ivf_cost_model_gate(tmp_path):
     """serving/engine_ivf* rows that ran the cost model (row_budget
     derived field present) must beat serving/direct_ivf: p99 at or

@@ -1,0 +1,604 @@
+"""Durability & crash recovery: mutation WAL, atomic checkpoints,
+fault-injection crash-recovery, and background-thread supervision.
+
+The core property extends PR 5's mutation invariant across a process
+death: kill the process state at EVERY registered fault-injection
+point during randomized mutation traffic, recover via
+``DurableIndex.open`` (newest valid checkpoint + torn-tail truncation
++ idempotent WAL replay), and search over the recovered index must be
+bit-identical to a fresh build over the serially-replayed durable
+mutation prefix — with every *acknowledged* mutation inside that
+prefix.  On flat AND IVF backends.
+"""
+import json
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import ASHConfig
+from repro.data.synthetic import embedding_dataset
+from repro.index import AshIndex, CorruptIndexError
+from repro.serving import (
+    BackgroundCompactor, DurableIndex, QueryEngine, ServingFrontend,
+    WriteAheadLog,
+)
+from repro.serving.frontend import FrontendClosed
+from repro.serving.wal import (
+    KIND_ADD, KIND_DELETE, KIND_MARKER, read_log,
+)
+from repro.testing import faults
+from test_mutation import _Oracle, _assert_matches_fresh_build, _build
+
+DIM = 16
+N0 = 48  # initial build size
+POOL = 240  # vector pool adds draw from
+CHUNK = 8  # rows per add batch
+BACKENDS = ("flat", "ivf")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(7)
+    kx, kq, kb = jax.random.split(key, 3)
+    X = embedding_dataset(kx, POOL, DIM)
+    Qm = embedding_dataset(kq, 4, DIM)
+    cfg = ASHConfig(b=2, d=8, n_landmarks=8)
+    model = AshIndex.build(kb, X[:N0], cfg, backend="flat").model
+    return np.asarray(X), Qm, cfg, model, kb
+
+
+def _search_kw(backend):
+    kw = {"rerank": 0}
+    if backend == "ivf":
+        kw["nprobe"] = 2  # partial probe: the gathered pre-DMA path
+    return kw
+
+
+def _wait_until(pred, timeout=10.0, interval=0.002):
+    deadline = time.perf_counter() + timeout
+    while time.perf_counter() < deadline:
+        if pred():
+            return True
+        time.sleep(interval)
+    return pred()
+
+
+# ---------------------------------------------------------------------
+# fault-point registry: every point the production code registers must
+# be exercised by the crash matrix below — a new point that isn't
+# added to the expectations fails here, not silently
+# ---------------------------------------------------------------------
+
+EXPECTED_POINTS = {
+    "wal.append", "wal.fsync",
+    "engine.apply", "engine.apply.logged", "engine.apply.applied",
+    "ckpt.begin", "ckpt.gc",
+    "save.replace", "save.between_replace",
+    "compactor.swap",
+}
+
+
+def test_every_fault_point_is_registered():
+    assert {p.name for p in faults.points()} == EXPECTED_POINTS
+
+
+def _crash_cases():
+    cases = []
+    for name in sorted(EXPECTED_POINTS):
+        cases.append((name, faults.Crash(at=1)))
+        if name.startswith(("wal.", "engine.")):
+            # later hits land mid-traffic, after acknowledged work
+            cases.append((name, faults.Crash(at=3)))
+    cases.append(("wal.append", faults.Torn(at=2, fraction=0.3)))
+    cases.append(("wal.append", faults.Torn(at=4, fraction=0.8)))
+    return cases
+
+
+def _run_traffic_until_crash(setup, root, backend, plan, steps=8):
+    """Drive a deterministic mutation script through an engine with
+    durability attached, under ``plan``.  Returns (muts, acked,
+    crashed): the full submission-order mutation list, the tickets
+    that RESOLVED before the crash, and whether the plan fired."""
+    X, Qm, cfg, model, kb = setup
+    idx = _build(setup, backend, "dot", X[:N0])
+    dur = DurableIndex.create(idx, root, fsync="always")
+    eng = QueryEngine(idx)
+    eng.attach_durability(dur)
+    rng = np.random.RandomState(1234)
+    muts = []  # ("add", pool_rows) | ("del", ids), submission order
+    acked = []  # (mutation position 0-based, ticket)
+    crashed = False
+    try:
+        with faults.active(plan):
+            for step in range(steps):
+                if step == steps // 2:
+                    # a mid-traffic checkpoint exercises the ckpt/save
+                    # points while acknowledged records exist on both
+                    # sides of it
+                    dur.checkpoint(barrier=eng.mutation_barrier())
+                total_ids = N0 + CHUNK * sum(
+                    1 for k, _ in muts if k == "add"
+                )
+                if rng.rand() < 0.55:
+                    pool_rows = rng.randint(0, POOL, CHUNK)
+                    muts.append(("add", pool_rows))
+                    t = eng.submit_add(X[pool_rows])
+                else:
+                    victims = rng.randint(0, total_ids, CHUNK // 2)
+                    muts.append(("del", victims))
+                    t = eng.submit_delete(victims)
+                t.result()  # undriven: applies (and WAL-logs) now
+                acked.append((len(muts) - 1, t))
+    except faults.SimulatedCrash:
+        crashed = True
+    # the "process" is dead: abandon every in-memory object.  (The
+    # file contents are already past the process — appends flush —
+    # so closing the fd is only hygiene.)
+    try:
+        dur.wal.close()
+    except Exception:
+        pass
+    return muts, acked, crashed
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize(
+    "point,action", _crash_cases(),
+    ids=lambda v: v if isinstance(v, str) else
+    f"{type(v).__name__}@{v.at}",
+)
+def test_crash_recovery_at_every_point(
+    setup, tmp_path, backend, point, action
+):
+    """Kill the process state at ``point``; recovery must serve
+    bit-identically to a fresh build over the durable mutation prefix,
+    and every acknowledged mutation must be inside that prefix."""
+    muts, acked, crashed = _run_traffic_until_crash(
+        setup, tmp_path / "dur", backend, {point: action}
+    )
+    rec = DurableIndex.open(tmp_path / "dur", fsync="always")
+    report = rec.report
+    if not crashed:
+        # the plan never fired on this script (e.g. a compactor-only
+        # point): clean shutdown — everything submitted is durable
+        assert report.last_seqno == len(muts)
+    # no checkpoint/marker traffic in this script consumes seqnos, so
+    # mutation i (0-based) was logged under seqno i+1 and the durable
+    # set is exactly the first last_seqno mutations
+    durable_n = report.last_seqno
+    assert 0 <= durable_n <= len(muts)
+    for pos, ticket in acked:
+        assert ticket.wal_seqno == pos + 1
+        assert ticket.wal_seqno <= durable_n, (
+            f"acknowledged mutation {pos} (seqno {ticket.wal_seqno}) "
+            f"lost: durable prefix ends at {durable_n}"
+        )
+    oracle = _Oracle(N0)
+    for kind, payload in muts[:durable_n]:
+        if kind == "add":
+            oracle.add(list(payload))
+        else:
+            oracle.delete(payload)
+    _assert_matches_fresh_build(
+        setup, rec.index, oracle, backend, "dot", _search_kw(backend)
+    )
+    rec.close()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_recovery_is_idempotent(setup, tmp_path, backend):
+    """open() twice (the second time after a clean close with no new
+    traffic) replays nothing new and serves identically."""
+    muts, acked, crashed = _run_traffic_until_crash(
+        setup, tmp_path / "dur", backend,
+        {"engine.apply.logged": faults.Crash(at=4)},
+    )
+    assert crashed
+    rec1 = DurableIndex.open(tmp_path / "dur")
+    s1, i1 = rec1.index.search(setup[1], k=10, **_search_kw(backend))
+    rec1.checkpoint()
+    rec1.close()
+    rec2 = DurableIndex.open(tmp_path / "dur")
+    assert rec2.report.replayed_adds == 0
+    assert rec2.report.replayed_deletes == 0
+    s2, i2 = rec2.index.search(setup[1], k=10, **_search_kw(backend))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    rec2.close()
+
+
+# ---------------------------------------------------------------------
+# WAL unit behaviour
+# ---------------------------------------------------------------------
+
+def test_wal_roundtrip_and_fsync_policies(tmp_path):
+    rows = np.arange(12, dtype=np.float32).reshape(3, 4)
+    wal = WriteAheadLog(tmp_path / "w", fsync="always")
+    assert wal.append_add(rows, [5, 6, 7]) == 1
+    assert wal.append_delete([6]) == 2
+    assert wal.append_marker("compact") == 3
+    assert wal.stats()["fsyncs"] == 3
+    wal.close()
+    recs, torn = read_log(tmp_path / "w")
+    assert torn == 0
+    assert [r.seqno for r in recs] == [1, 2, 3]
+    assert [r.kind for r in recs] == [KIND_ADD, KIND_DELETE, KIND_MARKER]
+    np.testing.assert_array_equal(recs[0].rows, rows)
+    np.testing.assert_array_equal(recs[0].ids, [5, 6, 7])
+    np.testing.assert_array_equal(recs[1].ids, [6])
+    assert recs[2].text == "compact"
+
+    woff = WriteAheadLog(tmp_path / "w2", fsync="off")
+    woff.append_delete([1])
+    assert woff.stats()["fsyncs"] == 0
+    woff.close()
+
+
+def test_wal_torn_tail_detected_and_truncated(tmp_path):
+    wal = WriteAheadLog(tmp_path / "w", fsync="off")
+    for i in range(3):
+        wal.append_delete([i])
+    seg = wal.segments()[0]
+    wal.sync()
+    good_len = seg.stat().st_size
+    wal.append_delete([3])
+    wal.close()
+    full_len = seg.stat().st_size
+    # tear the 4th record in half, as a mid-write crash would
+    cut = good_len + (full_len - good_len) // 2
+    with open(seg, "r+b") as f:
+        f.truncate(cut)
+    recs, torn = read_log(tmp_path / "w", truncate=True)
+    assert [r.seqno for r in recs] == [1, 2, 3]
+    assert torn == cut - good_len
+    assert seg.stat().st_size == good_len  # tail cut off on disk
+    recs2, torn2 = read_log(tmp_path / "w")
+    assert torn2 == 0 and len(recs2) == 3
+
+
+def test_wal_bitflip_ends_durable_prefix(tmp_path):
+    wal = WriteAheadLog(tmp_path / "w", fsync="off")
+    for i in range(4):
+        wal.append_delete([10 + i])
+    seg = wal.segments()[0]
+    wal.close()
+    data = bytearray(seg.read_bytes())
+    data[len(data) // 2] ^= 0xFF  # flip a bit mid-log
+    seg.write_bytes(bytes(data))
+    recs, torn = read_log(tmp_path / "w")
+    assert torn > 0
+    assert [r.seqno for r in recs] == list(
+        range(1, len(recs) + 1)
+    )  # intact prefix only, in order
+
+
+def test_wal_rotation_and_segment_gc(tmp_path):
+    wal = WriteAheadLog(tmp_path / "w", fsync="off")
+    wal.append_delete([1])
+    wal.append_delete([2])
+    wal.rotate()
+    wal.append_delete([3])
+    assert len(wal.segments()) == 2
+    assert wal.drop_segments_through(2) == 1
+    recs, _ = read_log(tmp_path / "w")
+    assert [r.seqno for r in recs] == [3]
+    wal.close()
+
+
+def test_wal_delay_fault_is_benign(tmp_path):
+    wal = WriteAheadLog(tmp_path / "w", fsync="off")
+    with faults.active({"wal.append": faults.Delay(at=1, seconds=0.01)}):
+        t0 = time.perf_counter()
+        wal.append_delete([1])
+        assert time.perf_counter() - t0 >= 0.01
+    recs, torn = read_log(tmp_path / "w")
+    assert len(recs) == 1 and torn == 0
+    wal.close()
+
+
+def test_wal_error_requeues_batch_and_retries(setup, tmp_path):
+    """An ordinary WAL failure (disk full, EIO) must neither resolve
+    nor lose the batch: tickets stay pending, the batch requeues, and
+    the retry logs exactly once (no duplicate records)."""
+    X, Qm, cfg, model, kb = setup
+    idx = _build(setup, "flat", "dot", X[:N0])
+    dur = DurableIndex.create(idx, tmp_path / "dur", fsync="always")
+    eng = QueryEngine(idx)
+    eng.attach_durability(dur)
+    with faults.active({"wal.append": faults.Error(at=1)}):
+        t = eng.submit_add(X[:CHUNK])
+        with pytest.raises(TimeoutError):
+            t.result(timeout=0.1)
+        assert eng.stats.wal_failures == 1
+        assert "InjectedError" in eng.stats.wal_last_error
+        snap = eng.stats.snapshot()
+        assert snap["durability"]["wal_failures"] == 1
+    ids = t.result()  # retry path: logs then applies
+    np.testing.assert_array_equal(ids, np.arange(N0, N0 + CHUNK))
+    assert t.wal_seqno == 1
+    recs, _ = read_log(tmp_path / "dur" / "wal")
+    assert [r.kind for r in recs] == [KIND_ADD]
+    dur.close()
+
+
+# ---------------------------------------------------------------------
+# atomic save / typed corruption (satellite: ALL load-path corruption
+# raises CorruptIndexError naming path + failed check)
+# ---------------------------------------------------------------------
+
+@pytest.fixture()
+def saved(setup, tmp_path):
+    X, Qm, cfg, model, kb = setup
+    idx = _build(setup, "flat", "dot", X[:N0])
+    idx.save(tmp_path / "idx")
+    return idx, tmp_path / "idx"
+
+
+def _assert_same_search(setup, a, b):
+    Qm = setup[1]
+    sa, ia = a.search(Qm, k=10)
+    sb, ib = b.search(Qm, k=10)
+    np.testing.assert_array_equal(np.asarray(sa), np.asarray(sb))
+    np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib))
+
+
+def test_load_truncated_npz_raises_typed(saved):
+    idx, p = saved
+    data = (p / "arrays.npz").read_bytes()
+    (p / "arrays.npz").write_bytes(data[: len(data) // 2])
+    with pytest.raises(CorruptIndexError) as e:
+        AshIndex.load(p)
+    assert str(p) in str(e.value)
+
+
+def test_load_bitflipped_npz_raises_typed(saved):
+    idx, p = saved
+    data = bytearray((p / "arrays.npz").read_bytes())
+    data[len(data) // 2] ^= 0xFF
+    (p / "arrays.npz").write_bytes(bytes(data))
+    with pytest.raises(CorruptIndexError):
+        AshIndex.load(p)
+
+
+def test_load_missing_files_raise_typed(saved, tmp_path):
+    idx, p = saved
+    with pytest.raises(CorruptIndexError, match="config.json missing"):
+        AshIndex.load(tmp_path / "nowhere")
+    (p / "arrays.npz").unlink()
+    with pytest.raises(CorruptIndexError, match="arrays.npz missing"):
+        AshIndex.load(p)
+
+
+def test_load_bad_manifest_raises_typed(saved):
+    idx, p = saved
+    (p / "config.json").write_text("{not json")
+    with pytest.raises(CorruptIndexError, match="unreadable"):
+        AshIndex.load(p)
+
+
+def test_load_wrong_format_version_raises_typed(saved):
+    idx, p = saved
+    meta = json.loads((p / "config.json").read_text())
+    meta["format_version"] = 999
+    (p / "config.json").write_text(json.dumps(meta))
+    with pytest.raises(CorruptIndexError, match="format_version"):
+        AshIndex.load(p)
+
+
+def test_load_legacy_save_without_checksums(setup, saved):
+    """Pre-manifest saves (no per-array checksums) still load — and
+    still fail TYPED when their npz is corrupt."""
+    idx, p = saved
+    meta = json.loads((p / "config.json").read_text())
+    del meta["checksums"]
+    (p / "config.json").write_text(json.dumps(meta))
+    _assert_same_search(setup, idx, AshIndex.load(p))
+    data = (p / "arrays.npz").read_bytes()
+    (p / "arrays.npz").write_bytes(data[: len(data) - 40])
+    with pytest.raises(CorruptIndexError):
+        AshIndex.load(p)
+
+
+def test_save_crash_before_fresh_replace_leaves_nothing(setup, saved,
+                                                        tmp_path):
+    idx, _ = saved
+    target = tmp_path / "fresh"
+    with pytest.raises(faults.SimulatedCrash):
+        with faults.active({"save.replace": faults.Crash()}):
+            idx.save(target)
+    assert not target.exists()  # only the dot-tmp dir, never a torn mix
+    idx.save(target)  # and the retry lands cleanly
+    _assert_same_search(setup, idx, AshIndex.load(target))
+
+
+def test_save_crash_between_over_replaces_rolls_forward(setup, saved):
+    """Crash between the two renames of an over-save: new arrays under
+    the old manifest.  load() must detect the mismatch and finish the
+    save from the durable config.new.json."""
+    X = setup[0]
+    idx, p = saved
+    idx.add(X[N0:N0 + CHUNK])  # make the second save differ
+    with pytest.raises(faults.SimulatedCrash):
+        with faults.active({"save.between_replace": faults.Crash()}):
+            idx.save(p)
+    assert (p / "config.new.json").exists()
+    loaded = AshIndex.load(p)  # roll-forward
+    assert loaded.n == idx.n
+    _assert_same_search(setup, idx, loaded)
+    assert not (p / "config.new.json").exists()  # save completed
+    _assert_same_search(setup, idx, AshIndex.load(p))
+
+
+def test_save_garbage_new_files_are_ignored(setup, saved):
+    """Leftover partial .new files from a crash mid-write must not
+    shadow the intact live pair."""
+    idx, p = saved
+    (p / "arrays.new.npz").write_bytes(b"partial garbage")
+    (p / "config.new.json").write_text("{also garb")
+    _assert_same_search(setup, idx, AshIndex.load(p))
+
+
+# ---------------------------------------------------------------------
+# frontend: drain/abort vs the WAL (satellite)
+# ---------------------------------------------------------------------
+
+def _frontend_fixture(setup, root, max_wait_s=60.0):
+    """Engine + durability + driver whose cadence will NOT apply
+    mutations on its own (huge max_wait_s, huge mutation backlog
+    bound) — staged-but-unapplied is the steady state until stop()."""
+    X = setup[0]
+    idx = _build(setup, "flat", "dot", X[:N0])
+    dur = DurableIndex.create(idx, root, fsync="always")
+    eng = QueryEngine(
+        idx, max_wait_s=max_wait_s, max_pending_mutations=10_000
+    )
+    eng.attach_durability(dur)
+    fe = ServingFrontend(eng, poll_interval_s=0.002).start()
+    return idx, dur, eng, fe
+
+
+def test_frontend_drain_applies_and_logs_staged_mutations(
+    setup, tmp_path
+):
+    X = setup[0]
+    idx, dur, eng, fe = _frontend_fixture(setup, tmp_path / "dur")
+    ta = fe.submit_add(X[:CHUNK])
+    td = fe.submit_delete([0, 1, 2])
+    assert idx.pending_rows == CHUNK  # staged, not applied
+    assert not ta.done and not td.done
+    fe.stop(drain=True)
+    assert ta.done and td.done  # applied before the driver exited
+    assert ta.wal_seqno == 1 and td.wal_seqno == 2  # and WAL-logged
+    assert td.result() == 3
+    recs, torn = read_log(tmp_path / "dur" / "wal")
+    assert torn == 0
+    assert [r.kind for r in recs] == [KIND_ADD, KIND_DELETE]
+    dur.close()
+    rec = DurableIndex.open(tmp_path / "dur")
+    assert rec.index.n_live == idx.n_live
+    _assert_same_search(setup, idx, rec.index)
+    rec.close()
+
+
+def test_frontend_abort_leaves_replayable_wal(setup, tmp_path):
+    """stop(drain=False) fails queued QUERY tickets but still applies
+    + logs pending mutations — the WAL replays to the exact state."""
+    X, Qm = setup[0], setup[1]
+    idx, dur, eng, fe = _frontend_fixture(setup, tmp_path / "dur")
+    ta = fe.submit_add(X[CHUNK:2 * CHUNK])
+    tq = fe.submit(Qm[:1], k=5)  # sub-bucket: parked until stop
+    fe.stop(drain=False)
+    assert ta.done and ta.wal_seqno == 1
+    assert isinstance(tq.error, FrontendClosed)
+    dur.close()
+    rec = DurableIndex.open(tmp_path / "dur")
+    assert rec.report.replayed_adds == 1
+    _assert_same_search(setup, idx, rec.index)
+    rec.close()
+
+
+# ---------------------------------------------------------------------
+# compactor: checkpoint-then-truncate + supervision
+# ---------------------------------------------------------------------
+
+def test_compactor_swap_checkpoints_and_truncates_wal(setup, tmp_path):
+    X = setup[0]
+    idx = _build(setup, "flat", "dot", X[:N0])
+    dur = DurableIndex.create(idx, tmp_path / "dur", fsync="always")
+    eng = QueryEngine(idx, auto_compact=0.01)
+    eng.attach_durability(dur)
+    comp = BackgroundCompactor(eng)  # attached; run synchronously
+    eng.submit_add(X[:CHUNK]).result()
+    eng.submit_delete(list(range(10))).result()
+    bytes_before = dur.wal.nbytes
+    assert bytes_before > 0
+    assert comp.run_once("default")  # swap + checkpoint + truncate
+    stats = dur.stats()
+    # the marker logged at swap is covered by the checkpoint too
+    assert stats["checkpoint_seqno"] == stats["last_seqno"] == 3
+    assert dur.wal.nbytes == 0  # covered segments dropped
+    rec = DurableIndex.open(tmp_path / "dur")
+    assert rec.report.checkpoint_seqno == 3
+    assert rec.report.replayed_adds == 0  # nothing left to replay
+    assert rec.index.n_dead == 0  # the compacted state was persisted
+    _assert_same_search(setup, idx, rec.index)
+    rec.close()
+    dur.close()
+
+
+def test_compactor_records_failures_and_health(setup, tmp_path):
+    X = setup[0]
+    idx = _build(setup, "flat", "dot", X[:N0])
+    eng = QueryEngine(idx)
+    comp = BackgroundCompactor(eng, max_dead_fraction=0.0,
+                               max_failures=2).start()
+    idx.delete(list(range(8)))
+    try:
+        with faults.active(
+            {"compactor.swap": faults.Error(at=1, repeat=True)}
+        ):
+            for _ in range(2):
+                comp.request("default")
+                assert comp.wait_idle(10.0)
+                assert _wait_until(
+                    lambda: eng.stats.compact_failures >= 1
+                )
+            assert _wait_until(
+                lambda: eng.stats.compact_consecutive_failures >= 2
+            )
+            assert not comp.healthy()
+            assert "InjectedError" in comp.last_error
+            snap = eng.stats.snapshot()["supervision"]
+            assert snap["compact_failures"] >= 2
+        # fault cleared: the next run succeeds and resets the streak
+        comp.request("default")
+        assert comp.wait_idle(10.0)
+        assert _wait_until(
+            lambda: eng.stats.compact_consecutive_failures == 0
+        )
+        assert comp.healthy()
+        assert idx.n_dead == 0
+    finally:
+        comp.stop()
+
+
+def test_driver_failure_streak_fails_queued_tickets(setup, tmp_path):
+    """A persistently failing driver tick must not hang callers: after
+    max_driver_failures consecutive failures, queued query tickets
+    fail with the captured cause, and healthy() flips False — then
+    recovers once the fault clears."""
+    X, Qm = setup[0], setup[1]
+    idx = _build(setup, "flat", "dot", X[:N0])
+    eng = QueryEngine(idx, max_wait_s=0.005)
+    fe = ServingFrontend(
+        eng, poll_interval_s=0.002, max_driver_failures=3
+    ).start()
+    try:
+        with faults.active(
+            {"engine.apply": faults.Error(at=1, repeat=True)}
+        ):
+            tm = fe.submit_add(X[:CHUNK])  # every aged apply now fails
+            assert _wait_until(
+                lambda: eng.stats.driver_consecutive_failures >= 3
+            )
+            assert not fe.healthy()
+            assert "InjectedError" in fe.last_error
+            tq = fe.submit(Qm[:1], k=5)
+            assert _wait_until(lambda: tq.done, timeout=5.0)
+            assert isinstance(tq.error, faults.InjectedError)
+            with pytest.raises(RuntimeError):
+                tq.result(timeout=1.0)
+            assert not tm.done  # mutations stay queued, never lost
+        # fault cleared: the driver applies the backlog and recovers
+        ids = tm.result(timeout=10.0)
+        np.testing.assert_array_equal(ids, np.arange(N0, N0 + CHUNK))
+        assert _wait_until(
+            lambda: eng.stats.driver_consecutive_failures == 0
+        )
+        assert fe.healthy()
+        snap = eng.stats.snapshot()["supervision"]
+        assert snap["driver_failures"] >= 3
+    finally:
+        fe.stop()

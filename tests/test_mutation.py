@@ -228,12 +228,19 @@ def test_sharded_add_recomputes_stats_and_raw(setup, tmp_path):
     idx = _build(setup, "sharded", "l2", X[:N0], **opts)
     idx.save(tmp_path / "full")
 
-    # simulate a pre-stats snapshot: strip the stats arrays
+    # simulate a pre-stats snapshot: strip the stats arrays (and their
+    # manifest checksums — a genuine pre-stats save carries neither,
+    # and load() rightly rejects a manifest/npz entry mismatch)
     with np.load(tmp_path / "full" / "arrays.npz") as npz:
         kept = {k: npz[k] for k in npz.files if not k.startswith("stats.")}
     np.savez(tmp_path / "full" / "arrays.npz", **kept)
     meta = json.loads((tmp_path / "full" / "config.json").read_text())
     assert any(k.startswith("stats.") for k in meta["dtypes"])  # was saved
+    meta["checksums"] = {
+        k: v for k, v in meta["checksums"].items()
+        if not k.startswith("stats.")
+    }
+    (tmp_path / "full" / "config.json").write_text(json.dumps(meta))
 
     for source in ("live", "loaded"):
         ix = idx if source == "live" else AshIndex.load(

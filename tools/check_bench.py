@@ -10,7 +10,10 @@ perf trajectory.  Rows carrying the concurrent-serving invariant pairs
 are also checked structurally: ``qps`` must not fall below
 ``qps_single`` (concurrent clients sharing buckets can only help), and
 ``p99_bg_compact_ms`` must stay strictly below ``p99_sync_compact_ms``
-(off-thread compaction must actually leave the serving path).  Engine
+(off-thread compaction must actually leave the serving path), and on
+the durability row ``interval_muts_per_s`` must hold at least 0.8x
+``nowal_muts_per_s`` (the default WAL fsync policy may not cost more
+than 20% of the no-WAL mutation throughput).  Engine
 IVF rows that ran the candidate-row cost model (marked by a
 ``row_budget`` derived field) are gated against the direct IVF row of
 the same file: ``p99_ms`` at or below direct's and ``qps`` at >= 2x —
@@ -88,6 +91,15 @@ def _invariant_problems(path: str, r: dict) -> list[str]:
             f"{path}: {r['name']} p99_bg_compact_ms {bg:g} >= "
             f"p99_sync_compact_ms {sync:g} (background compaction "
             f"not off the serving path)"
+        )
+    nowal = _num("nowal_muts_per_s")
+    interval = _num("interval_muts_per_s")
+    if nowal is not None and interval is not None \
+            and interval < 0.8 * nowal:
+        problems.append(
+            f"{path}: {r['name']} interval_muts_per_s {interval:g} < "
+            f"0.8x nowal_muts_per_s {nowal:g} (WAL overhead under the "
+            f"default fsync policy exceeds the durability budget)"
         )
     return problems
 
