@@ -15,11 +15,19 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import D, QUICK, dataset, row, timed
+from benchmarks.common import D, N, NQ, QUICK, dataset, row, timed
 from repro.baselines import pq
 from repro.core import ASHConfig, encode, payload_stats, prepare_queries, train
 from repro.core import scoring as S
 from repro.kernels import ops
+
+
+def srow(name: str, us: float, derived: str, *, b: int = 2) -> str:
+    """A kernel row stamped with the corpus shape it was measured on
+    — (n, d, b, m) — so ``tools/check_bench.py --baseline`` can refuse
+    to diff timings taken on different problem sizes."""
+    shape = f"n={N};d={D};b={b};m={NQ}"
+    return row(name, us, f"{derived};{shape}" if derived else shape)
 
 
 def scoring_paths():
@@ -32,20 +40,20 @@ def scoring_paths():
 
     _, us = timed(S.score_dot, model, prep, pay, repeats=3)
     n_scores = Qm.shape[0] * X.shape[0]
-    rows.append(row("kernel/ash_score_jnp", us,
+    rows.append(srow("kernel/ash_score_jnp", us,
                     f"ns_per_dot={1e3 * us / n_scores:.3f}"))
 
     _, us = timed(
         lambda: ops.ash_score(model, prep, pay, use_pallas=False),
         repeats=3,
     )
-    rows.append(row("kernel/ash_score_ref", us,
+    rows.append(srow("kernel/ash_score_ref", us,
                     f"ns_per_dot={1e3 * us / n_scores:.3f}"))
 
     st = pq.train(jax.random.PRNGKey(0), X, M=12, b=8, kmeans_iters=10)
     enc = pq.encode(st, X)
     _, us = timed(pq.score, st, enc, Qm, repeats=3)
-    rows.append(row("kernel/pq_adc_gather", us,
+    rows.append(srow("kernel/pq_adc_gather", us,
                     f"ns_per_dot={1e3 * us / n_scores:.3f}"))
 
     # payload footprint: packed codes vs fp32 vectors
@@ -54,7 +62,7 @@ def scoring_paths():
         pay.codes.size * 4 + pay.scale.size * 2 + pay.offset.size * 2
         + pay.cluster.size * 1
     )
-    rows.append(row("kernel/payload_bytes", 0.0,
+    rows.append(srow("kernel/payload_bytes", 0.0,
                     f"fp32={fp32};ash={packed};"
                     f"compression={fp32 / packed:.1f}x"))
     return rows
@@ -78,14 +86,14 @@ def fused_metric_paths():
     }
     for metric in ("l2", "cos"):
         _, us = timed(refs[metric], repeats=3)
-        rows.append(row(f"kernel/ash_score_{metric}_jnp", us,
+        rows.append(srow(f"kernel/ash_score_{metric}_jnp", us,
                         f"ns_per_dot={1e3 * us / n_scores:.3f}"))
         fused = jax.jit(functools.partial(
             ops.ash_score, model, prep, pay, metric=metric, stats=stats,
             use_pallas=False,
         ))
         _, us_f = timed(fused, repeats=3)
-        rows.append(row(f"kernel/ash_score_{metric}_fused", us_f,
+        rows.append(srow(f"kernel/ash_score_{metric}_fused", us_f,
                         f"ns_per_dot={1e3 * us_f / n_scores:.3f};"
                         f"speedup_vs_jnp={us / max(us_f, 1e-9):.2f}x"))
 
@@ -94,14 +102,14 @@ def fused_metric_paths():
         ops.ash_score(model, prep, pay, metric="l2", stats=stats,
                       use_pallas=False), k))
     _, us_m = timed(mat, repeats=3)
-    rows.append(row("kernel/ash_score_topk_materialize", us_m,
+    rows.append(srow("kernel/ash_score_topk_materialize", us_m,
                     f"k={k};ns_per_dot={1e3 * us_m / n_scores:.3f}"))
     fused_tk = jax.jit(functools.partial(
         ops.ash_score_topk, model, prep, pay, k, metric="l2",
         stats=stats, use_pallas=False,
     ))
     _, us_t = timed(fused_tk, repeats=3)
-    rows.append(row("kernel/ash_score_topk_fused", us_t,
+    rows.append(srow("kernel/ash_score_topk_fused", us_t,
                     f"k={k};ns_per_dot={1e3 * us_t / n_scores:.3f};"
                     f"speedup_vs_materialize={us_m / max(us_t, 1e-9):.2f}x"))
     return rows
@@ -137,7 +145,7 @@ def gathered_scan_paths():
 
     rowwise = jax.jit(lambda: jax.vmap(rowwise_one)(prep, cand))
     _, us_r = timed(rowwise, repeats=3)
-    rows_out.append(row("kernel/ash_score_gather_rowwise", us_r,
+    rows_out.append(srow("kernel/ash_score_gather_rowwise", us_r,
                         f"R={R};ns_per_dot={1e3 * us_r / n_scores:.3f}"))
 
     fused = jax.jit(functools.partial(
@@ -145,21 +153,21 @@ def gathered_scan_paths():
         stats=stats, use_pallas=False,
     ))
     _, us_f = timed(fused, repeats=3)
-    rows_out.append(row("kernel/ash_score_gather_fused", us_f,
+    rows_out.append(srow("kernel/ash_score_gather_fused", us_f,
                         f"R={R};ns_per_dot={1e3 * us_f / n_scores:.3f};"
                         f"speedup_vs_rowwise={us_r / max(us_f, 1e-9):.2f}x"))
 
     k = 100
     mat = jax.jit(lambda: jax.lax.top_k(fused(), k))
     _, us_m = timed(mat, repeats=3)
-    rows_out.append(row("kernel/ash_score_gather_topk_materialize", us_m,
+    rows_out.append(srow("kernel/ash_score_gather_topk_materialize", us_m,
                         f"k={k};R={R}"))
     fused_tk = jax.jit(functools.partial(
         ops.ash_score_gather_topk, model, prep, pay, cand, k,
         metric="l2", stats=stats, use_pallas=False,
     ))
     _, us_t = timed(fused_tk, repeats=3)
-    rows_out.append(row(
+    rows_out.append(srow(
         "kernel/ash_score_gather_topk_fused", us_t,
         f"k={k};R={R};"
         f"speedup_vs_materialize={us_m / max(us_t, 1e-9):.2f}x"))
@@ -196,7 +204,7 @@ def sharded_scan_paths():
     _, us_r = timed(
         lambda: ref_fn(state.sharded, prep), repeats=3
     )
-    rows_out.append(row("kernel/sharded_scan_ref", us_r,
+    rows_out.append(srow("kernel/sharded_scan_ref", us_r,
                         f"ns_per_dot={1e3 * us_r / n_scores:.3f}"))
 
     fused_fn = state.searcher(10)
@@ -205,11 +213,96 @@ def sharded_scan_paths():
                          stats=state.sharded_stats),
         repeats=3,
     )
-    rows_out.append(row("kernel/sharded_scan_fused", us_f,
+    rows_out.append(srow("kernel/sharded_scan_fused", us_f,
                         f"ns_per_dot={1e3 * us_f / n_scores:.3f};"
                         f"speedup_vs_ref={us_r / max(us_f, 1e-9):.2f}x"))
     return rows_out
 
 
+def coarse_scan_paths():
+    """Symmetric int8 first pass vs the asymmetric scan it shortcuts,
+    plus the shortlist-recall sweep behind ``ops.DEFAULT_SHORTLIST``.
+
+    The coarse jnp row is one fp32 BLAS matmul over the persisted
+    ``CoarseCodes`` value cache (no per-call unpack); the fused row is
+    the full coarse-topk + asymmetric-refine pipeline
+    (``ops.coarse_refine_topk``).  The sweep reports recall@10 of the
+    coarse+refine pipeline against the pure asymmetric top-10 across
+    shortlist sizes L — the exactness loss the first pass trades for
+    its scan speed.
+
+    Expect speedup ~1.0x on CPU: XLA:CPU fuses the code unpack into
+    the asymmetric scan for free and runs both passes as the
+    same-size f32 BLAS GEMM, so the rows document BLAS parity there.
+    The int8 win these rows exist to track appears where an integer
+    MXU runs the coarse accumulation at a multiple of fp32
+    throughput (and at a quarter of the operand bandwidth) —
+    check_bench's serving-side throughput gate likewise only arms on
+    accelerator platforms."""
+    X, Qm, _ = dataset()
+    rows = []
+    cfg = ASHConfig(b=2, d=D, n_landmarks=16)
+    model, _ = train(jax.random.PRNGKey(0), X, cfg)
+    pay = encode(model, X)
+    prep = prepare_queries(model, Qm)
+    stats = payload_stats(model, pay)
+    coarse = S.coarse_codes(pay)
+    cprep = S.prepare_coarse_queries(prep, coarse.mean)
+    n_scores = Qm.shape[0] * X.shape[0]
+    k = 10
+
+    # Operands ride as traced jit ARGUMENTS here, never as bound
+    # constants: constant operands let XLA fold entire GEMMs at
+    # compile time (the compile log even warns about it), and a
+    # folded scan "benchmarks" at dispatch cost.
+    asym = jax.jit(lambda mo, pr, pa, st: ops.ash_score(
+        mo, pr, pa, metric="dot", stats=st, use_pallas=False))
+    _, us_a = timed(asym, model, prep, pay, stats, repeats=3)
+
+    cjnp = jax.jit(lambda mo, pr, pa, st, co, cp: ops.ash_score_coarse(
+        mo, pr, pa, metric="dot", stats=st, coarse=co, cprep=cp,
+        use_pallas=False))
+    _, us = timed(cjnp, model, prep, pay, stats, coarse, cprep,
+                  repeats=3)
+    rows.append(srow("kernel/ash_score_coarse_jnp", us,
+                     f"ns_per_dot={1e3 * us / n_scores:.3f};"
+                     f"speedup_vs_asym={us_a / max(us, 1e-9):.2f}x"))
+
+    L = ops.DEFAULT_SHORTLIST
+    fused = jax.jit(lambda mo, pr, pa, st, co: ops.coarse_refine_topk(
+        mo, pr, pa, k, shortlist=L, metric="dot", stats=st, coarse=co,
+        use_pallas=False))
+    asym_tk = jax.jit(lambda mo, pr, pa, st: ops.ash_score_topk(
+        mo, pr, pa, k, metric="dot", stats=st, use_pallas=False))
+    _, us_at = timed(asym_tk, model, prep, pay, stats, repeats=3)
+    _, us_f = timed(fused, model, prep, pay, stats, coarse, repeats=3)
+    rows.append(srow("kernel/ash_score_coarse_fused", us_f,
+                     f"k={k};L={L};"
+                     f"ns_per_dot={1e3 * us_f / n_scores:.3f};"
+                     f"speedup_vs_asym_topk="
+                     f"{us_at / max(us_f, 1e-9):.2f}x"))
+
+    # shortlist sweep: recall@10 of coarse+refine vs asymmetric top-10
+    # per L.  DEFAULT_SHORTLIST (ops.py) is the smallest swept L that
+    # holds recall >= 0.999 on this corpus — re-run after retuning.
+    import numpy as np
+
+    base = np.asarray(asym_tk(model, prep, pay, stats)[1])
+    parts = []
+    for L_s in (32, 64, 128, 256, 512):
+        ids = np.asarray(ops.coarse_refine_topk(
+            model, prep, pay, k, shortlist=L_s, metric="dot",
+            stats=stats, coarse=coarse, use_pallas=False,
+        )[1])
+        rec = float(np.mean([
+            len(set(a.tolist()) & set(b.tolist())) / k
+            for a, b in zip(ids, base)
+        ]))
+        parts.append(f"recall_at_10_L{L_s}={rec:.4f}")
+    rows.append(srow("kernel/coarse_shortlist_sweep", 0.0,
+                     ";".join(parts) + f";default_L={L}"))
+    return rows
+
+
 ALL = [scoring_paths, fused_metric_paths, gathered_scan_paths,
-       sharded_scan_paths]
+       sharded_scan_paths, coarse_scan_paths]

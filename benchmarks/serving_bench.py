@@ -15,9 +15,10 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import D, QUICK, dataset, row
+from benchmarks.common import D, QUICK, dataset, recall10, row
 from repro.core import ASHConfig
 from repro.index import AshIndex
+from repro.index.common import default_shortlist
 from repro.serving.engine import QueryEngine
 
 
@@ -100,6 +101,48 @@ def serving_engine():
             f"batches={st['batches']};fill={st['bucket_fill']};"
             f"traces={st['unique_buckets']}",
         ))
+
+    # coarse first pass through the engine: the same request mix and
+    # bucket as engine_flat_b8, with ``coarse="int8"`` riding the opts
+    # into the group key (coarse and asymmetric requests never share a
+    # fused call).  Both modes are measured here back to back so the
+    # row is self-contained: check_bench gates it (full size only) at
+    # qps >= 1.5x qps_asym with recall@10 within 1 point — the
+    # serving-side win of the symmetric first pass.  The throughput
+    # half only arms on accelerator rows (see the platform stamp):
+    # XLA:CPU fuses the code unpack into the asymmetric scan and runs
+    # both passes as the same-size f32 BLAS GEMM, so parity (~1.0x) is
+    # the expected CPU result and only the recall half gates there.
+    qps_by, rec_by, dt_by = {}, {}, {}
+    for mode in ("asym", "coarse"):
+        kw = {} if mode == "asym" else {"coarse": "int8"}
+        engine = QueryEngine(index, batch_buckets=(8,), max_wait_s=0.005)
+        for i, m in reqs:  # warmup: compile the mode's trace family
+            engine.submit(Qm[i:i + m], k=10, **kw)
+        engine.flush()
+        engine = QueryEngine(index, batch_buckets=(8,), max_wait_s=0.005)
+        t0 = time.perf_counter()
+        tickets = [
+            engine.submit(Qm[i:i + m], k=10, **kw) for i, m in reqs
+        ]
+        engine.flush()
+        dt = time.perf_counter() - t0
+        ids = np.concatenate(
+            [np.asarray(t.result()[1]) for t in tickets]
+        )
+        qps_by[mode] = n_rows / dt
+        rec_by[mode] = recall10(ids, gt)
+        dt_by[mode] = dt
+    rows.append(row(
+        "serving/coarse_flat",
+        1e6 * dt_by["coarse"] / len(reqs),
+        f"qps={qps_by['coarse']:.0f};qps_asym={qps_by['asym']:.0f};"
+        f"speedup={qps_by['coarse'] / max(qps_by['asym'], 1e-9):.2f}x;"
+        f"recall_at_10={rec_by['coarse']:.4f};"
+        f"recall_at_10_asym={rec_by['asym']:.4f};"
+        f"shortlist={default_shortlist()};"
+        f"platform={jax.default_backend()}",
+    ))
 
     # IVF rows measure serving under CONCURRENT load, where the tail
     # actually lives: closed-loop clients each submit a 1-row request

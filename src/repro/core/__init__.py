@@ -1,6 +1,7 @@
 """ASH core: the paper's contribution as a composable JAX module."""
 from repro.core.types import (
-    ASHConfig, ASHModel, ASHPayload, ASHStats, QueryPrep,
+    ASHConfig, ASHModel, ASHPayload, ASHStats, CoarseCodes,
+    CoarseQueryPrep, QueryPrep,
 )
 from repro.core import quantization
 from repro.core import learning
@@ -8,7 +9,9 @@ from repro.core import ash
 from repro.core import scoring
 from repro.core.ash import train, encode, decode, random_model
 from repro.core.scoring import (
+    coarse_codes,
     payload_stats,
+    prepare_coarse_queries,
     prepare_queries,
     score_dot,
     score_dot_1bit,
@@ -18,9 +21,11 @@ from repro.core.scoring import (
 )
 
 __all__ = [
-    "ASHConfig", "ASHModel", "ASHPayload", "ASHStats", "QueryPrep",
+    "ASHConfig", "ASHModel", "ASHPayload", "ASHStats", "CoarseCodes",
+    "CoarseQueryPrep", "QueryPrep",
     "quantization", "learning", "ash", "scoring",
     "train", "encode", "decode", "random_model",
-    "payload_stats", "prepare_queries", "score_dot", "score_dot_1bit",
+    "coarse_codes", "payload_stats", "prepare_coarse_queries",
+    "prepare_queries", "score_dot", "score_dot_1bit",
     "score_l2", "score_cosine", "score_symmetric_dot",
 ]

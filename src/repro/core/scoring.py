@@ -14,7 +14,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import quantization as Q
-from repro.core.types import ASHModel, ASHPayload, ASHStats, QueryPrep
+from repro.core.types import (
+    ASHModel, ASHPayload, ASHStats, CoarseCodes, CoarseQueryPrep,
+    QueryPrep,
+)
 
 _EPS = 1e-12
 
@@ -97,6 +100,64 @@ def payload_stats(model: ASHModel, payload: ASHPayload) -> ASHStats:
         res_norm=res_norm.astype(jnp.float32),
         ip_x_mu=ip_x_mu.astype(jnp.float32),
         x_sq=x_sq.astype(jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Symmetric int8 coarse pass (query quantizer + dequantized-code cache)
+# ---------------------------------------------------------------------------
+
+# int8 query grid half-width; paired with the |code| <= 255 (b=8) bound
+# this keeps every coarse partial sum under 2^24 for d_pad <= 512, so
+# fp32 accumulation of the integer products is EXACT — the jnp coarse
+# path (one BLAS matmul over CoarseCodes.values) is bitwise equal to
+# the Pallas kernel's int32 MXU accumulation.
+COARSE_QMAX = 127
+
+
+def coarse_codes(payload: ASHPayload) -> CoarseCodes:
+    """Build the :class:`CoarseCodes` cache for a payload.
+
+    One decompression pass at build/add/compact/load time (like
+    :func:`payload_stats`); afterwards the coarse jnp scan is a single
+    fp32 BLAS matmul over exact-integer values — no per-call unpack.
+    """
+    d_pad = payload.codes.shape[1] * Q.codes_per_word(payload.b)
+    V = Q.unpack_codes(payload.codes, d_pad, payload.b).astype(
+        jnp.float32
+    )
+    scale = payload.scale.astype(jnp.float32)
+    return CoarseCodes(
+        values=V, mean=jnp.mean(scale[:, None] * V, axis=0)
+    )
+
+
+@jax.jit
+def prepare_coarse_queries(
+    prep: QueryPrep, mean: jax.Array
+) -> CoarseQueryPrep:
+    """Symmetric int8 quantization of the projected queries.
+
+    Per-query scale ``s = max|q_proj| / 127`` (eps-guarded), codes
+    ``round(q_proj / s)`` clipped to [-127, 127].  The correction term
+    ``q_corr = <q_proj - s * q_int8, mean>`` (``mean`` from
+    :func:`coarse_codes`) folds the average residual contribution into
+    the Eq. (20) base score, making the coarse score an unbiased
+    estimate of the asymmetric score against the corpus mean.
+    """
+    qp = prep.q_proj.astype(jnp.float32)
+    s = jnp.maximum(jnp.max(jnp.abs(qp), axis=-1), _EPS) / COARSE_QMAX
+    qi = jnp.clip(
+        jnp.round(qp / s[..., None]), -COARSE_QMAX, COARSE_QMAX
+    )
+    resid = qp - s[..., None] * qi
+    # mean is (d_pad,) from the packed-code width; q_proj is (…, d) with
+    # d <= d_pad.  A zero-padded residual column contributes nothing, so
+    # slicing mean to the query width is exact.
+    return CoarseQueryPrep(
+        q_int8=qi.astype(jnp.int8),
+        q_scale=s,
+        q_corr=resid @ mean.astype(jnp.float32)[: qp.shape[-1]],
     )
 
 

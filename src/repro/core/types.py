@@ -156,3 +156,50 @@ class QueryPrep:
     q_proj: jax.Array  # (..., d)  q-breve = W q
     ip_q_landmarks: jax.Array  # (..., C) <q, mu_c>
     q_sq_norm: jax.Array  # (...,) ||q||^2  (for L2)
+
+
+@pytree_dataclass
+class CoarseCodes:
+    """Pre-dequantized code matrix for the symmetric int8 coarse scan.
+
+    ``values`` holds the payload's grid values as EXACT small integers
+    in fp32 (``2*level - (2^b - 1)``, at most +-255) so the coarse jnp
+    path runs one BLAS matmul per call with no per-call ``unpack_codes``
+    pass — the unpack the asymmetric jnp scan pays every search.  All
+    partial sums stay below 2^24, so fp32 accumulation of these integer
+    products is exact and bitwise equal to the Pallas kernel's int32
+    MXU accumulation.
+
+    ``mean`` is the scale-weighted corpus mean of the dequantized rows,
+    ``mean_j(SCALE_j * v_j)`` (d_pad,) — the correction operand that
+    makes coarse scores corpus-mean-unbiased estimates of the
+    asymmetric score (see ``scoring.prepare_coarse_queries``).
+
+    Derived from the payload (never persisted): rebuilt at build / add
+    / compact / load alongside ``ASHStats``.
+    """
+
+    values: jax.Array  # (n, d_pad) fp32 exact grid values
+    mean: jax.Array  # (d_pad,) fp32 mean_j(scale_j * v_j)
+
+    @property
+    def n(self) -> int:
+        return self.values.shape[0]
+
+
+@pytree_dataclass
+class CoarseQueryPrep:
+    """Per-query int8 symmetric quantization of ``QueryPrep.q_proj``.
+
+    q_int8 = round(q_proj / q_scale) with a per-query symmetric scale
+    q_scale = max|q_proj| / 127, so the coarse first pass accumulates
+    int8 x int8 dot products on the MXU.  ``q_corr`` is the
+    ``ASHStats``-style correction ``<q_proj - q_scale * q_int8,
+    mean_j(scale_j * v_j)>`` folded into the Eq. (20) base score so the
+    coarse estimate is unbiased against the corpus mean (it cancels the
+    average quantization-residual contribution).
+    """
+
+    q_int8: jax.Array  # (m, d_pad) int8
+    q_scale: jax.Array  # (m,) fp32 per-query symmetric scale
+    q_corr: jax.Array  # (m,) fp32 residual correction term

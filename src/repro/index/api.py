@@ -351,6 +351,7 @@ class FlatBackend:
         return F.FlatIndex(
             metric=metric, model=model, payload=payload, raw=raw,
             stats=S.payload_stats(model, payload),
+            coarse=S.coarse_codes(payload),
         )
 
     @staticmethod
@@ -432,6 +433,9 @@ class FlatBackend:
             ids=arrays.get("ids"),
             live=arrays.get("live"),
             next_id=meta.get("next_id"),
+            # derived from the payload deterministically, so rebuild
+            # on load (== the saved index's cache) instead of persisting
+            coarse=S.coarse_codes(payload),
         )
 
 
@@ -487,12 +491,12 @@ class IVFBackend:
         return np.asarray(IV._probe_lists(state, prep, nprobe))
 
     @staticmethod
-    def search_probed(state, prep, probe, *, k, rerank=0):
+    def search_probed(state, prep, probe, *, k, rerank=0, **opts):
         """Top-k over an explicit probed-list set (budgeted gather
         entry point); ``probe`` as returned by :meth:`probe_sets`."""
         return IV._search_probed(
             state, prep, jnp.asarray(probe, dtype=jnp.int32),
-            k=k, rerank=rerank,
+            k=k, rerank=rerank, **opts,
         )
 
     @staticmethod
@@ -577,6 +581,7 @@ class IVFBackend:
             stats=_stats_from_arrays(arrays, model, payload),
             live=arrays.get("live"),
             next_id=meta.get("next_id"),
+            coarse=S.coarse_codes(payload),  # derived; never persisted
         )
 
 
@@ -660,19 +665,21 @@ class ShardedState:
             self.axes,
         )
 
-    def searcher(self, k: int, rerank: int = 0):
+    def searcher(self, k: int, rerank: int = 0,
+                 coarse: Optional[str] = None,
+                 shortlist: Optional[int] = None):
         """(payload, QueryPrep) -> (scores, ids) searcher, cached per
-        (k, rerank shortlist).
+        (k, rerank shortlist, coarse mode, coarse shortlist).
 
         Prep-based so the direct and engine paths share one compiled
         function (queries are prepped outside the shard_map, once,
         instead of redundantly on every shard)."""
-        key = (k, rerank)
+        key = (k, rerank, coarse, shortlist)
         if key not in self.searchers:
             self.searchers[key] = DX.make_sharded_search_prepped(
                 self.mesh, self.model, self.axes, k,
                 metric=self.metric, n_real=self.payload.n,
-                rerank=rerank,
+                rerank=rerank, coarse=coarse, shortlist=shortlist,
             )
         return self.searchers[key]
 
@@ -722,21 +729,24 @@ class ShardedBackend:
         )
 
     @staticmethod
-    def search(state, queries, *, k, nprobe=None, rerank=0):
+    def search(state, queries, *, k, nprobe=None, rerank=0,
+               coarse=None, shortlist=None):
         prep = S.prepare_queries(state.model, queries)
         return ShardedBackend.search_prepped(
-            state, prep, k=k, nprobe=nprobe, rerank=rerank
+            state, prep, k=k, nprobe=nprobe, rerank=rerank,
+            coarse=coarse, shortlist=shortlist,
         )
 
     @staticmethod
-    def search_prepped(state, prep, *, k, nprobe=None, rerank=0):
-        del nprobe  # no coarse routing in the scatter-gather scan
+    def search_prepped(state, prep, *, k, nprobe=None, rerank=0,
+                       coarse=None, shortlist=None):
+        del nprobe  # no list routing in the scatter-gather scan
         if rerank and state.raw is None:
             raise ValueError(
                 "rerank on the sharded backend requires keep_raw=True "
                 "(bf16 raw shards are distributed with the payload)"
             )
-        s, rows = state.searcher(k, rerank)(
+        s, rows = state.searcher(k, rerank, coarse, shortlist)(
             state.sharded, prep,
             stats=state.sharded_stats, raw=state.sharded_raw,
             valid=state.sharded_valid,
@@ -975,7 +985,13 @@ class AshIndex:
         **opts,
     ) -> tuple[jax.Array, jax.Array]:
         """Top-k search: (scores, ids), each (m, k), higher-is-better
-        scores for every metric; id -1 marks a missing candidate."""
+        scores for every metric; id -1 marks a missing candidate.
+
+        ``coarse="int8"`` (every backend) runs the symmetric int8
+        first-pass scan and asymmetrically rescores only the top
+        ``shortlist`` candidates per query — faster on big scans, and
+        exact (bit-identical to ``coarse=None``) whenever the
+        shortlist covers the scanned rows."""
         return self._backend.search(
             self._state, queries, k=k, nprobe=nprobe, rerank=rerank,
             **opts,

@@ -29,10 +29,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import scoring as S
-from repro.core.types import ASHModel, ASHPayload, ASHStats, QueryPrep
+from repro.core.types import (
+    ASHModel, ASHPayload, ASHStats, CoarseCodes, QueryPrep,
+)
 
 NEG_INF = -jnp.inf
 METRICS = ("dot", "l2", "cos")
+COARSE_MODES = ("int8",)
 _EPS = 1e-12
 
 
@@ -124,6 +127,14 @@ def fused_topk_limit() -> int:
     return K.FUSED_TOPK_MAX_K
 
 
+def default_shortlist() -> int:
+    """Default coarse-shortlist size L (see kernels.ops, picked by the
+    kernel-bench recall sweep)."""
+    from repro.kernels import ops as K
+
+    return K.DEFAULT_SHORTLIST
+
+
 # ---------------------------------------------------------------------------
 # ScanPlan — the single scoring path every backend lowers to
 # ---------------------------------------------------------------------------
@@ -156,6 +167,18 @@ class ScanPlan:
     (IVF stores rows sorted by list).  ``use_pallas``: None = auto
     (Pallas on TPU, the bit-identical-semantics jnp oracle on CPU),
     False = the retained pure-jnp reference scorers.
+
+    FIRST PASS: ``coarse="int8"`` inserts a symmetric int8 coarse scan
+    ahead of the asymmetric path — the bulk scan runs integer MXU
+    products over per-query-quantized queries, only the top
+    ``shortlist`` (L) coarse candidates are rescored asymmetrically
+    (then optionally exact-reranked as usual).  ``shortlist=None``
+    takes the benchmark-picked default.  Coarse search changes results
+    BY DESIGN (the query side is quantized); exception: whenever L
+    covers the whole candidate set (L >= n dense / L >= R gathered) the
+    coarse stage is skipped outright and results are bit-identical to
+    the pure asymmetric plan.  ``shortlist`` without ``coarse`` is an
+    error, as is an unknown coarse mode.
     """
 
     metric: str
@@ -166,6 +189,8 @@ class ScanPlan:
     row_valid: Optional[jax.Array] = None
     ids: Optional[jax.Array] = None
     use_pallas: Optional[bool] = None
+    coarse: Optional[str] = None
+    shortlist: Optional[int] = None
 
 
 def _map_ids(rows: jax.Array, ids: Optional[jax.Array]) -> jax.Array:
@@ -184,6 +209,7 @@ def execute_plan(
     *,
     stats: Optional[ASHStats] = None,
     raw: Optional[jax.Array] = None,
+    coarse_cache: Optional[CoarseCodes] = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Lower a :class:`ScanPlan` onto the fused kernel family.
 
@@ -192,11 +218,26 @@ def execute_plan(
     :func:`fused_topk_limit`, falling back to materialize +
     ``lax.top_k`` beyond it — the two return identical results, so the
     routing boundary is invisible to callers.
+
+    ``coarse_cache`` is the backend's persisted :class:`CoarseCodes`
+    for coarse plans; when absent it is rebuilt per call (one database
+    unpack — backends should pass it, shard-local plans may not).
     """
     validate_metric(plan.metric)
+    if plan.coarse is not None and plan.coarse not in COARSE_MODES:
+        raise ValueError(
+            f"unknown coarse mode {plan.coarse!r}; expected one of "
+            f"{COARSE_MODES} (or None)"
+        )
+    if plan.shortlist is not None and plan.coarse is None:
+        raise ValueError(
+            "shortlist= sets the coarse first-pass size and requires "
+            "coarse='int8'"
+        )
     if plan.rows is None:
         return _execute_dense(
-            model, prep, payload, plan, stats=stats, raw=raw
+            model, prep, payload, plan, stats=stats, raw=raw,
+            coarse_cache=coarse_cache,
         )
     if plan.n_valid is not None or plan.row_valid is not None:
         raise ValueError(
@@ -205,16 +246,45 @@ def execute_plan(
             "`rows` before planning)"
         )
     return _execute_gather(
-        model, prep, payload, plan, stats=stats, raw=raw
+        model, prep, payload, plan, stats=stats, raw=raw,
+        coarse_cache=coarse_cache,
     )
 
 
-def _execute_dense(model, prep, payload, plan, *, stats, raw):
+def _execute_dense(model, prep, payload, plan, *, stats, raw,
+                   coarse_cache=None):
     """Dense-scan lowering (flat, IVF full probe, sharded local scan)."""
     n = payload.n
     fused = plan.use_pallas is not False
     cap = fused_topk_limit()
     masked = plan.n_valid is not None or plan.row_valid is not None
+
+    if plan.coarse is not None:
+        from repro.kernels import ops as K
+
+        want_rerank = bool(plan.rerank) and raw is not None
+        refine_k = (
+            min(max(plan.rerank, plan.k), n) if want_rerank else plan.k
+        )
+        L = max(plan.shortlist or default_shortlist(), refine_k)
+        if L < n:
+            ss, srows = K.coarse_refine_topk(
+                model, prep, payload, refine_k, shortlist=L,
+                metric=plan.metric, stats=stats, coarse=coarse_cache,
+                n_valid=plan.n_valid, row_valid=plan.row_valid,
+                use_pallas=plan.use_pallas,
+            )
+            if want_rerank:
+                return exact_rerank(
+                    prep, raw, ss, srows, plan.metric, plan.k,
+                    ids=plan.ids,
+                )
+            ss, srows = ss[:, : plan.k], srows[:, : plan.k]
+            srows = jnp.where(jnp.isneginf(ss), -1, srows)
+            return ss, _map_ids(srows, plan.ids)
+        # L >= n: the shortlist covers every row, so the coarse pass
+        # cannot change the candidate set — run the pure asymmetric
+        # path outright (bit-identical to coarse=None by construction)
 
     def materialized():
         s = approx_scores(
@@ -258,13 +328,36 @@ def _execute_dense(model, prep, payload, plan, *, stats, raw):
     return s, _map_ids(rows, plan.ids)
 
 
-def _execute_gather(model, prep, payload, plan, *, stats, raw):
+def _execute_gather(model, prep, payload, plan, *, stats, raw,
+                    coarse_cache=None):
     """Gathered-candidate lowering (IVF partial probes)."""
     from repro.kernels import ops as K
 
     R = plan.rows.shape[1]
     fused = plan.use_pallas is not False
     cap = fused_topk_limit()
+
+    if plan.coarse is not None:
+        want_rerank = bool(plan.rerank) and raw is not None
+        refine_k = (
+            min(max(plan.rerank, plan.k), R) if want_rerank else plan.k
+        )
+        L = max(plan.shortlist or default_shortlist(), refine_k)
+        if L < R:
+            ss, srows = K.coarse_refine_gather_topk(
+                model, prep, payload, plan.rows, refine_k,
+                shortlist=L, metric=plan.metric, stats=stats,
+                coarse=coarse_cache, use_pallas=plan.use_pallas,
+            )
+            if want_rerank:
+                return exact_rerank(
+                    prep, raw, ss, srows, plan.metric, plan.k,
+                    ids=plan.ids,
+                )
+            ss, srows = ss[:, : plan.k], srows[:, : plan.k]
+            return ss, _map_ids(srows, plan.ids)
+        # L >= R: shortlist covers the whole candidate list — pure
+        # asymmetric gathered path, bit-identical to coarse=None
 
     def shortlist(size):
         if fused and size <= cap:

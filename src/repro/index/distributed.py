@@ -106,6 +106,8 @@ def _make_searcher(
     from_prep: bool,
     rerank: int = 0,
     fused: bool | None = None,
+    coarse: str | None = None,
+    shortlist: int | None = None,
 ):
     C.validate_metric(metric)
     n_shards = 1
@@ -142,9 +144,16 @@ def _make_searcher(
         # all-gather still collects n_shards * k_loc >= min(k, n_p)
         # candidates, so the global top-k below is unaffected
         k_loc = min(k, n_local)
+        # coarse="int8": the int8 first pass + shortlist runs PER
+        # SHARD (each shard keeps its own top-L before refining), so
+        # the merged result equals the flat backend's only when every
+        # shard's shortlist covers its true top-k_loc.  The value
+        # cache is rebuilt inside the shard_map trace (CoarseCodes is
+        # derived data; no persisted row-sharded copy yet).
         plan = C.ScanPlan(
             metric=metric, k=k_loc, rerank=rerank, n_valid=n_valid,
             row_valid=valid, use_pallas=fused,
+            coarse=coarse, shortlist=shortlist,
         )
         ls, li = C.execute_plan(
             model, prep, payload, plan, stats=stats, raw=raw
@@ -199,6 +208,8 @@ def make_sharded_search(
     n_real: int | None = None,
     rerank: int = 0,
     fused: bool | None = None,
+    coarse: str | None = None,
+    shortlist: int | None = None,
 ):
     """Build a jitted (payload, queries) -> (scores, global_ids) searcher.
 
@@ -222,10 +233,15 @@ def make_sharded_search(
     identical-semantics jnp oracle on CPU); False = the retained
     pure-jnp reference scorers + materialize-then-``top_k`` (the
     bit-identity oracle for the fused local scan).
+
+    ``coarse``/``shortlist``: opt into the symmetric int8 first pass
+    on each shard's local scan (see ``common.ScanPlan``); the
+    shortlist is per shard.
     """
     return _make_searcher(
         mesh, model, axes, k, metric=metric, n_real=n_real,
         from_prep=False, rerank=rerank, fused=fused,
+        coarse=coarse, shortlist=shortlist,
     )
 
 
@@ -239,6 +255,8 @@ def make_sharded_search_prepped(
     n_real: int | None = None,
     rerank: int = 0,
     fused: bool | None = None,
+    coarse: str | None = None,
+    shortlist: int | None = None,
 ):
     """Like :func:`make_sharded_search` but takes a precomputed
     ``QueryPrep`` (replicated) instead of raw queries, so the
@@ -248,4 +266,5 @@ def make_sharded_search_prepped(
     return _make_searcher(
         mesh, model, axes, k, metric=metric, n_real=n_real,
         from_prep=True, rerank=rerank, fused=fused,
+        coarse=coarse, shortlist=shortlist,
     )

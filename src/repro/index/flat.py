@@ -27,7 +27,8 @@ import numpy as np
 from repro.core import ash as A
 from repro.core import scoring as S
 from repro.core.types import (
-    ASHConfig, ASHModel, ASHPayload, ASHStats, QueryPrep, pytree_dataclass,
+    ASHConfig, ASHModel, ASHPayload, ASHStats, CoarseCodes, QueryPrep,
+    pytree_dataclass,
 )
 from repro.index import common as C
 
@@ -54,6 +55,11 @@ class FlatIndex:
     # Meta: id the next added row receives (None = derived; see
     # ``common.effective_next_id``).  Only set once mutations happen.
     next_id: Optional[int] = None
+    # Dequantized-code cache for the symmetric int8 coarse first pass
+    # (``search(coarse="int8")``); derived from ``payload`` — rebuilt
+    # at build/add/compact, never persisted (save/load reconstructs).
+    # None → ``execute_plan`` rebuilds per call (decompressing).
+    coarse: Optional[CoarseCodes] = None
 
 
 def _build(
@@ -80,11 +86,13 @@ def _build(
     return FlatIndex(
         metric=metric, model=model, payload=payload, raw=raw,
         stats=S.payload_stats(model, payload),
+        coarse=S.coarse_codes(payload),
     )
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "rerank", "use_pallas")
+    jax.jit,
+    static_argnames=("k", "rerank", "use_pallas", "coarse", "shortlist"),
 )
 def _search_prepped(
     index: FlatIndex,
@@ -92,6 +100,8 @@ def _search_prepped(
     k: int = 10,
     rerank: int = 0,
     use_pallas: Optional[bool] = None,
+    coarse: Optional[str] = None,
+    shortlist: Optional[int] = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Top-k search from precomputed query projections.
 
@@ -105,14 +115,20 @@ def _search_prepped(
     results, so the routing choice is invisible to callers (the ladder
     itself lives in ``common.execute_plan``, shared with the IVF and
     sharded backends).
+
+    coarse="int8" runs the symmetric int8 first-pass scan over the
+    persisted ``index.coarse`` value cache, keeping the top
+    ``shortlist`` (default ``common.default_shortlist()``) rows per
+    query for the asymmetric refine (then the usual exact rerank).
     """
     plan = C.ScanPlan(
         metric=index.metric, k=k, rerank=rerank, row_valid=index.live,
         ids=index.ids, use_pallas=use_pallas,
+        coarse=coarse, shortlist=shortlist,
     )
     return C.execute_plan(
         index.model, prep, index.payload, plan,
-        stats=index.stats, raw=index.raw,
+        stats=index.stats, raw=index.raw, coarse_cache=index.coarse,
     )
 
 
@@ -122,13 +138,16 @@ def _search(
     k: int = 10,
     rerank: int = 0,
     use_pallas: Optional[bool] = None,
+    coarse: Optional[str] = None,
+    shortlist: Optional[int] = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Top-k search; composition of ``prepare_queries`` and
     :func:`_search_prepped` so the batched engine path and the direct
     path share the exact same compiled arithmetic (bit-identical)."""
     prep = S.prepare_queries(index.model, queries)
     return _search_prepped(
-        index, prep, k=k, rerank=rerank, use_pallas=use_pallas
+        index, prep, k=k, rerank=rerank, use_pallas=use_pallas,
+        coarse=coarse, shortlist=shortlist,
     )
 
 
@@ -151,10 +170,11 @@ def _add(index: FlatIndex, X_new: jax.Array) -> FlatIndex:
         raw = jnp.concatenate(
             [raw, X_new.astype(jnp.bfloat16)], axis=0
         )
+    payload = C.concat_payloads(index.payload, payload_new)
     return FlatIndex(
         metric=index.metric,
         model=index.model,
-        payload=C.concat_payloads(index.payload, payload_new),
+        payload=payload,
         raw=raw,
         stats=C.concat_stats(
             index.stats, S.payload_stats(index.model, payload_new)
@@ -162,6 +182,10 @@ def _add(index: FlatIndex, X_new: jax.Array) -> FlatIndex:
         ids=ids,
         live=live,
         next_id=None if index.next_id is None else nid + n_new,
+        # full rebuild, not an incremental concat: CoarseCodes.mean
+        # spans ALL rows, and an incremental mean update would drift
+        # from a fresh build's (breaking add == rebuild bit-identity)
+        coarse=None if index.coarse is None else S.coarse_codes(payload),
     )
 
 
@@ -196,13 +220,15 @@ def _compact(index: FlatIndex) -> FlatIndex:
     nid = C.effective_next_id(index.next_id, index.ids, index.payload.n)
     keep = jnp.asarray(np.nonzero(live_np)[0].astype(np.int32))
     ids = keep if index.ids is None else index.ids[keep]
+    payload = C.gather_payload(index.payload, keep)
     return FlatIndex(
         metric=index.metric,
         model=index.model,
-        payload=C.gather_payload(index.payload, keep),
+        payload=payload,
         raw=None if index.raw is None else index.raw[keep],
         stats=C.take_stats(index.stats, keep),
         ids=ids.astype(jnp.int32),
         live=None,
         next_id=nid,
+        coarse=None if index.coarse is None else S.coarse_codes(payload),
     )

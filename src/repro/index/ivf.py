@@ -25,7 +25,8 @@ import jax.numpy as jnp
 from repro.core import ash as A
 from repro.core import scoring as S
 from repro.core.types import (
-    ASHConfig, ASHModel, ASHPayload, ASHStats, QueryPrep, pytree_dataclass,
+    ASHConfig, ASHModel, ASHPayload, ASHStats, CoarseCodes, QueryPrep,
+    pytree_dataclass,
 )
 from repro.index import common as C
 
@@ -51,6 +52,10 @@ class IVFIndex:
     live: Optional[jax.Array] = None
     # Meta: id the next added row receives (see effective_next_id).
     next_id: Optional[int] = None
+    # Dequantized-code cache for the symmetric int8 coarse first pass,
+    # row-aligned with the (list-sorted) ``payload``; derived, rebuilt
+    # by ``_assemble`` on every mutation, never persisted.
+    coarse: Optional[CoarseCodes] = None
 
 
 def _assemble(
@@ -103,6 +108,7 @@ def _assemble(
         stats=S.payload_stats(model, sorted_payload),
         live=None if live is None else jnp.asarray(live)[perm],
         next_id=next_id,
+        coarse=S.coarse_codes(sorted_payload),
     )
 
 
@@ -229,6 +235,8 @@ def _search_prepped(
     k: int = 10,
     nprobe: int = 8,
     rerank: int = 0,
+    coarse: Optional[str] = None,
+    shortlist: Optional[int] = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Top-k from precomputed query projections: (scores, ids), (m,k).
 
@@ -237,19 +245,28 @@ def _search_prepped(
     the flat fused-kernel scan over the (list-sorted) payload, mapping
     rows back through ``index.ids``.  Partial probes lower to a
     gathered ``ScanPlan`` served by the masked-gather kernel family
-    (batch-shape-invariant rowwise oracle on CPU)."""
+    (batch-shape-invariant rowwise oracle on CPU).  ``coarse="int8"``
+    inserts the symmetric int8 first pass on either route (see
+    ``common.ScanPlan``)."""
     if nprobe >= index.invlists.shape[0]:
-        return _full_scan(index, prep, k, rerank)
+        return _full_scan(
+            index, prep, k, rerank, coarse=coarse, shortlist=shortlist
+        )
     if prep.q.shape[0] == 1:
         s, i = _score_gathered(
-            index, _pad_single(prep), k, nprobe, rerank
+            index, _pad_single(prep), k, nprobe, rerank,
+            coarse=coarse, shortlist=shortlist,
         )
         return s[:1], i[:1]
-    return _score_gathered(index, prep, k, nprobe, rerank)
+    return _score_gathered(
+        index, prep, k, nprobe, rerank,
+        coarse=coarse, shortlist=shortlist,
+    )
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "rerank", "use_pallas")
+    jax.jit,
+    static_argnames=("k", "rerank", "use_pallas", "coarse", "shortlist"),
 )
 def _full_scan(
     index: IVFIndex,
@@ -257,6 +274,8 @@ def _full_scan(
     k: int,
     rerank: int,
     use_pallas: Optional[bool] = None,
+    coarse: Optional[str] = None,
+    shortlist: Optional[int] = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Exhaustive fused-kernel scan (the nprobe == nlist case): the
     flat backend's routing ladder (a dense ``common.ScanPlan``) with
@@ -264,10 +283,11 @@ def _full_scan(
     plan = C.ScanPlan(
         metric=index.metric, k=k, rerank=rerank, row_valid=index.live,
         ids=index.ids, use_pallas=use_pallas,
+        coarse=coarse, shortlist=shortlist,
     )
     return C.execute_plan(
         index.model, prep, index.payload, plan,
-        stats=index.stats, raw=index.raw,
+        stats=index.stats, raw=index.raw, coarse_cache=index.coarse,
     )
 
 
@@ -285,17 +305,25 @@ def _probe_lists(
     return jax.lax.top_k(coarse, nprobe)[1]  # (m, nprobe)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "nprobe", "rerank"))
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "nprobe", "rerank", "coarse", "shortlist"),
+)
 def _score_gathered(
     index: IVFIndex,
     prep: QueryPrep,
     k: int,
     nprobe: int,
     rerank: int,
+    coarse: Optional[str] = None,
+    shortlist: Optional[int] = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Partial probes: coarse-route, then score the probed lists."""
     probe = _probe_lists(index, prep, nprobe)
-    return _score_probed_impl(index, prep, probe, k, rerank)
+    return _score_probed_impl(
+        index, prep, probe, k, rerank,
+        coarse=coarse, shortlist=shortlist,
+    )
 
 
 def _search_probed(
@@ -304,6 +332,8 @@ def _search_probed(
     probe: jax.Array,
     k: int = 10,
     rerank: int = 0,
+    coarse: Optional[str] = None,
+    shortlist: Optional[int] = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Top-k over an explicit probed-list set (budgeted gather).
 
@@ -321,21 +351,34 @@ def _search_probed(
         prep = _pad_single(prep)
         pad_probe = _probe_lists(index, prep, probe.shape[1])[1:]
         probe = jnp.concatenate([probe, pad_probe], axis=0)
-        s, i = _score_probed(index, prep, probe, k, rerank)
+        s, i = _score_probed(
+            index, prep, probe, k, rerank,
+            coarse=coarse, shortlist=shortlist,
+        )
         return s[:1], i[:1]
-    return _score_probed(index, prep, probe, k, rerank)
+    return _score_probed(
+        index, prep, probe, k, rerank,
+        coarse=coarse, shortlist=shortlist,
+    )
 
 
-@functools.partial(jax.jit, static_argnames=("k", "rerank"))
+@functools.partial(
+    jax.jit, static_argnames=("k", "rerank", "coarse", "shortlist")
+)
 def _score_probed(
     index: IVFIndex,
     prep: QueryPrep,
     probe: jax.Array,
     k: int = 10,
     rerank: int = 0,
+    coarse: Optional[str] = None,
+    shortlist: Optional[int] = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Jit entry over :func:`_score_probed_impl` for explicit probes."""
-    return _score_probed_impl(index, prep, probe, k, rerank)
+    return _score_probed_impl(
+        index, prep, probe, k, rerank,
+        coarse=coarse, shortlist=shortlist,
+    )
 
 
 def _score_probed_impl(
@@ -344,6 +387,8 @@ def _score_probed_impl(
     probe: jax.Array,
     k: int,
     rerank: int,
+    coarse: Optional[str] = None,
+    shortlist: Optional[int] = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Gather each query's candidate lists and lower to a gathered
     ``ScanPlan`` — the masked-gather kernel family scores straight off
@@ -360,11 +405,11 @@ def _score_probed_impl(
         )
     plan = C.ScanPlan(
         metric=index.metric, k=k, rerank=rerank, rows=cand_rows,
-        ids=index.ids,
+        ids=index.ids, coarse=coarse, shortlist=shortlist,
     )
     return C.execute_plan(
         index.model, prep, index.payload, plan,
-        stats=index.stats, raw=index.raw,
+        stats=index.stats, raw=index.raw, coarse_cache=index.coarse,
     )
 
 
@@ -374,8 +419,13 @@ def _search(
     k: int = 10,
     nprobe: int = 8,
     rerank: int = 0,
+    coarse: Optional[str] = None,
+    shortlist: Optional[int] = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Composition of ``prepare_queries`` and :func:`_search_prepped`,
     so engine (prep-cached) and direct paths share compiled arithmetic."""
     prep = S.prepare_queries(index.model, queries)
-    return _search_prepped(index, prep, k=k, nprobe=nprobe, rerank=rerank)
+    return _search_prepped(
+        index, prep, k=k, nprobe=nprobe, rerank=rerank,
+        coarse=coarse, shortlist=shortlist,
+    )

@@ -10,12 +10,19 @@ ops          — public jit'd wrappers with CPU-interpret fallback
 from repro.kernels import ref, ops
 from repro.kernels.ops import (
     ash_score,
+    ash_score_coarse,
+    ash_score_coarse_gather,
+    ash_score_coarse_topk,
     ash_score_gather,
     ash_score_gather_topk,
     ash_score_topk,
     ash_kv_attention,
+    coarse_refine_gather_topk,
+    coarse_refine_topk,
 )
 
 __all__ = ["ref", "ops", "ash_score", "ash_score_topk",
-           "ash_score_gather", "ash_score_gather_topk",
-           "ash_kv_attention"]
+           "ash_score_coarse", "ash_score_coarse_topk",
+           "ash_score_coarse_gather", "ash_score_gather",
+           "ash_score_gather_topk", "ash_kv_attention",
+           "coarse_refine_topk", "coarse_refine_gather_topk"]

@@ -114,6 +114,36 @@ def _accumulate(q_ref, codes_ref, acc_ref, *, b, compute_dtype):
     )
 
 
+def _bias_lookup(cluster_ref, ipq_ref):
+    """(m_blk, n_blk) landmark bias <q, mu_{c*_i}> via a one-hot matmul
+    (exactly one non-zero term per column, so it is bitwise equal to the
+    oracle's gather)."""
+    C = ipq_ref.shape[1]
+    cl = cluster_ref[0, :]  # (n_blk,)
+    onehot = (
+        cl[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, C), 1)
+    ).astype(jnp.float32)  # (n_blk, C)
+    return jax.lax.dot_general(
+        ipq_ref[...].astype(jnp.float32),
+        onehot,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (m_blk, n_blk)
+
+
+def _metric_tail(base, qterm_ref, rowterm_ref, metric):
+    """Shared l2/cos epilogue over an Eq. (20) base-score tile."""
+    if metric == "dot":
+        return base
+    qcol = qterm_ref[0, :].astype(jnp.float32)[:, None]  # (m_blk, 1)
+    rrow = rowterm_ref[0, :].astype(jnp.float32)[None, :]  # (1, n_blk)
+    if metric == "l2":
+        return (2.0 * base - qcol) - rrow  # == -||q - x||^2
+    if metric == "cos":
+        return (base * qcol) * rrow
+    raise ValueError(metric)
+
+
 def _epilogue_scores(
     acc, scale_ref, offset_ref, cluster_ref, ipq_ref, qterm_ref,
     rowterm_ref, *, metric,
@@ -124,31 +154,13 @@ def _epilogue_scores(
     so compiled/interpreted kernels and the jnp oracle agree to the
     reduction-order level.
     """
-    C = ipq_ref.shape[1]
-    cl = cluster_ref[0, :]  # (n_blk,)
-    onehot = (
-        cl[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, C), 1)
-    ).astype(jnp.float32)  # (n_blk, C)
-    bias = jax.lax.dot_general(
-        ipq_ref[...].astype(jnp.float32),
-        onehot,
-        (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )  # (m_blk, n_blk)
+    bias = _bias_lookup(cluster_ref, ipq_ref)
     base = (
         acc * scale_ref[0, :][None, :].astype(jnp.float32)
         + bias
         + offset_ref[0, :][None, :].astype(jnp.float32)
     )
-    if metric == "dot":
-        return base
-    qcol = qterm_ref[0, :].astype(jnp.float32)[:, None]  # (m_blk, 1)
-    rrow = rowterm_ref[0, :].astype(jnp.float32)[None, :]  # (1, n_blk)
-    if metric == "l2":
-        return (2.0 * base - qcol) - rrow  # == -||q - x||^2
-    if metric == "cos":
-        return (base * qcol) * rrow
-    raise ValueError(metric)
+    return _metric_tail(base, qterm_ref, rowterm_ref, metric)
 
 
 def _kernel(
@@ -910,3 +922,343 @@ def ash_score_gather_topk_pallas(
         rows_p, jnp.clip(out_p, 0, g["R_p"] - 1), axis=1
     )
     return out_s, jnp.where(out_p == _ID_SENTINEL, -1, out_rows)
+
+
+# ---------------------------------------------------------------------------
+# Symmetric int8 coarse-scan kernels (first pass of coarse -> refine)
+# ---------------------------------------------------------------------------
+#
+# Same tile structure as the asymmetric family, but the query side is the
+# per-query int8 quantization of q_proj (``core.prepare_coarse_queries``),
+# so the matmul accumulates INTEGER products with
+# ``preferred_element_type=jnp.int32`` — int8 x int8 native MXU throughput
+# instead of fp32/bf16 for the bulk scan.  The epilogue rescales the
+# integer accumulation (``acc * q_scale``), folds the per-query residual
+# correction ``q_corr`` into the landmark bias, then applies the exact
+# Eq. (20) base + metric op order of the asymmetric epilogue.  Bitwise
+# contract: both operands are exact small integers (|q| <= 127,
+# |v| <= 2^b - 1 <= 255), so every partial sum stays below
+# 127 * 255 * 512 < 2^24 for d_pad <= 512 — the int32 accumulation here,
+# the oracle's fp32 matmul over the same integers, and the CoarseCodes
+# fp32 value-cache path all produce identical scores bit for bit.
+
+
+def _coarse_operand_dtype(b: int):
+    # grid values reach +-(2^b - 1): int8 holds them for b <= 4, b=8
+    # (+-255) promotes both operands to int32 (accumulation unchanged)
+    return jnp.int8 if b <= 4 else jnp.int32
+
+
+def _coarse_accumulate(q_ref, codes_ref, acc_ref, *, b):
+    """acc(int32) += q_int8 @ unpack(codes)^T — integer MXU prologue."""
+    dt = _coarse_operand_dtype(b)
+    vals = _unpack_block(codes_ref[...], b, dt)  # (n_blk, d_blk)
+    acc_ref[...] += jax.lax.dot_general(
+        q_ref[...].astype(dt),
+        vals,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def _coarse_epilogue_scores(
+    acc, qscale_ref, qcorr_ref, scale_ref, offset_ref, cluster_ref,
+    ipq_ref, qterm_ref, rowterm_ref, *, metric,
+):
+    """Coarse tile scores (m_blk, n_blk) fp32; op order mirrored by
+    ``ref.ash_score_coarse_ref`` (and its ``_coarse_base`` helper)."""
+    bias = _bias_lookup(cluster_ref, ipq_ref)
+    dotc = (
+        acc.astype(jnp.float32)
+        * qscale_ref[0, :].astype(jnp.float32)[:, None]
+    )
+    biasq = bias + qcorr_ref[0, :].astype(jnp.float32)[:, None]
+    base = (
+        dotc * scale_ref[0, :][None, :].astype(jnp.float32)
+        + biasq
+        + offset_ref[0, :][None, :].astype(jnp.float32)
+    )
+    return _metric_tail(base, qterm_ref, rowterm_ref, metric)
+
+
+def _coarse_kernel(
+    q_ref,  # (m_blk, d_blk) int8
+    codes_ref,  # (n_blk, w_blk) uint32
+    scale_ref,  # (1, n_blk)
+    offset_ref,  # (1, n_blk)
+    cluster_ref,  # (1, n_blk) int32
+    ipq_ref,  # (m_blk, C)
+    qterm_ref,  # (1, m_blk)
+    rowterm_ref,  # (1, n_blk)
+    qscale_ref,  # (1, m_blk) per-query int8 scale
+    qcorr_ref,  # (1, m_blk) per-query residual correction
+    out_ref,  # (m_blk, n_blk)
+    acc_ref,  # scratch (m_blk, n_blk) int32
+    *,
+    b: int,
+    n_d_blocks: int,
+    metric: str,
+):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    _coarse_accumulate(q_ref, codes_ref, acc_ref, b=b)
+
+    @pl.when(k_idx == n_d_blocks - 1)
+    def _epilogue():
+        out_ref[...] = _coarse_epilogue_scores(
+            acc_ref[...], qscale_ref, qcorr_ref, scale_ref, offset_ref,
+            cluster_ref, ipq_ref, qterm_ref, rowterm_ref, metric=metric,
+        ).astype(out_ref.dtype)
+
+
+def _coarse_topk_kernel(
+    q_ref,
+    codes_ref,
+    scale_ref,
+    offset_ref,
+    cluster_ref,
+    ipq_ref,
+    qterm_ref,
+    rowterm_ref,
+    qscale_ref,
+    qcorr_ref,
+    *rest,  # [mask_ref,] vals_ref, ids_ref, acc_ref — see use_mask
+    b: int,
+    n_d_blocks: int,
+    metric: str,
+    k_tilde: int,
+    block_n: int,
+    n_real: int,
+    use_mask: bool,
+):
+    # trailing refs follow the _topk_kernel convention: an optional
+    # runtime (1, n_blk) int32 row-validity operand, then the vals/ids
+    # candidate-strip outputs and the int32 accumulator scratch
+    if use_mask:
+        mask_ref, vals_ref, ids_ref, acc_ref = rest
+    else:
+        vals_ref, ids_ref, acc_ref = rest
+    k_idx = pl.program_id(2)
+    col0 = pl.program_id(0) * block_n
+
+    @pl.when(k_idx == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    _coarse_accumulate(q_ref, codes_ref, acc_ref, b=b)
+
+    @pl.when(k_idx == n_d_blocks - 1)
+    def _select():
+        scores = _coarse_epilogue_scores(
+            acc_ref[...], qscale_ref, qcorr_ref, scale_ref, offset_ref,
+            cluster_ref, ipq_ref, qterm_ref, rowterm_ref, metric=metric,
+        )  # (m_blk, n_blk) fp32
+        if use_mask:
+            valid = jnp.broadcast_to(mask_ref[...] != 0, scores.shape)
+        else:
+            local = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+            valid = (local + col0) < n_real
+        _select_topk(scores, valid, col0, k_tilde, vals_ref, ids_ref)
+
+
+def _pad_coarse_operands(
+    codes, q_int8, q_scale, q_corr, scale, offset, cluster,
+    ip_q_landmarks, qterm, rowterm, *, b, block_m, block_n, block_d,
+):
+    """Coarse-operand padding: the shared 8-operand block (query side is
+    the int8 matrix — zero padding contributes nothing to the integer
+    accumulation) plus the two per-query (1, m_p) epilogue vectors."""
+    operands, g = _pad_operands(
+        codes, q_int8, scale, offset, cluster, ip_q_landmarks,
+        qterm, rowterm,
+        b=b, block_m=block_m, block_n=block_n, block_d=block_d,
+    )
+    m, m_p = g["m"], g["m_p"]
+    qscale2 = jnp.pad(
+        q_scale.astype(jnp.float32), (0, m_p - m)
+    ).reshape(1, m_p)
+    qcorr2 = jnp.pad(
+        q_corr.astype(jnp.float32), (0, m_p - m)
+    ).reshape(1, m_p)
+    return operands + (qscale2, qcorr2), g
+
+
+def _coarse_in_specs(g):
+    return _in_specs(g) + [
+        pl.BlockSpec((1, g["block_m"]), lambda i, j, k_, *_: (0, j)),
+        pl.BlockSpec((1, g["block_m"]), lambda i, j, k_, *_: (0, j)),
+    ]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "b", "metric", "block_m", "block_n", "block_d", "interpret",
+    ),
+)
+def ash_score_coarse_pallas(
+    codes: jax.Array,  # (n, Wd) uint32
+    q_int8: jax.Array,  # (m, d_pad) int8 quantized query projections
+    q_scale: jax.Array,  # (m,) per-query symmetric scale
+    q_corr: jax.Array,  # (m,) residual correction term
+    scale: jax.Array,  # (n,)
+    offset: jax.Array,  # (n,)
+    cluster: jax.Array,  # (n,)
+    ip_q_landmarks: jax.Array,  # (m, C)
+    qterm: jax.Array | None = None,
+    rowterm: jax.Array | None = None,
+    *,
+    b: int,
+    metric: str = "dot",
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_d: int = DEFAULT_BLOCK_D,
+    interpret: bool = False,
+) -> jax.Array:
+    """Materializing coarse scan: (m, n) fp32 symmetric int8 scores,
+    higher-is-better.  Matches ``ref.ash_score_coarse_ref`` bitwise.
+
+    No ``compute_dtype`` knob: the matmul operand dtype is fixed by the
+    bitrate (int8 for b <= 4, int32 for b=8) and accumulation is always
+    int32 — the whole point of the coarse pass.
+    """
+    assert metric in METRICS, metric
+    operands, g = _pad_coarse_operands(
+        codes, q_int8, q_scale, q_corr, scale, offset, cluster,
+        ip_q_landmarks, qterm, rowterm,
+        b=b, block_m=block_m, block_n=block_n, block_d=block_d,
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _coarse_kernel,
+            b=b,
+            n_d_blocks=g["grid"][2],
+            metric=metric,
+        ),
+        grid=g["grid"],
+        in_specs=_coarse_in_specs(g),
+        out_specs=pl.BlockSpec(
+            (g["block_m"], g["block_n"]), lambda i, j, k_: (j, i)
+        ),
+        out_shape=jax.ShapeDtypeStruct((g["m_p"], g["n_p"]), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((g["block_m"], g["block_n"]), jnp.int32)
+        ],
+        interpret=interpret,
+    )(*operands)
+    return out[: g["m"], : g["n"]]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "b", "k", "k_tilde", "metric", "block_m", "block_n", "block_d",
+        "interpret",
+    ),
+)
+def ash_score_coarse_topk_pallas(
+    codes: jax.Array,  # (n, Wd) uint32
+    q_int8: jax.Array,  # (m, d_pad) int8
+    q_scale: jax.Array,  # (m,)
+    q_corr: jax.Array,  # (m,)
+    scale: jax.Array,  # (n,)
+    offset: jax.Array,  # (n,)
+    cluster: jax.Array,  # (n,)
+    ip_q_landmarks: jax.Array,  # (m, C)
+    qterm: jax.Array | None = None,
+    rowterm: jax.Array | None = None,
+    n_valid: jax.Array | None = None,  # scalar: rows >= this are masked
+    row_valid: jax.Array | None = None,  # (n,) bool/int: 0 = masked row
+    *,
+    b: int,
+    k: int,
+    k_tilde: int | None = None,
+    metric: str = "dot",
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_d: int = DEFAULT_BLOCK_D,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused coarse scan + shortlist selection: top-k (scores, ids),
+    each (m, k) — the FIRST PASS of the coarse -> refine pipeline, so
+    ``k`` here is the shortlist size L, not the final k.
+
+    Same selection machinery, mask folding, and ``lax.top_k`` tie
+    contract as :func:`ash_score_topk_pallas`, over the integer-domain
+    coarse scores: exactly ``top_k(ash_score_coarse_pallas(...), k)``
+    for ``k <= k̃``.  The (m, n) coarse score matrix never reaches HBM;
+    the emitted ids feed ``ash_score_gather_topk_pallas`` for the
+    asymmetric refine.
+    """
+    assert metric in METRICS, metric
+    n = codes.shape[0]
+    operands, g = _pad_coarse_operands(
+        codes, q_int8, q_scale, q_corr, scale, offset, cluster,
+        ip_q_landmarks, qterm, rowterm,
+        b=b, block_m=block_m, block_n=block_n, block_d=block_d,
+    )
+    use_mask = n_valid is not None or row_valid is not None
+    in_specs = _coarse_in_specs(g)
+    if use_mask:
+        if row_valid is None:
+            mask = jnp.ones((n,), jnp.int32)
+        else:
+            mask = row_valid.astype(jnp.int32)
+        if n_valid is not None:
+            mask = mask * (
+                jnp.arange(n, dtype=jnp.int32)
+                < jnp.asarray(n_valid, jnp.int32)
+            ).astype(jnp.int32)
+        operands = operands + (
+            jnp.pad(mask, (0, g["n_p"] - n)).reshape(1, g["n_p"]),
+        )
+        in_specs = in_specs + [
+            pl.BlockSpec((1, g["block_n"]), lambda i, j, k_: (0, i)),
+        ]
+    if k_tilde is None:
+        k_tilde = k
+    k_tilde = min(k_tilde, g["block_n"])
+    n_blocks = g["grid"][0]
+    if k > n_blocks * k_tilde:
+        raise ValueError(
+            f"k={k} exceeds the {n_blocks} x k_tilde={k_tilde} candidate "
+            f"strip; raise k_tilde or use the materializing kernel"
+        )
+    vals, ids = pl.pallas_call(
+        functools.partial(
+            _coarse_topk_kernel,
+            b=b,
+            n_d_blocks=g["grid"][2],
+            metric=metric,
+            k_tilde=k_tilde,
+            block_n=g["block_n"],
+            n_real=n,
+            use_mask=use_mask,
+        ),
+        grid=g["grid"],
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec(
+                (g["block_m"], k_tilde), lambda i, j, k_: (j, i)
+            ),
+            pl.BlockSpec(
+                (g["block_m"], k_tilde), lambda i, j, k_: (j, i)
+            ),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g["m_p"], n_blocks * k_tilde), jnp.float32),
+            jax.ShapeDtypeStruct((g["m_p"], n_blocks * k_tilde), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g["block_m"], g["block_n"]), jnp.int32)
+        ],
+        interpret=interpret,
+    )(*operands)
+    vals, ids = vals[: g["m"]], ids[: g["m"]]
+    neg, sid = jax.lax.sort((-vals, ids), dimension=1, num_keys=2)
+    out_s, out_i = -neg[:, :k], sid[:, :k]
+    return out_s, jnp.where(out_i == _ID_SENTINEL, -1, out_i)

@@ -149,6 +149,125 @@ def ash_score_gather_ref(
     return jnp.where(rows >= 0, out, -jnp.inf)
 
 
+def _coarse_base(dot_int, q_scale, q_corr, scale, offset, bias):
+    """Shared Eq. (20) base for the coarse oracles — the exact op order
+    the coarse kernel's epilogue mirrors.  ``dot_int`` is the integer
+    int8 x code accumulation (exact in fp32: every partial sum of the
+    integer products stays below 2^24 for d_pad <= 512)."""
+    dotc = dot_int.astype(jnp.float32) * q_scale.astype(jnp.float32)[
+        ..., None
+    ]
+    biasq = bias + q_corr.astype(jnp.float32)[..., None]
+    return (
+        dotc * scale.astype(jnp.float32)
+        + biasq
+        + offset.astype(jnp.float32)
+    )
+
+
+def ash_score_coarse_ref(
+    codes: jax.Array,  # (n, Wd) uint32 packed
+    q_int8: jax.Array,  # (m, d_pad) int8 quantized query projections
+    q_scale: jax.Array,  # (m,) per-query symmetric scale
+    q_corr: jax.Array,  # (m,) residual correction term
+    scale: jax.Array,  # (n,)
+    offset: jax.Array,  # (n,)
+    cluster: jax.Array,  # (n,) int32
+    ip_q_landmarks: jax.Array,  # (m, C)
+    qterm: jax.Array | None,  # (m,) metric query term (None for dot)
+    rowterm: jax.Array | None,  # (n,) metric row term (None for dot)
+    b: int,
+    metric: str = "dot",
+    values: jax.Array | None = None,  # (n, d_pad) pre-dequantized codes
+) -> jax.Array:
+    """Symmetric int8 coarse scores: (m, n) fp32, higher-is-better —
+    the oracle for ``ash_score_coarse[_topk]_pallas``.
+
+    The DOT-PROD term is the integer accumulation
+    ``<q_int8, v>`` scaled back by the per-query ``q_scale``; the
+    correction ``q_corr`` rides the bias so the coarse score is an
+    unbiased (corpus-mean) estimate of the asymmetric Eq. (20) score.
+    Integer accumulation is order-invariant and exact in fp32 below
+    2^24, so this matmul is BITWISE equal to the kernel's int32 MXU
+    accumulation — and to the ``values``-cache fast path (pass
+    ``CoarseCodes.values`` to skip the unpack).  The metric epilogues
+    apply the same op order as ``ash_score_metric_ref`` over the coarse
+    base.
+    """
+    if values is None:
+        d_pad = codes.shape[1] * Q.codes_per_word(b)
+        values = Q.unpack_codes(codes, d_pad, b).astype(jnp.float32)
+    dot = q_int8.astype(jnp.float32) @ values.T  # (m, n) exact ints
+    bias = ip_q_landmarks.astype(jnp.float32)[:, cluster]
+    base = _coarse_base(
+        dot, q_scale, q_corr, scale[None, :], offset[None, :], bias
+    )
+    if metric == "dot":
+        return base
+    qcol = qterm.astype(jnp.float32)[:, None]
+    rrow = rowterm.astype(jnp.float32)[None, :]
+    if metric == "l2":
+        return (2.0 * base - qcol) - rrow
+    if metric == "cos":
+        return (base * qcol) * rrow
+    raise ValueError(metric)
+
+
+def ash_score_coarse_gather_ref(
+    codes: jax.Array,  # (n, Wd) uint32 packed
+    rows: jax.Array,  # (m, R) int32 candidate row ids, -1 = padding
+    q_int8: jax.Array,  # (m, d_pad) int8
+    q_scale: jax.Array,  # (m,)
+    q_corr: jax.Array,  # (m,)
+    scale: jax.Array,  # (n,)
+    offset: jax.Array,  # (n,)
+    cluster: jax.Array,  # (n,) int32
+    ip_q_landmarks: jax.Array,  # (m, C)
+    qterm: jax.Array | None,
+    rowterm: jax.Array | None,
+    b: int,
+    metric: str = "dot",
+    values: jax.Array | None = None,  # (n, d_pad) pre-dequantized codes
+) -> jax.Array:
+    """Coarse scores over per-query candidate lists: (m, R) fp32; pad
+    entries (id -1) come back ``-inf``.  The gathered counterpart of
+    :func:`ash_score_coarse_ref` (IVF partial probes): rowwise reduce
+    over exact integers — order-invariant, so gathered and dense coarse
+    scores agree bitwise on shared rows.
+    """
+    m, R = rows.shape
+    safe = jnp.maximum(rows, 0)
+    if values is None:
+        d_pad = codes.shape[1] * Q.codes_per_word(b)
+        V = Q.unpack_codes(
+            codes[safe.reshape(-1)], d_pad, b
+        ).astype(jnp.float32).reshape(m, R, -1)
+    else:
+        V = values[safe]
+    dot = jnp.sum(
+        q_int8.astype(jnp.float32)[:, None, :] * V, axis=-1
+    )
+    cl = cluster[safe]  # (m, R)
+    bias = jnp.take_along_axis(
+        ip_q_landmarks.astype(jnp.float32), cl, axis=1
+    )
+    base = _coarse_base(
+        dot, q_scale, q_corr, scale.astype(jnp.float32)[safe],
+        offset.astype(jnp.float32)[safe], bias,
+    )
+    if metric == "dot":
+        out = base
+    elif metric == "l2":
+        qcol = qterm.astype(jnp.float32)[:, None]
+        out = (2.0 * base - qcol) - rowterm.astype(jnp.float32)[safe]
+    elif metric == "cos":
+        qcol = qterm.astype(jnp.float32)[:, None]
+        out = (base * qcol) * rowterm.astype(jnp.float32)[safe]
+    else:
+        raise ValueError(metric)
+    return jnp.where(rows >= 0, out, -jnp.inf)
+
+
 def ash_kv_attn_ref(
     q_k: jax.Array,  # (dk,) query projected into K-code space (W_k q)
     k_codes: jax.Array,  # (S, Wk) packed K codes

@@ -282,6 +282,15 @@ def main(argv=None):
                         "recall for tail latency (requires "
                         "--engine ivf)")
     p.add_argument("--rerank", type=int, default=0)
+    p.add_argument("--coarse", choices=("int8",), default=None,
+                   help="run the symmetric int8 first-pass scan and "
+                        "asymmetrically rescore only the top "
+                        "--shortlist candidates per query")
+    p.add_argument("--shortlist", type=int, default=None,
+                   metavar="L",
+                   help="coarse first-pass shortlist size (requires "
+                        "--coarse; default: kernels.ops."
+                        "DEFAULT_SHORTLIST)")
     p.add_argument("--mutate-fraction", type=float, default=0.0,
                    help="fraction of stream slots that carry a "
                         "mutation (engine-queued batched add or "
@@ -374,7 +383,13 @@ def main(argv=None):
     )
     if durable is not None:
         engine.attach_durability(durable)
+    if args.shortlist is not None and args.coarse is None:
+        p.error("--shortlist requires --coarse")
     search_kw = dict(nprobe=args.nprobe, rerank=args.rerank)
+    if args.coarse is not None:
+        search_kw["coarse"] = args.coarse
+        if args.shortlist is not None:
+            search_kw["shortlist"] = args.shortlist
 
     if args.http:
         return _run_http(args, index, engine, search_kw)

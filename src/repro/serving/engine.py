@@ -166,6 +166,14 @@ class EngineConfig:
     prep_cache_entries: Optional[int] = None  # extra row bound; 0 disables
     # IVF cost model: candidate-row bill cap per fused call (None = off)
     row_budget: Optional[int] = None
+    # relative cost of one candidate row under the int8 coarse first
+    # pass (groups submitted with coarse="int8"): on integer-MXU
+    # hardware the symmetric scan is cheaper per row than the
+    # asymmetric estimator, so coarse groups fit more rows under the
+    # same row_budget.  1.0 = bill coarse rows at full price — the
+    # conservative default, and the right setting on CPU, where both
+    # scans are the same-size BLAS GEMM.
+    coarse_row_cost: float = 1.0
     # load-adaptive probing floor (None = never degrade nprobe)
     nprobe_min: Optional[int] = None
     # oldest-ticket age mapping to pressure 1.0 (None = 10x max_wait_s)
@@ -210,6 +218,11 @@ class EngineConfig:
         if self.row_budget is not None and self.row_budget < 1:
             raise ValueError(
                 f"row_budget must be >= 1: {self.row_budget}"
+            )
+        if not (0.0 < self.coarse_row_cost <= 1.0):
+            raise ValueError(
+                f"coarse_row_cost must be in (0, 1]: "
+                f"{self.coarse_row_cost}"
             )
         if self.nprobe_min is not None and self.nprobe_min < 1:
             raise ValueError(
@@ -892,6 +905,15 @@ class QueryEngine:
                     )
         self._group_bills[group] = (epoch, mask, billed)
 
+    def _billed_row_cost(self, group: tuple) -> float:
+        """Relative cost of one scanned candidate row for this group:
+        1.0 for asymmetric scans, ``coarse_row_cost`` when the group's
+        opts opt into the int8 coarse first pass — the budget then
+        admits proportionally more rows per fused call."""
+        if any(k == "coarse" and v is not None for k, v in group[4]):
+            return self.config.coarse_row_cost
+        return 1.0
+
     def _group_over_budget(self, group: tuple) -> bool:
         """Whether the group's queued probes already bill past
         ``row_budget`` (caller holds the lock).  Served from the
@@ -909,15 +931,16 @@ class QueryEngine:
         idx = self._indexes.get(name)
         if idx is None:
             return False
+        cost = self._billed_row_cost(group)
         cached = self._group_bills.get(group)
         if cached is not None and cached[0] == idx.mutation_epoch:
-            return cached[2] > budget
+            return cached[2] * cost > budget
         reqs = self._pending.get(group, ())
         probes = [r.probe for r in reqs if r.probe is not None]
         if not probes:
             return False
         sizes = self._live_list_sizes(name, idx)
-        return self._union_bill(sizes, probes) > budget
+        return self._union_bill(sizes, probes) * cost > budget
 
     # -- request intake -----------------------------------------------
 
@@ -1527,6 +1550,7 @@ class QueryEngine:
             costed = idx is not None
             if costed:
                 sizes = self._live_list_sizes(name, idx)
+        row_cost = self._billed_row_cost(group)
 
         chunks: "list[list[_Request]]" = [[]]
         bills: "list[int]" = [0]
@@ -1551,7 +1575,8 @@ class QueryEngine:
                     and rows >= small:
                 fresh = lists[~mask[lists]]
                 over_budget = (
-                    bills[-1] + int(sizes[fresh].sum()) > budget
+                    (bills[-1] + int(sizes[fresh].sum())) * row_cost
+                    > budget
                 )
             if over_rows or over_budget:
                 if over_budget:

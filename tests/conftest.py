@@ -12,6 +12,8 @@ if "--xla_force_host_platform_device_count" not in os.environ.get(
         + " --xla_force_host_platform_device_count=4"
     )
 
+import pathlib
+
 import jax
 import pytest
 
@@ -24,6 +26,29 @@ settings.register_profile(
     suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
 )
 settings.load_profile("ci")
+
+
+def pytest_sessionstart(session):
+    """Refuse to run against stale bytecode under ``src/``.
+
+    A ``__pycache__`` entry older than its source means the interpreter
+    about to import the tree cached a PREVIOUS revision — mtime-based
+    invalidation usually catches this, but not when checkouts or file
+    syncs preserve timestamps (git checkout keeps pyc mtimes, rsync -t
+    restores py mtimes), and a silently stale module makes every test
+    result a lie.  Deleting the listed ``__pycache__`` dirs is always
+    safe: they are derived, untracked (.gitignore) artifacts."""
+    src = pathlib.Path(__file__).resolve().parent.parent / "src"
+    stale = []
+    for pyc in src.rglob("__pycache__/*.pyc"):
+        py = pyc.parent.parent / (pyc.name.split(".")[0] + ".py")
+        if py.exists() and pyc.stat().st_mtime < py.stat().st_mtime:
+            stale.append(str(pyc.parent))
+    if stale:
+        raise pytest.UsageError(
+            "stale bytecode caches predate their sources — delete "
+            "them and rerun: " + " ".join(sorted(set(stale)))
+        )
 
 
 @pytest.fixture(scope="session")

@@ -303,3 +303,115 @@ def test_main_exit_codes(tmp_path):
     assert check_bench.main([ok, "--baseline", str(base)]) == 0
     _write(base / "ok.json", _doc([_row("a", 0.1)]))
     assert check_bench.main([ok, "--baseline", str(base)]) == 1
+
+
+def test_coarse_serving_gate(tmp_path):
+    """Rows pairing qps with qps_asym (serving/coarse_flat) are gated
+    structurally on full-size files: qps >= 1.5x qps_asym (accelerator
+    platforms only — on CPU both passes are the same BLAS GEMM, so
+    parity is expected and only recall gates) and recall_at_10 within
+    1 point of recall_at_10_asym."""
+    good = _write(tmp_path / "good.json", _doc([_row(
+        "serving/coarse_flat", 1.0,
+        {"qps": 900.0, "qps_asym": 500.0, "platform": "tpu",
+         "recall_at_10": 0.95, "recall_at_10_asym": 0.955},
+    )], group="serving"))
+    assert check_bench.check(good) == []
+
+    slow = _write(tmp_path / "slow.json", _doc([_row(
+        "serving/coarse_flat", 1.0,
+        {"qps": 600.0, "qps_asym": 500.0, "platform": "tpu",
+         "recall_at_10": 0.95, "recall_at_10_asym": 0.95},
+    )], group="serving"))
+    probs = check_bench.check(slow)
+    assert any("lost its throughput win" in p for p in probs)
+
+    # the same shortfall on a cpu row (or one with no platform stamp)
+    # does NOT arm the throughput half
+    for plat in ({"platform": "cpu"}, {}):
+        cpu = _write(tmp_path / f"cpu{len(plat)}.json", _doc([_row(
+            "serving/coarse_flat", 1.0,
+            {"qps": 600.0, "qps_asym": 500.0, **plat,
+             "recall_at_10": 0.95, "recall_at_10_asym": 0.95},
+        )], group="serving"))
+        assert check_bench.check(cpu) == []
+
+    lossy = _write(tmp_path / "lossy.json", _doc([_row(
+        "serving/coarse_flat", 1.0,
+        {"qps": 900.0, "qps_asym": 500.0, "platform": "cpu",
+         "recall_at_10": 0.90, "recall_at_10_asym": 0.95},
+    )], group="serving"))
+    probs = check_bench.check(lossy)
+    assert any("shortlist too aggressive" in p for p in probs)
+
+    # quick (smoke-size) runs skip the gate: dispatch overhead, not
+    # the scan, dominates tiny corpora
+    quick = _write(tmp_path / "quick.json", _doc([_row(
+        "serving/coarse_flat", 1.0,
+        {"qps": 400.0, "qps_asym": 500.0,
+         "recall_at_10": 0.90, "recall_at_10_asym": 0.95},
+    )], group="serving", quick=True))
+    assert check_bench.check(quick) == []
+
+    # rows without qps_asym are untouched
+    plain = _write(tmp_path / "plain.json", _doc([_row(
+        "serving/engine_flat_b8", 1.0, {"qps": 100.0},
+    )], group="serving"))
+    assert check_bench.check(plain) == []
+
+
+def test_diff_recall_drops_are_absolute(tmp_path):
+    """recall_at_* metrics diff by absolute points: > 2 points down
+    fails, > half a point warns, and an improvement never trips.
+    Ratios would hide regressions against a ~1.0 baseline."""
+    base = tmp_path / "base"
+    base.mkdir()
+    _write(base / "BENCH_serving.json",
+           _doc([_row("serving/coarse_flat", 0.0,
+                      {"recall_at_10": 0.99,
+                       "recall_at_10_asym": 0.99})], group="serving"))
+    cur = _write(
+        tmp_path / "BENCH_serving.json",
+        _doc([_row("serving/coarse_flat", 0.0,
+                   {"recall_at_10": 0.96,
+                    "recall_at_10_asym": 0.998})], group="serving"),
+    )
+    fails, warns = check_bench.diff(cur, str(base), 1.5, 3.0)
+    assert any("recall_at_10 dropped 3.0 points" in f for f in fails)
+    assert not any("recall_at_10_asym" in m for m in fails + warns)
+
+    _write(tmp_path / "BENCH_serving.json",
+           _doc([_row("serving/coarse_flat", 0.0,
+                      {"recall_at_10": 0.98,
+                       "recall_at_10_asym": 0.99})], group="serving"))
+    fails, warns = check_bench.diff(
+        str(tmp_path / "BENCH_serving.json"), str(base), 1.5, 3.0)
+    assert fails == []
+    assert any("dropped 1.0 points" in w for w in warns)
+
+
+def test_diff_refuses_cross_shape_rows(tmp_path):
+    """Rows stamped with corpus-shape metadata (n/d/b/m) refuse to
+    diff against a different shape — a retuned benchmark corpus must
+    not masquerade as a perf change.  Unstamped rows (serving group)
+    and matching shapes diff as before."""
+    base = tmp_path / "base"
+    base.mkdir()
+    _write(base / "BENCH_kernels.json", _doc([
+        _row("kernel/a", 100.0, {"n": 20000, "d": 96, "b": 2, "m": 200}),
+        _row("kernel/b", 100.0, {"n": 20000, "d": 96, "b": 2, "m": 200}),
+        _row("plain", 100.0),
+    ]))
+    cur = _write(tmp_path / "BENCH_kernels.json", _doc([
+        # 10x slower but at a DIFFERENT corpus shape: refused, no fail
+        _row("kernel/a", 1000.0, {"n": 40000, "d": 96, "b": 2, "m": 200}),
+        # same shape, 10x slower: fails as usual
+        _row("kernel/b", 1000.0, {"n": 20000, "d": 96, "b": 2, "m": 200}),
+        # unstamped, 10x slower: fails as usual
+        _row("plain", 1000.0),
+    ]))
+    fails, warns = check_bench.diff(cur, str(base), 1.5, 3.0)
+    assert any("diff refused" in w and "kernel/a" in w for w in warns)
+    assert not any("kernel/a" in f for f in fails)
+    assert any("kernel/b" in f for f in fails)
+    assert any("plain" in f for f in fails)

@@ -1,0 +1,305 @@
+"""Coarse -> refine pipeline: the symmetric int8 first pass.
+
+Covers: the coarse scan kernel against its jnp oracle BITWISE (exact
+integer accumulation + an identical float epilogue) across code widths
+b in {1, 2, 4, 8} and ragged (non-multiple-of-tile) shapes; the fused
+coarse top-k kernel against materialize-then-``top_k``, with and
+without the runtime row masks; coarse + refine parity with the pure
+asymmetric path whenever the shortlist covers the candidate set
+(flat / IVF partial probe / 1-2-4-shard meshes — the L >= n clamp in
+``execute_plan``); shortlist quality at serving sizes; and
+engine-batched coarse search against the direct path under add /
+delete / compact mutations.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import ASHConfig
+from repro.core import scoring as S
+from repro.data.synthetic import embedding_dataset
+from repro.index import AshIndex
+from repro.index import common as C
+from repro.kernels import ops
+from repro.serving.engine import QueryEngine
+
+METRICS = ("dot", "l2", "cos")
+
+
+@functools.lru_cache(maxsize=None)
+def _kernel_setup(b):
+    """Trained model + encoded payload at a RAGGED shape (n, m prime)
+    so every kernel-tile edge path runs."""
+    key = jax.random.PRNGKey(11 + b)
+    kx, kq, kb = jax.random.split(key, 3)
+    X = embedding_dataset(kx, 997, 32)
+    Qm = embedding_dataset(kq, 7, 32)
+    cfg = ASHConfig(b=b, d=16, n_landmarks=8)
+    idx = AshIndex.build(kb, X, cfg, backend="flat")
+    return idx.model, idx.prepare(Qm), idx._state
+
+
+# ---------------------------------------------------------------------------
+# Kernel vs oracle bit-identity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "b,metric",
+    [(1, "dot"), (2, "dot"), (2, "l2"), (2, "cos"), (4, "dot"),
+     (8, "dot")],
+)
+def test_coarse_kernel_matches_oracle_bitwise(b, metric):
+    """Coarse scan kernel == jnp coarse oracle bit-for-bit: integer
+    accumulation is exact on both sides (int32 MXU vs fp32 BLAS, values
+    < 2^24) and the float epilogues share one op order."""
+    model, prep, st = _kernel_setup(b)
+    kw = dict(metric=metric, stats=st.stats, coarse=st.coarse)
+    want = ops.ash_score_coarse(
+        model, prep, st.payload, use_pallas=False, **kw
+    )
+    got = ops.ash_score_coarse(
+        model, prep, st.payload, use_pallas=True, interpret=True, **kw
+    )
+    assert got.dtype == want.dtype
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("k", (8, 32))
+def test_coarse_fused_topk_matches_materialize(metric, k):
+    """Fused coarse shortlist selection == top_k over the materialized
+    coarse scores — values, ids AND tie order."""
+    model, prep, st = _kernel_setup(2)
+    kw = dict(metric=metric, stats=st.stats, coarse=st.coarse)
+    ws, wi = ops.ash_score_coarse_topk(
+        model, prep, st.payload, k, use_pallas=False, **kw
+    )
+    gs, gi = ops.ash_score_coarse_topk(
+        model, prep, st.payload, k, use_pallas=True, interpret=True,
+        **kw
+    )
+    assert np.array_equal(np.asarray(gs), np.asarray(ws))
+    assert np.array_equal(np.asarray(gi), np.asarray(wi))
+
+
+def test_coarse_topk_row_masks_agree_across_routes():
+    """n_valid truncation + row_valid tombstones fold into the coarse
+    selection identically on the fused kernel and the materializing
+    oracle, and masked rows never surface."""
+    model, prep, st = _kernel_setup(2)
+    n = st.payload.n
+    rng = np.random.RandomState(5)
+    row_valid = jnp.asarray(rng.rand(n) > 0.3)
+    n_valid = jnp.int32(700)
+    kw = dict(
+        metric="l2", stats=st.stats, coarse=st.coarse,
+        n_valid=n_valid, row_valid=row_valid, k=16,
+    )
+    ws, wi = ops.ash_score_coarse_topk(
+        model, prep, st.payload, use_pallas=False, **kw
+    )
+    gs, gi = ops.ash_score_coarse_topk(
+        model, prep, st.payload, use_pallas=True, interpret=True, **kw
+    )
+    assert np.array_equal(np.asarray(gs), np.asarray(ws))
+    assert np.array_equal(np.asarray(gi), np.asarray(wi))
+    dead = set(np.nonzero(~np.asarray(row_valid))[0]) | set(
+        range(700, n)
+    )
+    assert not (set(np.asarray(wi).ravel().tolist()) & dead)
+
+
+def test_coarse_gather_matches_dense_on_full_lists():
+    """The gathered coarse scorer (IVF partial probes) reduces over
+    exact integers, so scoring the identity candidate list equals the
+    dense coarse scan bit-for-bit."""
+    model, prep, st = _kernel_setup(2)
+    m = prep.q.shape[0]
+    rows = jnp.broadcast_to(
+        jnp.arange(st.payload.n, dtype=jnp.int32), (m, st.payload.n)
+    )
+    dense = ops.ash_score_coarse(
+        model, prep, st.payload, metric="dot", stats=st.stats,
+        coarse=st.coarse, use_pallas=False,
+    )
+    got = ops.ash_score_coarse_gather(
+        model, prep, st.payload, rows, metric="dot", stats=st.stats,
+        coarse=st.coarse,
+    )
+    assert np.array_equal(np.asarray(got), np.asarray(dense))
+
+
+# ---------------------------------------------------------------------------
+# Backend parity: covering shortlist == pure asymmetric path
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def backend_setup():
+    key = jax.random.PRNGKey(29)
+    kx, kq, kb = jax.random.split(key, 3)
+    X = embedding_dataset(kx, 3000, 32)
+    Qm = embedding_dataset(kq, 16, 32)
+    cfg = ASHConfig(b=2, d=16, n_landmarks=8)
+    model = AshIndex.build(kb, X, cfg, backend="flat").model
+    return X, Qm, cfg, model, kb
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_flat_covering_shortlist_is_bitwise_asymmetric(
+    backend_setup, metric
+):
+    """shortlist >= n: the coarse pass is clamped away and the flat
+    search equals the pure asymmetric search bit-for-bit."""
+    X, Qm, cfg, model, kb = backend_setup
+    idx = AshIndex.build(kb, X, cfg, metric=metric, model=model)
+    s, ids = idx.search(Qm, k=10)
+    cs, cids = idx.search(Qm, k=10, coarse="int8", shortlist=idx.n)
+    assert np.array_equal(np.asarray(cs), np.asarray(s))
+    assert np.array_equal(np.asarray(cids), np.asarray(ids))
+
+
+def test_flat_covering_shortlist_with_rerank(backend_setup):
+    """The L >= n clamp composes with exact rerank: coarse + rerank ==
+    plain rerank bit-for-bit when the shortlist covers the corpus."""
+    X, Qm, cfg, model, kb = backend_setup
+    idx = AshIndex.build(
+        kb, X, cfg, metric="cos", model=model, keep_raw=True
+    )
+    s, ids = idx.search(Qm, k=10, rerank=100)
+    cs, cids = idx.search(
+        Qm, k=10, rerank=100, coarse="int8", shortlist=idx.n
+    )
+    assert np.array_equal(np.asarray(cs), np.asarray(s))
+    assert np.array_equal(np.asarray(cids), np.asarray(ids))
+
+
+@pytest.mark.parametrize("nprobe", (3, 8))
+def test_ivf_covering_shortlist_is_bitwise_asymmetric(
+    backend_setup, nprobe
+):
+    """IVF partial probes (gathered plan, nprobe < nlist) and full
+    scans (nprobe == nlist lowers dense): shortlist >= candidate count
+    reproduces the asymmetric result bit-for-bit on both routes."""
+    X, Qm, cfg, model, kb = backend_setup
+    idx = AshIndex.build(kb, X, cfg, backend="ivf", model=model)
+    s, ids = idx.search(Qm, k=10, nprobe=nprobe)
+    cs, cids = idx.search(
+        Qm, k=10, nprobe=nprobe, coarse="int8", shortlist=idx.n
+    )
+    assert np.array_equal(np.asarray(cs), np.asarray(s))
+    assert np.array_equal(np.asarray(cids), np.asarray(ids))
+
+
+@pytest.mark.parametrize("n_shards", (1, 2, 4))
+def test_sharded_covering_shortlist_matches_flat(
+    backend_setup, n_shards
+):
+    """Sharded coarse search with a covering shortlist (per-shard
+    L >= n_local clamp in every local scan) == the FLAT pure
+    asymmetric search bit-for-bit across 1/2/4-shard meshes."""
+    X, Qm, cfg, model, kb = backend_setup
+    if n_shards > jax.device_count():
+        pytest.skip("needs more devices")
+    flat = AshIndex.build(kb, X, cfg, metric="dot", model=model)
+    fs, fids = flat.search(Qm, k=10)
+    mesh = Mesh(np.array(jax.devices()[:n_shards]), ("data",))
+    si = AshIndex.build(
+        kb, X, cfg, backend="sharded", model=model, mesh=mesh,
+        axes=("data",),
+    )
+    ss, sids = si.search(
+        Qm, k=10, coarse="int8", shortlist=si.n
+    )
+    assert np.array_equal(np.asarray(ss), np.asarray(fs))
+    assert np.array_equal(np.asarray(sids), np.asarray(fids))
+
+
+def test_small_shortlist_recall(backend_setup):
+    """A serving-sized shortlist loses little: recall@10 of the coarse
+    pipeline against the asymmetric path stays >= 0.9 at L = default
+    (the benchmark sweep holds >= 0.99 at the full corpus shape; the
+    bar here is loose because this corpus is tiny)."""
+    X, Qm, cfg, model, kb = backend_setup
+    idx = AshIndex.build(kb, X, cfg, model=model)
+    base = np.asarray(idx.search(Qm, k=10)[1])
+    ids = np.asarray(idx.search(Qm, k=10, coarse="int8")[1])
+    rec = np.mean([
+        len(set(a.tolist()) & set(b.tolist())) / 10
+        for a, b in zip(ids, base)
+    ])
+    assert rec >= 0.9, rec
+
+
+def test_coarse_cache_rebuild_matches_fresh_build(backend_setup):
+    """add/compact rebuild the CoarseCodes value cache over the whole
+    payload (the mean spans ALL rows), so a mutated index's cache ==
+    a from-scratch build's over the same rows."""
+    X, Qm, cfg, model, kb = backend_setup
+    idx = AshIndex.build(kb, X[:2000], cfg, model=model)
+    idx.add(X[2000:])
+    fresh = AshIndex.build(kb, X, cfg, model=model)
+    got, want = idx._state.coarse, fresh._state.coarse
+    assert np.array_equal(
+        np.asarray(got.values), np.asarray(want.values)
+    )
+    assert np.array_equal(np.asarray(got.mean), np.asarray(want.mean))
+    s, ids = idx.search(Qm, k=10, coarse="int8")
+    fs, fids = fresh.search(Qm, k=10, coarse="int8")
+    assert np.array_equal(np.asarray(s), np.asarray(fs))
+    assert np.array_equal(np.asarray(ids), np.asarray(fids))
+
+
+# ---------------------------------------------------------------------------
+# Engine-batched coarse == direct coarse, across mutations
+# ---------------------------------------------------------------------------
+
+
+def _engine_results(engine, Qm, **kw):
+    tickets = [
+        engine.submit(Qm[i:i + 4], k=10, **kw)
+        for i in range(0, Qm.shape[0], 4)
+    ]
+    engine.flush()
+    outs = [t.result() for t in tickets]
+    return (
+        np.concatenate([np.asarray(s) for s, _ in outs]),
+        np.concatenate([np.asarray(i) for _, i in outs]),
+    )
+
+
+def test_engine_batched_coarse_matches_direct_under_mutations(
+    backend_setup
+):
+    """The engine groups coarse requests by their (coarse, shortlist)
+    opts and runs the same fused call as the direct path, so batched
+    results == direct results bit-for-bit — before and after engine
+    adds, deletes and a compact."""
+    X, Qm, cfg, model, kb = backend_setup
+    idx = AshIndex.build(kb, X, cfg, model=model)
+    engine = QueryEngine(idx, batch_buckets=(8,), max_wait_s=0.005)
+    kw = dict(coarse="int8", shortlist=32)
+
+    es, eids = _engine_results(engine, Qm, **kw)
+    ds, dids = idx.search(Qm, k=10, **kw)
+    assert np.array_equal(es, np.asarray(ds))
+    assert np.array_equal(eids, np.asarray(dids))
+
+    engine.submit_add(np.asarray(X[:5]) * 0.5).result()
+    engine.submit_delete(np.arange(10, 20)).result()
+    es, eids = _engine_results(engine, Qm, **kw)
+    ds, dids = idx.search(Qm, k=10, **kw)
+    assert np.array_equal(es, np.asarray(ds))
+    assert np.array_equal(eids, np.asarray(dids))
+    assert not (set(eids.ravel().tolist()) & set(range(10, 20)))
+
+    idx.compact()
+    es, eids = _engine_results(engine, Qm, **kw)
+    ds, dids = idx.search(Qm, k=10, **kw)
+    assert np.array_equal(es, np.asarray(ds))
+    assert np.array_equal(eids, np.asarray(dids))

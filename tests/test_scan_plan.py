@@ -390,3 +390,70 @@ def test_pad_sentinel_never_reaches_list_assembly(index_setup):
     ids = jnp.arange(padded.n, dtype=jnp.int32)
     with pytest.raises(ValueError, match="pad-sentinel"):
         IV._assemble("dot", model, padded, ids, None)
+
+
+# ---------------------------------------------------------------------------
+# ScanPlan validation + selection-cap fallback
+# ---------------------------------------------------------------------------
+
+
+def test_plan_rejects_unknown_coarse_mode(index_setup):
+    X, Qm, cfg, model, kb = index_setup
+    idx = AshIndex.build(kb, X, cfg, model=model)
+    with pytest.raises(ValueError, match="unknown coarse mode"):
+        idx.search(Qm, k=5, coarse="fp8")
+
+
+def test_plan_rejects_shortlist_without_coarse(index_setup):
+    X, Qm, cfg, model, kb = index_setup
+    idx = AshIndex.build(kb, X, cfg, model=model)
+    with pytest.raises(ValueError, match="requires"):
+        idx.search(Qm, k=5, shortlist=64)
+
+
+def test_plan_rejects_row_masks_on_gathered_plan(index_setup):
+    """Gathered plans mask by pad id only: row_valid / n_valid are
+    dense-plan concepts and must fail loudly, not no-op (a silently
+    ignored tombstone bitmap would resurrect deleted rows)."""
+    X, Qm, cfg, model, kb = index_setup
+    idx = AshIndex.build(kb, X, cfg, model=model)
+    st = idx._state
+    prep = idx.prepare(Qm)
+    rows = _mk_rows(jax.random.PRNGKey(1), Qm.shape[0], 32, idx.n)
+    for bad in (
+        {"row_valid": jnp.ones((idx.n,), bool)},
+        {"n_valid": jnp.int32(10)},
+    ):
+        plan = C.ScanPlan(metric="dot", k=5, rows=rows, **bad)
+        with pytest.raises(ValueError, match="dense plans only"):
+            C.execute_plan(model, prep, st.payload, plan,
+                           stats=st.stats)
+
+
+def test_sharded_rerank_without_raw_raises(index_setup):
+    """rerank > 0 without retained raw vectors is a loud error on the
+    sharded backend — never a silent fall-back to ASH scores."""
+    X, Qm, cfg, model, kb = index_setup
+    mesh = Mesh(np.array(jax.devices()[:2]), ("data",))
+    si = AshIndex.build(kb, X, cfg, backend="sharded", model=model,
+                        mesh=mesh, axes=("data",))
+    with pytest.raises(ValueError, match="keep_raw"):
+        si.search(Qm, k=5, rerank=50)
+
+
+def test_topk_beyond_fused_cap_falls_back(index_setup):
+    """k above fused_topk_limit() routes to materialize-then-top_k and
+    returns exactly top_k of the materialized scores — the routing
+    boundary is invisible."""
+    X, Qm, cfg, model, kb = index_setup
+    idx = AshIndex.build(kb, X, cfg, model=model)
+    k = C.fused_topk_limit() + 22
+    s, ids = idx.search(Qm, k=k)
+    st = idx._state
+    want = jax.lax.top_k(
+        C.approx_scores(model, idx.prepare(Qm), st.payload, "dot",
+                        stats=st.stats),
+        k,
+    )
+    assert np.array_equal(np.asarray(s), np.asarray(want[0]))
+    assert np.array_equal(np.asarray(ids), np.asarray(want[1]))

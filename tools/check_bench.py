@@ -20,7 +20,17 @@ the same file: ``p99_ms`` at or below direct's and ``qps`` at >= 2x —
 the batching layer must beat the path it wraps, or it has no job.
 (Full-size files only: quick smoke corpora are too small for batch
 amortization to reach the bar, so quick runs keep the health and
-concurrent-row checks but skip this gate.)
+concurrent-row checks but skip this gate.)  Serving rows that ran the
+symmetric int8 first pass against the asymmetric baseline (marked by a
+``qps_asym`` derived field, e.g. ``serving/coarse_flat``) are gated the
+same way: ``qps`` at >= 1.5x ``qps_asym`` with ``recall_at_10`` within
+1 point of ``recall_at_10_asym`` — the coarse pass must buy throughput
+without giving the quality back.  Also full-size only, and the
+throughput half additionally requires an accelerator ``platform``
+stamp (not ``cpu``): XLA:CPU lowers both passes to the same-size f32
+BLAS GEMM, so the int8 win only exists where an integer MXU runs the
+coarse scan — CPU rows track qps honestly but are held only to the
+recall half.
 
 Trajectory diffing (``--baseline DIR``) compares each file against the
 same-named snapshot in DIR row by row:
@@ -32,11 +42,21 @@ same-named snapshot in DIR row by row:
     ``adds_per_s``/``deletes_per_s``) invert the ratio.  Regressions
     beyond ``--warn-ratio`` print WARN lines; beyond ``--fail-ratio``
     they fail the gate.
+  * any ``recall_at_*`` derived metric is higher-is-better and diffed
+    ABSOLUTELY, not by ratio: a drop beyond 2 points (0.02) fails, a
+    drop beyond half a point warns.  Recall near 1.0 makes ratios
+    useless — 0.99 -> 0.97 is a 1.02x "slowdown" but a real quality
+    regression.
   * rows present in the baseline but missing from the current file
     warn (the trajectory would silently truncate otherwise).
   * files whose ``quick`` mode differs from the baseline's are skipped
     with a note — quick (CI-smoke) and full-size numbers are not
     comparable.
+  * rows stamped with corpus-shape metadata (``n``/``d``/``b``/``m``
+    derived fields, the kernel rows) refuse to diff against a
+    baseline row with a DIFFERENT shape: a retuned benchmark corpus
+    would otherwise masquerade as a perf change.  Mismatched rows are
+    skipped with a warning.
 
 Combined files (from ``--json OUT``) diff each group against the
 baseline's ``BENCH_<group>.json``.
@@ -157,6 +177,50 @@ def _ivf_cost_problems(path: str, rows: "dict[str, dict]") -> list[str]:
     return problems
 
 
+def _coarse_serving_problems(
+    path: str, rows: "dict[str, dict]"
+) -> list[str]:
+    """Structural gate for serving rows that measured the symmetric
+    int8 first pass against the asymmetric baseline in the same run
+    (keyed on the ``qps_asym`` derived field, not row names, so future
+    coarse rows inherit it): ``qps`` must reach 1.5x ``qps_asym`` and
+    ``recall_at_10`` must stay within 1 point of ``recall_at_10_asym``.
+    Full-size runs only (the caller skips quick files): quick corpora
+    are small enough that per-call dispatch overhead, not the scan the
+    coarse pass shortcuts, dominates the wall clock.
+
+    The throughput half only arms on accelerator rows (``platform``
+    stamp present and not ``cpu``): on XLA:CPU both passes lower to
+    the same-size f32 BLAS GEMM (the code unpack fuses into the asym
+    scan for free), so there is no win to hold — the int8 first pass
+    pays off where an integer MXU eats the coarse scan at multiples
+    of fp32 throughput.  CPU rows still record qps/qps_asym for the
+    trajectory and keep the recall gate, which is
+    platform-independent."""
+    problems = []
+    for name, r in sorted(rows.items()):
+        der = r.get("derived") or {}
+        qps, asym = _num_of(der, "qps"), _num_of(der, "qps_asym")
+        if qps is None or asym is None:
+            continue
+        platform = der.get("platform")
+        if (platform is not None and platform != "cpu"
+                and qps < 1.5 * asym):
+            problems.append(
+                f"{path}: {name} qps {qps:g} < 1.5x asymmetric qps "
+                f"{asym:g} (coarse first pass lost its throughput win)"
+            )
+        rec = _num_of(der, "recall_at_10")
+        rec_a = _num_of(der, "recall_at_10_asym")
+        if rec is not None and rec_a is not None and rec < rec_a - 0.01:
+            problems.append(
+                f"{path}: {name} recall_at_10 {rec:g} more than 1 "
+                f"point below the asymmetric path's {rec_a:g} (coarse "
+                f"shortlist too aggressive)"
+            )
+    return problems
+
+
 def check(path: str) -> list[str]:
     """Problems found in one bench JSON file ([] == healthy)."""
     try:
@@ -188,6 +252,7 @@ def check(path: str) -> list[str]:
             healthy[r["name"]] = r
     if not doc.get("quick"):
         problems.extend(_ivf_cost_problems(path, healthy))
+        problems.extend(_coarse_serving_problems(path, healthy))
     return problems
 
 
@@ -219,6 +284,36 @@ def _latency_keys(derived: dict) -> list[str]:
     """Lower-is-better derived metrics: any *_ms latency
     (p50_ms / p99_ms / worst_apply_ms / p99_*_compact_ms)."""
     return [k for k in derived if k.endswith("_ms")]
+
+
+# Corpus-shape metadata stamped on kernel rows (benchmarks stamp
+# n/d/b/m via srow); rows carrying it only diff against a baseline row
+# of the SAME shape.
+SHAPE_KEYS = ("n", "d", "b", "m")
+
+
+def _shape_of(r: dict):
+    """(n, d, b, m) stamp of a row, or None if unstamped."""
+    der = r.get("derived") or {}
+    vals = tuple(der.get(k) for k in SHAPE_KEYS)
+    return vals if any(v is not None for v in vals) else None
+
+
+def _recall_drops(base: dict, cur: dict) -> list[tuple]:
+    """[(metric, absolute_drop)] for every higher-is-better
+    ``recall_at_*`` derived metric present on both sides (drop > 0 ==
+    quality regressed).  Absolute points, not ratios: recall saturates
+    near 1.0 where ratios hide real losses."""
+    out = []
+    b_der = base.get("derived", {})
+    c_der = cur.get("derived", {})
+    for key in b_der:
+        if not key.startswith("recall_at"):
+            continue
+        b_v, c_v = b_der.get(key), c_der.get(key)
+        if isinstance(b_v, (int, float)) and isinstance(c_v, (int, float)):
+            out.append((key, b_v - c_v))
+    return out
 
 
 def _row_regressions(name: str, base: dict, cur: dict) -> list[tuple]:
@@ -296,6 +391,25 @@ def diff(
                     f"(trajectory truncation)"
                 )
                 continue
+            b_shape, c_shape = _shape_of(base_row), _shape_of(cur)
+            if b_shape is not None and c_shape is not None \
+                    and b_shape != c_shape:
+                warnings.append(
+                    f"{path}: {name} corpus shape "
+                    f"{dict(zip(SHAPE_KEYS, c_shape))} != baseline "
+                    f"{dict(zip(SHAPE_KEYS, b_shape))} — not "
+                    f"comparable, diff refused"
+                )
+                continue
+            for metric, drop in _recall_drops(base_row, cur):
+                msg = (
+                    f"{path}: {name} {metric} dropped "
+                    f"{100 * drop:.1f} points vs {base_path}"
+                )
+                if drop > 0.02:
+                    failures.append(msg)
+                elif drop > 0.005:
+                    warnings.append(msg)
             for metric, ratio in _row_regressions(name, base_row, cur):
                 msg = (
                     f"{path}: {name} {metric} regressed {ratio:.2f}x "
