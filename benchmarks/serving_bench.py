@@ -641,9 +641,103 @@ def serving_adaptive():
     )]
 
 
+def _tiered_pass(index, Qm, reqs, nprobe):
+    """One sequential pass of the request mix through ``index.search``;
+    returns (latencies, wall seconds, scores list, ids list)."""
+    lats, scores, ids = [], [], []
+    t0 = time.perf_counter()
+    for i, m in reqs:
+        t1 = time.perf_counter()
+        s, out_ids = jax.block_until_ready(
+            index.search(Qm[i:i + m], k=10, nprobe=nprobe)
+        )
+        lats.append(time.perf_counter() - t1)
+        scores.append(np.asarray(s))
+        ids.append(np.asarray(out_ids))
+    return np.asarray(lats), time.perf_counter() - t0, scores, ids
+
+
+def serving_tiered():
+    """Tiered IVF (host-resident lists + device hot set) vs the
+    HBM-resident IVF it pages for: the same request mix is served by
+    the HBM index, by a tiered index whose hot-set budget covers a
+    quarter of the payload (cold cache, then steady state), and by a
+    covering-budget tiered index whose results must be bit-identical
+    to HBM at equal probe sets.  The row carries the cache gauges
+    (hit rates, paged rows, resident vs total bytes) the structural
+    gate in tools/check_bench.py holds."""
+    import tempfile
+
+    from repro.index.tiered import TieredIVFBackend
+
+    X, Qm, gt = dataset()
+    cfg = ASHConfig(b=2, d=D // 2, n_landmarks=32)
+    key = jax.random.PRNGKey(0)
+    nprobe = 8
+    hbm = AshIndex.build(key, X, cfg, backend="ivf")
+    # same key/config/build path => same model, landmarks and probe
+    # sets as the HBM index, so covering-budget results are bitwise
+    # comparable request by request
+    cover = AshIndex.build(key, X, cfg, backend="tiered_ivf",
+                           hot_bytes=1 << 30)
+    total = TieredIVFBackend.tier_stats(cover._state)["total_bytes"]
+    hot = max(1, total // 4)
+    with tempfile.TemporaryDirectory() as tmp:
+        cover.save(f"{tmp}/tiered")  # reuse the build, resize the set
+        paged = AshIndex.load(f"{tmp}/tiered", hot_bytes=hot)
+    Qm = np.asarray(Qm)
+    reqs = _request_stream(Qm)
+    n_req = len(reqs)
+
+    lat_h = dt_h = None
+    for _ in range(2):  # pass 1 compiles the request shapes
+        lat_h, dt_h, s_h, i_h = _tiered_pass(hbm, Qm, reqs, nprobe)
+
+    # paged tiered: compile pass, then drop the hot set for a true
+    # cold-cache pass, then the steady-state pass over the same mix
+    _tiered_pass(paged, Qm, reqs, nprobe)
+    paged._state.cache.clear()
+    t0 = TieredIVFBackend.tier_stats(paged._state)
+    lat_c, dt_c, _, _ = _tiered_pass(paged, Qm, reqs, nprobe)
+    t1 = TieredIVFBackend.tier_stats(paged._state)
+    lat_w, dt_w, _, _ = _tiered_pass(paged, Qm, reqs, nprobe)
+    t2 = TieredIVFBackend.tier_stats(paged._state)
+    paged_rows_cold = t1["paged_rows"] - t0["paged_rows"]
+    warm_lookups = (t2["hits"] - t1["hits"]) + (t2["misses"] - t1["misses"])
+    hit_warm = (t2["hits"] - t1["hits"]) / max(1, warm_lookups)
+
+    # covering budget: one fill pass, then every probe hits the cache
+    _tiered_pass(cover, Qm, reqs, nprobe)
+    c1 = TieredIVFBackend.tier_stats(cover._state)
+    lat_v, dt_v, s_v, i_v = _tiered_pass(cover, Qm, reqs, nprobe)
+    c2 = TieredIVFBackend.tier_stats(cover._state)
+    cover_lookups = (c2["hits"] - c1["hits"]) + (c2["misses"] - c1["misses"])
+    hit_cover = (c2["hits"] - c1["hits"]) / max(1, cover_lookups)
+    bitwise = int(all(
+        np.array_equal(a, b) and np.array_equal(c, d)
+        for (a, b), (c, d) in zip(zip(s_h, s_v), zip(i_h, i_v))
+    ))
+    rec = recall10(np.concatenate(i_v, axis=0), gt)
+
+    p99_h, p99_c, p99_w, p99_v = (
+        float(np.percentile(x, 99)) for x in (lat_h, lat_c, lat_w, lat_v)
+    )
+    return [row(
+        "serving/tiered_ivf", 1e6 * dt_w / n_req,
+        f"qps={n_req / dt_w:.0f};qps_hbm={n_req / dt_h:.0f};"
+        f"qps_cold={n_req / dt_c:.0f};qps_cover={n_req / dt_v:.0f};"
+        f"p99_hbm_ms={1e3 * p99_h:.2f};p99_cold_ms={1e3 * p99_c:.2f};"
+        f"p99_warm_ms={1e3 * p99_w:.2f};p99_cover_ms={1e3 * p99_v:.2f};"
+        f"hit_rate_warm={hit_warm:.4f};hit_rate_cover={hit_cover:.4f};"
+        f"hot_bytes={hot};total_bytes={total};"
+        f"paged_rows_cold={paged_rows_cold};"
+        f"bitwise_cover={bitwise};recall_at_10={rec:.4f}",
+    )]
+
+
 # serving_durability runs LAST: its four per-mode engine builds leave
 # enough allocator/jit-cache residue to visibly inflate the
 # sync-vs-background compaction p99 comparison in serving_concurrent
 # when it runs earlier in the process
 ALL = [serving_engine, serving_mutation, serving_concurrent,
-       serving_adaptive, serving_durability]
+       serving_adaptive, serving_tiered, serving_durability]

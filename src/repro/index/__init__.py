@@ -8,9 +8,10 @@ from repro.index import common, flat, ivf, metrics, distributed
 from repro.index.api import (
     AshIndex, CorruptIndexError, available_backends, register_backend,
 )
+from repro.index import tiered
 from repro.index.metrics import exact_topk, recall_at, recall_curve
 
 __all__ = ["AshIndex", "CorruptIndexError", "available_backends",
            "register_backend",
-           "common", "flat", "ivf", "metrics", "distributed",
+           "common", "flat", "ivf", "metrics", "distributed", "tiered",
            "exact_topk", "recall_at", "recall_curve"]

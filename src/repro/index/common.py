@@ -383,6 +383,112 @@ def _execute_gather(model, prep, payload, plan, *, stats, raw,
 
 
 # ---------------------------------------------------------------------------
+# Paged scan planning — the host-tiered ScanPlan variant
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedScanPlan:
+    """A gathered :class:`ScanPlan` whose candidate rows index a
+    device-assembled UNION of probed inverted lists instead of the
+    global payload (the host-tiered IVF backend, where codes live in
+    host memory per list and only the probed lists are resident).
+
+    Built host-side by :func:`plan_paged_probe` from the probe set and
+    the index's contiguous-list geometry.  ``union_lists`` names the
+    probed lists in ascending id order; concatenating their row blocks
+    in that order reproduces the global (cluster-sorted) row order
+    restricted to the union, so ``rows`` — global candidate rows
+    remapped through a monotone shift into the union — preserves the
+    candidate ORDER of the HBM-resident gathered plan exactly:
+    per-candidate scoring arithmetic, top-k tie resolution and id
+    mapping all come out bitwise identical.  ``n_pad - n_union``
+    zero rows pad the union to a bounded set of trace shapes; they are
+    never gathered (every ``rows`` entry is a real row or ``-1``).
+    """
+
+    metric: str
+    k: int
+    rerank: int
+    coarse: Optional[str]
+    shortlist: Optional[int]
+    rows: Any  # (m, nprobe * max_list_len) int32 numpy, union-local
+    union_lists: tuple  # ascending probed list ids
+    n_union: int  # real rows in the union
+    n_pad: int  # union rows after padding (multiple of pad_multiple)
+
+    def to_scan_plan(self, rows, ids) -> ScanPlan:
+        """Lower onto the gathered :class:`ScanPlan` executor; ``rows``
+        is the device copy of ``self.rows``, ``ids`` the union's
+        user-id column."""
+        return ScanPlan(
+            metric=self.metric, k=self.k, rerank=self.rerank,
+            rows=rows, ids=ids, coarse=self.coarse,
+            shortlist=self.shortlist,
+        )
+
+
+def plan_paged_probe(
+    probe,
+    counts,
+    starts,
+    live,
+    max_list_len: int,
+    *,
+    metric: str,
+    k: int,
+    rerank: int = 0,
+    coarse: Optional[str] = None,
+    shortlist: Optional[int] = None,
+    pad_multiple: int = 256,
+) -> PagedScanPlan:
+    """Plan a paged gathered scan over a probe set, host-side.
+
+    ``probe`` is (m, nprobe) int32 probed list ids per query (any
+    order, duplicates allowed); ``counts``/``starts`` the contiguous
+    list geometry (:func:`repro.index.ivf.list_geometry`); ``live`` an
+    optional (n,) row-validity bitmap — tombstoned rows are dropped to
+    the ``-1`` pad id here, pre-DMA, exactly like the HBM gathered
+    path.  The candidate layout matches ``invlists[probe]`` slot for
+    slot (list-id probe order, each list's tail padded with ``-1``),
+    with global rows shifted into the ascending-list union.
+    """
+    import numpy as np
+
+    probe = np.asarray(probe)
+    m = probe.shape[0]
+    counts = np.asarray(counts, dtype=np.int64)
+    starts = np.asarray(starts, dtype=np.int64)
+    union = np.unique(probe.ravel())
+    union = union[(union >= 0) & (union < counts.size)]
+    c_u = counts[union]
+    local_starts = np.concatenate(
+        [[0], np.cumsum(c_u)[:-1]]
+    ).astype(np.int64)
+    n_union = int(c_u.sum())
+    # per-list shift mapping a global row of list c into the union
+    delta = np.zeros(counts.size, dtype=np.int64)
+    delta[union] = local_starts - starts[union]
+    t = np.arange(max_list_len, dtype=np.int64)
+    g = starts[probe][:, :, None] + t[None, None, :]  # global rows
+    valid = t[None, None, :] < counts[probe][:, :, None]
+    if live is not None:
+        live = np.asarray(live).astype(bool)
+        valid &= live[np.minimum(g, max(live.size - 1, 0))]
+    loc = g + delta[probe][:, :, None]
+    cand = np.where(valid, loc, -1).reshape(m, -1).astype(np.int32)
+    n_pad = max(
+        pad_multiple, -(-n_union // pad_multiple) * pad_multiple
+    )
+    return PagedScanPlan(
+        metric=metric, k=k, rerank=rerank, coarse=coarse,
+        shortlist=shortlist, rows=cand,
+        union_lists=tuple(int(c) for c in union),
+        n_union=n_union, n_pad=n_pad,
+    )
+
+
+# ---------------------------------------------------------------------------
 # Exact scoring + the shared rerank pipeline
 # ---------------------------------------------------------------------------
 

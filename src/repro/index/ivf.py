@@ -58,6 +58,36 @@ class IVFIndex:
     coarse: Optional[CoarseCodes] = None
 
 
+def list_geometry(cluster, nlist: int):
+    """Contiguous-list geometry of a (cluster-sorted or unsorted)
+    cluster column: ``(counts, starts)``, each (nlist,) int64.  In the
+    cluster-sorted row order list ``c`` occupies the contiguous global
+    row range ``[starts[c], starts[c] + counts[c])`` — the invariant
+    the padded inverted lists AND the host-tiered paged gather
+    (``common.plan_paged_probe``) are built on."""
+    import numpy as np
+
+    counts = np.bincount(
+        np.asarray(cluster), minlength=nlist
+    ).astype(np.int64)
+    starts = np.concatenate(
+        [[0], np.cumsum(counts)[:-1]]
+    ).astype(np.int64)
+    return counts, starts
+
+
+def build_invlists(counts, starts, max_len: int):
+    """Padded inverted lists from the contiguous geometry: (nlist,
+    max_len) int32 global rows, ``-1`` beyond each list's count."""
+    import numpy as np
+
+    t = np.arange(max_len, dtype=np.int64)
+    rows = starts[:, None] + t[None, :]
+    return np.where(
+        t[None, :] < counts[:, None], rows, -1
+    ).astype(np.int32)
+
+
 def _assemble(
     metric: str,
     model: ASHModel,
@@ -86,14 +116,9 @@ def _assemble(
         )
     nlist = model.landmarks.shape[0]
     order = np.argsort(cluster, kind="stable")
-    counts = np.bincount(cluster[order], minlength=nlist)
+    counts, starts = list_geometry(cluster, nlist)
     max_len = int(counts.max())
-    invlists = np.full((nlist, max_len), -1, dtype=np.int32)
-    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
-    for c in range(nlist):
-        invlists[c, : counts[c]] = np.arange(
-            starts[c], starts[c] + counts[c], dtype=np.int32
-        )
+    invlists = build_invlists(counts, starts, max_len)
 
     perm = jnp.asarray(order)
     sorted_payload = C.permute_payload(payload, perm)

@@ -75,6 +75,17 @@ def _print_engine_report(engine, mut_tickets=()):
               f"retries={comp['retries']} swap={comp['swap_ms']:.2f}ms "
               f"blocked={comp['blocked_ms']:.2f}ms "
               f"synchronous={snap['compactions']}")
+    for name, ts in snap.get("tier", {}).items():
+        print(f"[tier] index={name} hit_rate={ts['hit_rate']:.3f} "
+              f"({ts['hits']}/{ts['hits'] + ts['misses']} lists) "
+              f"resident={ts['resident_lists']}/{ts['nlist']} lists "
+              f"{ts['resident_bytes'] / 1024:.1f}KiB of "
+              f"{ts['hot_bytes'] / 2**20:.0f}MiB budget "
+              f"(index {ts['total_bytes'] / 2**20:.1f}MiB) "
+              f"paged={ts['paged_rows']} rows "
+              f"{ts['paged_bytes'] / 1024:.1f}KiB "
+              f"in {ts['transfers']} transfers "
+              f"evictions={ts['evictions']}")
     dur = snap.get("durability", {})
     for name, ws in dur.get("indexes", {}).items():
         print(f"[durability] index={name} wal_seq={ws['last_seqno']} "
@@ -267,6 +278,17 @@ def main(argv=None):
     p.add_argument("--landmarks", type=int, default=64)
     p.add_argument("--engine", choices=("flat", "ivf", "sharded"),
                    default="flat")
+    p.add_argument("--tiered", action="store_true",
+                   help="serve the IVF index host-tiered "
+                        "(backend=tiered_ivf): codes/stats live in "
+                        "host memory, only a --hot-bytes LRU of "
+                        "inverted lists stays device-resident; probes "
+                        "page cold lists in one batched transfer.  "
+                        "Results stay bit-identical to --engine ivf "
+                        "at equal probe sets (implies --engine ivf)")
+    p.add_argument("--hot-bytes", type=int, default=64 << 20,
+                   help="device-resident hot-set byte budget for "
+                        "--tiered (0 = page every probe)")
     p.add_argument("--metric", choices=("dot", "l2", "cos"),
                    default="dot")
     p.add_argument("--nprobe", type=int, default=8)
@@ -341,8 +363,14 @@ def main(argv=None):
 
     t0 = time.time()
     opts = {"keep_raw": args.rerank > 0}
+    backend = args.engine
+    if args.tiered:
+        if args.engine not in ("flat", "ivf"):
+            p.error("--tiered requires --engine ivf")
+        backend = "tiered_ivf"
+        opts["hot_bytes"] = args.hot_bytes
     index = AshIndex.build(
-        kb, X, cfg, backend=args.engine, metric=args.metric, **opts
+        kb, X, cfg, backend=backend, metric=args.metric, **opts
     )
     print(f"[build] {time.time() - t0:.2f}s  {index!r}")
     if args.save_dir:
@@ -371,7 +399,7 @@ def main(argv=None):
         engine_kw["row_budget"] = args.row_budget
     if args.adaptive_nprobe is not None:
         engine_kw["nprobe_min"] = args.adaptive_nprobe
-    if engine_kw and args.engine != "ivf":
+    if engine_kw and args.engine != "ivf" and not args.tiered:
         p.error("--row-budget/--adaptive-nprobe require --engine ivf")
 
     buckets = tuple(int(b) for b in args.buckets.split(","))

@@ -113,9 +113,16 @@ import numpy as np
 
 from repro.core.types import QueryPrep
 from repro.index.api import AshIndex, IVFBackend
+from repro.serving.cache import ByteLRU
 from repro.testing import faults
 
 NEG_INF = float("-inf")
+
+# backends that route coarsely through inverted lists: nprobe grouping,
+# the candidate-row cost model and adaptive probing apply to all of
+# them (the tiered backend additionally bills paging, see
+# _billed_list_sizes)
+_IVF_LIKE = ("ivf", "tiered_ivf")
 
 # crash-recovery windows of the mutation apply path: before anything
 # durable happened, after the WAL records exist but before the backend
@@ -174,6 +181,12 @@ class EngineConfig:
     # conservative default, and the right setting on CPU, where both
     # scans are the same-size BLAS GEMM.
     coarse_row_cost: float = 1.0
+    # relative cost of one candidate row in a NON-resident inverted
+    # list of a tiered index (backend="tiered_ivf"): probing a cold
+    # list pays a host->device transfer on top of the scan, so it
+    # bills more than a hot row.  Residency is sampled when the bill
+    # folds and is advisory — the hot set may shift before the flush.
+    page_row_cost: float = 2.0
     # load-adaptive probing floor (None = never degrade nprobe)
     nprobe_min: Optional[int] = None
     # oldest-ticket age mapping to pressure 1.0 (None = 10x max_wait_s)
@@ -223,6 +236,10 @@ class EngineConfig:
             raise ValueError(
                 f"coarse_row_cost must be in (0, 1]: "
                 f"{self.coarse_row_cost}"
+            )
+        if self.page_row_cost < 1.0:
+            raise ValueError(
+                f"page_row_cost must be >= 1: {self.page_row_cost}"
             )
         if self.nprobe_min is not None and self.nprobe_min < 1:
             raise ValueError(
@@ -594,8 +611,11 @@ class QueryEngine:
         self._indexes: Dict[str, AshIndex] = {}
         self._pending: "OrderedDict[tuple, list[_Request]]" = OrderedDict()
         self._pending_rows = 0
-        self._prep_cache: "OrderedDict[tuple, tuple]" = OrderedDict()
-        self._prep_cache_nbytes = 0
+        self._prep_cache = ByteLRU(
+            config.prep_cache_bytes,
+            max_entries=config.prep_cache_entries,
+            nbytes_of=self._entry_nbytes,
+        )
         # queued mutations, per index: add tickets (rows already staged
         # on the AshIndex), delete id lists, and the oldest submission
         # time (drives the poll() age check)
@@ -712,18 +732,16 @@ class QueryEngine:
         with self._lock:
             if name is None:
                 self._prep_cache.clear()
-                self._prep_cache_nbytes = 0
                 return
-            for key in [k for k in self._prep_cache if k[0] == name]:
-                self._prep_cache_nbytes -= self._entry_nbytes(
-                    self._prep_cache.pop(key)
-                )
+            for key in [k for k in self._prep_cache.keys()
+                        if k[0] == name]:
+                self._prep_cache.pop(key)
 
     @property
     def prep_cache_bytes(self) -> int:
         """Current byte footprint of the prep LRU (for capacity
         planning against ``EngineConfig.prep_cache_bytes``)."""
-        return self._prep_cache_nbytes
+        return self._prep_cache.nbytes
 
     # -- IVF candidate-row cost model ---------------------------------
 
@@ -776,7 +794,7 @@ class QueryEngine:
         full-scan path — no gather to budget."""
         cfg = self.config
         return (
-            idx.backend == "ivf"
+            idx.backend in _IVF_LIKE
             and nprobe is not None
             and nprobe < idx._state.invlists.shape[0]
             and (cfg.row_budget is not None
@@ -843,10 +861,31 @@ class QueryEngine:
             cached = self._list_sizes.get(name)
             if cached is not None and cached[0] == epoch:
                 return cached[1]
-        sizes = IVFBackend.list_sizes(idx._state)
+        sizes = idx._backend.list_sizes(idx._state)
         with self._lock:
             self._list_sizes[name] = (epoch, sizes)
         return sizes
+
+    def _billed_list_sizes(
+        self, name: str, idx: AshIndex
+    ) -> np.ndarray:
+        """Per-list row bill: live sizes, with non-resident lists of a
+        tiered index surcharged by ``page_row_cost`` (a cold probe
+        pays its host->device transfer, so adaptive nprobe and budget
+        splitting see paging cost).  Residency is sampled now and may
+        shift before the flush — the surcharge is advisory, like the
+        host probe itself.  Not epoch-cached: the hot set moves on
+        every search, not only on mutations."""
+        sizes = self._live_list_sizes(name, idx)
+        if idx.backend != "tiered_ivf":
+            return sizes
+        cost = self.config.page_row_cost
+        if cost == 1.0:
+            return sizes
+        resident = idx._backend.resident_mask(idx._state)
+        return np.where(
+            resident, sizes, np.ceil(sizes * cost).astype(np.int64)
+        )
 
     def _union_bill(
         self, sizes: np.ndarray, probes: "list[np.ndarray]"
@@ -890,7 +929,7 @@ class QueryEngine:
         epoch-stale cache (first probe, or a mutation changed the
         list sizes): rebuild from everything queued."""
         epoch = idx.mutation_epoch
-        sizes = self._live_list_sizes(name, idx)
+        sizes = self._billed_list_sizes(name, idx)
         cached = self._group_bills.get(group)
         if cached is not None and cached[0] == epoch:
             _, mask, billed = cached
@@ -939,7 +978,7 @@ class QueryEngine:
         probes = [r.probe for r in reqs if r.probe is not None]
         if not probes:
             return False
-        sizes = self._live_list_sizes(name, idx)
+        sizes = self._billed_list_sizes(name, idx)
         return self._union_bill(sizes, probes) * cost > budget
 
     # -- request intake -----------------------------------------------
@@ -985,13 +1024,13 @@ class QueryEngine:
         if deadline_s is not None and deadline_s < 0:
             raise ValueError(f"deadline_s must be >= 0: {deadline_s}")
         backend = idx.backend
-        if backend != "ivf":
+        if backend not in _IVF_LIKE:
             nprobe = None  # only IVF routes coarsely; don't split groups
         else:
             # normalize to the effective value (default applied, clamped
             # to the invlist count) so nprobe=None, the explicit default
             # and any over-large value share one group/bucket/trace
-            nprobe = IVFBackend.resolve_nprobe(idx._state, nprobe)
+            nprobe = idx._backend.resolve_nprobe(idx._state, nprobe)
         # rerank requests must reproduce the direct path's shortlist of
         # max(rerank, k) candidates, so that size is part of the group
         # key and _run_batch clamps k_run to it.  Requests with
@@ -1424,6 +1463,13 @@ class QueryEngine:
                     },
                 },
             }
+            tier = {
+                nm: ix._backend.tier_stats(ix._state)
+                for nm, ix in self._indexes.items()
+                if ix.backend == "tiered_ivf"
+            }
+            if tier:
+                gauges["tier"] = tier
             return gauges
 
     def _notify_work(self) -> None:
@@ -1549,7 +1595,7 @@ class QueryEngine:
             idx = self._indexes.get(name)
             costed = idx is not None
             if costed:
-                sizes = self._live_list_sizes(name, idx)
+                sizes = self._billed_list_sizes(name, idx)
         row_cost = self._billed_row_cost(group)
 
         chunks: "list[list[_Request]]" = [[]]
@@ -1731,7 +1777,6 @@ class QueryEngine:
             for i, key in enumerate(keys):
                 cached = self._prep_cache.get(key)
                 if cached is not None:
-                    self._prep_cache.move_to_end(key)
                     row_preps[i] = cached
                     if i < n_real:
                         hit_rows[i] = True
@@ -1761,8 +1806,7 @@ class QueryEngine:
         with self._lock:
             for i in miss:
                 if i < n_real:
-                    self._cache_put(keys[i], row_preps[i])
-            self._evict()
+                    self._prep_cache.put(keys[i], row_preps[i])
         return self._stack_prep(row_preps), hit_rows
 
     def _cache_prep_rows(self, keys, prep: QueryPrep, idxs) -> None:
@@ -1771,29 +1815,11 @@ class QueryEngine:
                       prep.q_sq_norm))
         with self._lock:
             for i in idxs:
-                self._cache_put(keys[i], tuple(a[i] for a in arrs))
-            self._evict()
+                self._prep_cache.put(keys[i], tuple(a[i] for a in arrs))
 
     @staticmethod
     def _entry_nbytes(entry: tuple) -> int:
         return sum(int(a.nbytes) for a in entry)
-
-    def _cache_put(self, key: tuple, entry: tuple) -> None:
-        old = self._prep_cache.pop(key, None)
-        if old is not None:
-            self._prep_cache_nbytes -= self._entry_nbytes(old)
-        self._prep_cache[key] = entry
-        self._prep_cache_nbytes += self._entry_nbytes(entry)
-
-    def _evict(self) -> None:
-        cfg = self.config
-        while self._prep_cache and (
-            self._prep_cache_nbytes > cfg.prep_cache_bytes
-            or (cfg.prep_cache_entries is not None
-                and len(self._prep_cache) > cfg.prep_cache_entries)
-        ):
-            _, entry = self._prep_cache.popitem(last=False)
-            self._prep_cache_nbytes -= self._entry_nbytes(entry)
 
     @staticmethod
     def _stack_prep(row_preps) -> QueryPrep:

@@ -80,6 +80,7 @@ KIND_MARKER = 3
 
 _FAULT_APPEND = faults.point("wal.append", torn=True)
 _FAULT_FSYNC = faults.point("wal.fsync")
+_FAULT_ROTATE = faults.point("wal.rotate")
 _FAULT_CKPT_BEGIN = faults.point("ckpt.begin")
 _FAULT_CKPT_GC = faults.point("ckpt.gc")
 
@@ -196,7 +197,14 @@ class WriteAheadLog:
         self._f.flush()
         os.fsync(self._f.fileno())
         self._f.close()
+        faults.fire(_FAULT_ROTATE)
         self._open_segment()
+        # The new segment's directory entry must be durable BEFORE any
+        # checkpoint GC unlinks the segments it supersedes: a power
+        # loss after drop_segments_through with the dirent still in
+        # the page cache would leave a log whose covered prefix is
+        # gone AND whose active segment never existed.
+        _dir_fsync(self.dir)
         self._rotations += 1
 
     def drop_segments_through(self, seqno: int) -> int:

@@ -415,3 +415,94 @@ def test_diff_refuses_cross_shape_rows(tmp_path):
     assert not any("kernel/a" in f for f in fails)
     assert any("kernel/b" in f for f in fails)
     assert any("plain" in f for f in fails)
+
+
+def _tiered_derived(**over):
+    d = {"qps": 90.0, "qps_hbm": 1500.0, "qps_cold": 80.0,
+         "qps_cover": 130.0, "p99_hbm_ms": 2.8, "p99_cold_ms": 17.0,
+         "p99_warm_ms": 16.0, "p99_cover_ms": 12.0,
+         "hit_rate_warm": 0.48, "hit_rate_cover": 1.0,
+         "hot_bytes": 160000, "total_bytes": 640000,
+         "paged_rows_cold": 25000, "bitwise_cover": 1,
+         "recall_at_10": 0.92}
+    d.update(over)
+    return {k: v for k, v in d.items() if v is not None}
+
+
+def test_tiered_serving_gate(tmp_path):
+    """Rows carrying bitwise_cover (serving/tiered_ivf) are gated
+    structurally on every run including quick: covering results
+    bitwise-equal to HBM, paging actually exercised, cache gauges
+    present and well formed."""
+    good = _write(tmp_path / "good.json", _doc(
+        [_row("serving/tiered_ivf", 1.0, _tiered_derived())],
+        group="serving"))
+    assert check_bench.check(good) == []
+
+    # the gate is structural, so quick files are held to it too
+    diverged = _write(tmp_path / "div.json", _doc(
+        [_row("serving/tiered_ivf", 1.0,
+              _tiered_derived(bitwise_cover=0))],
+        group="serving", quick=True))
+    assert any("diverged from the HBM-resident" in p
+               for p in check_bench.check(diverged))
+
+    unpaged = _write(tmp_path / "unpaged.json", _doc(
+        [_row("serving/tiered_ivf", 1.0,
+              _tiered_derived(hot_bytes=10 ** 9))],
+        group="serving"))
+    assert any("nothing was tiered" in p
+               for p in check_bench.check(unpaged))
+
+    no_gauges = _write(tmp_path / "nog.json", _doc(
+        [_row("serving/tiered_ivf", 1.0,
+              _tiered_derived(hot_bytes=None, total_bytes=None,
+                              hit_rate_warm=None))],
+        group="serving"))
+    probs = check_bench.check(no_gauges)
+    assert any("missing hot_bytes/total_bytes" in p for p in probs)
+    assert any("hit_rate_warm missing" in p for p in probs)
+
+    cold_noop = _write(tmp_path / "coldn.json", _doc(
+        [_row("serving/tiered_ivf", 1.0,
+              _tiered_derived(paged_rows_cold=0))],
+        group="serving"))
+    assert any("transferred no rows" in p
+               for p in check_bench.check(cold_noop))
+
+    missy = _write(tmp_path / "missy.json", _doc(
+        [_row("serving/tiered_ivf", 1.0,
+              _tiered_derived(hit_rate_cover=0.7))],
+        group="serving"))
+    assert any("still missing the cache" in p
+               for p in check_bench.check(missy))
+
+    # rows without bitwise_cover are untouched
+    plain = _write(tmp_path / "plain.json", _doc(
+        [_row("serving/engine_flat_b8", 1.0, {"qps": 100.0})],
+        group="serving"))
+    assert check_bench.check(plain) == []
+
+
+def test_diff_warns_on_one_sided_metrics(tmp_path):
+    """A diffable metric present on only one side of a surviving row
+    warns instead of silently dropping out of the trajectory — in
+    both directions; non-diffed derived fields stay quiet."""
+    base = tmp_path / "base"
+    base.mkdir()
+    _write(base / "BENCH_serving.json", _doc(
+        [_row("s", 0.0, {"qps": 1000.0, "p99_ms": 2.0,
+                         "recall_at_10": 0.9, "clients": 32})],
+        group="serving"))
+    cur = _write(tmp_path / "BENCH_serving.json", _doc(
+        [_row("s", 0.0, {"qps": 990.0, "p50_ms": 1.0,
+                         "recall_at_10": 0.9, "row_budget": 5})],
+        group="serving"))
+    fails, warns = check_bench.diff(cur, str(base), 1.5, 3.0)
+    assert fails == []
+    gone = [w for w in warns if "only in the baseline" in w]
+    new = [w for w in warns if "only in the current" in w]
+    assert len(gone) == 1 and "p99_ms" in gone[0]
+    assert len(new) == 1 and "p50_ms" in new[0]
+    # metadata fields (clients, row_budget) never warn
+    assert not any("clients" in w or "row_budget" in w for w in warns)

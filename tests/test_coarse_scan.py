@@ -303,3 +303,98 @@ def test_engine_batched_coarse_matches_direct_under_mutations(
     ds, dids = idx.search(Qm, k=10, **kw)
     assert np.array_equal(es, np.asarray(ds))
     assert np.array_equal(eids, np.asarray(dids))
+
+
+# ---------------------------------------------------------------------------
+# Tombstone coherence of the coarse cache on IVF partial probes
+# ---------------------------------------------------------------------------
+
+
+def test_ivf_coarse_partial_probe_respects_tombstones(backend_setup):
+    """Tombstoned rows must vanish from the coarse gathered path the
+    moment they are deleted: the int8 first pass scores candidates the
+    pre-DMA drop already masked, so a dead row can neither surface in
+    the shortlist nor displace a live candidate from it.  Covers every
+    shortlist regime (clamped-away, serving-sized) on the gathered
+    route (nprobe < nlist)."""
+    X, Qm, cfg, model, kb = backend_setup
+    idx = AshIndex.build(kb, X, cfg, backend="ivf", model=model)
+    dead = np.arange(0, 600, 3)
+    assert idx.delete(dead) == dead.size
+    for kw in (
+        dict(coarse="int8", shortlist=idx.n),  # clamp-away regime
+        dict(coarse="int8", shortlist=64),  # real first pass
+    ):
+        s, ids = idx.search(Qm, k=10, nprobe=3, **kw)
+        assert not np.isin(np.asarray(ids), dead).any(), kw
+
+
+def test_ivf_coarse_after_delete_compact_matches_fresh(backend_setup):
+    """delete -> compact -> coarse partial probe == a fresh build over
+    the survivors (same model), scores bitwise and ids after the
+    monotonic survivor mapping.  Compact rebuilds the CoarseCodes
+    cache over the surviving rows only — its corpus mean is a global
+    reduction, so a stale or partially-masked cache would shift every
+    coarse score, not just the deleted rows'."""
+    X, Qm, cfg, model, kb = backend_setup
+    idx = AshIndex.build(kb, X, cfg, backend="ivf", model=model)
+    dead = np.arange(0, 600, 3)
+    idx.delete(dead)
+    idx.compact()
+    surv = np.setdiff1d(np.arange(X.shape[0]), dead)
+    fresh = AshIndex.build(
+        kb, X[surv], cfg, backend="ivf", model=model
+    )
+    for kw in (
+        dict(coarse="int8", shortlist=64),
+        dict(coarse="int8", shortlist=idx.n),
+    ):
+        s_m, i_m = idx.search(Qm, k=10, nprobe=3, **kw)
+        s_f, i_f = fresh.search(Qm, k=10, nprobe=3, **kw)
+        i_f = np.asarray(i_f)
+        mapped = np.where(i_f < 0, -1, surv[np.maximum(i_f, 0)])
+        np.testing.assert_array_equal(
+            np.asarray(s_m), np.asarray(s_f), err_msg=str(kw)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(i_m), mapped, err_msg=str(kw)
+        )
+
+
+# ---------------------------------------------------------------------------
+# Sharded coarse shortlist clamp across shard counts
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_shards", (1, 2, 4))
+@pytest.mark.parametrize("n_rows", (2999, 3000))
+def test_sharded_coarse_clamp_parity_non_dividing(
+    backend_setup, n_shards, n_rows
+):
+    """The per-shard covering clamp (L >= n_local skips the coarse
+    stage) must hold per SHARD, not per corpus: with row counts that
+    do not divide the mesh, the padded last shard's local n differs
+    from the rest, and a corpus-level clamp would run the coarse
+    stage on some shards but not others.  Parity bar: sharded coarse
+    with a covering shortlist == flat asymmetric, bit for bit, at
+    1/2/4 shards for both dividing and non-dividing row counts."""
+    X, Qm, cfg, model, kb = backend_setup
+    if n_shards > jax.device_count():
+        pytest.skip("needs more devices")
+    Xr = X[:n_rows]
+    flat = AshIndex.build(kb, Xr, cfg, metric="dot", model=model)
+    fs, fids = flat.search(Qm, k=10)
+    mesh = Mesh(np.array(jax.devices()[:n_shards]), ("data",))
+    si = AshIndex.build(
+        kb, Xr, cfg, backend="sharded", model=model, mesh=mesh,
+        axes=("data",),
+    )
+    ss, sids = si.search(Qm, k=10, coarse="int8", shortlist=si.n)
+    np.testing.assert_array_equal(np.asarray(ss), np.asarray(fs))
+    np.testing.assert_array_equal(np.asarray(sids), np.asarray(fids))
+    # a serving-sized shortlist stays well-formed on the padded mesh:
+    # k live ids per query, no pad sentinel leaks
+    ps, pids = si.search(Qm, k=10, coarse="int8", shortlist=64)
+    pids = np.asarray(pids)
+    assert pids.shape == (Qm.shape[0], 10)
+    assert (pids >= 0).all() and (pids < n_rows).all()

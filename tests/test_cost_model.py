@@ -377,3 +377,59 @@ def test_uncosted_paths_unaffected(setup):
     costed.flush()
     t.result()
     assert t.stats.scanned_rows == 0
+
+
+def test_deadline_counted_per_ticket_at_chunk_resolve(setup):
+    """A budget split resolves each chunk at its own time: a ticket
+    whose chunk lands before its deadline is never marked missed just
+    because a LATER chunk of the same flush ran long, a ticket whose
+    chunk resolves late is, and each ticket is counted exactly once
+    in ``stats.deadline_missed`` — never once per chunk."""
+    index, Qm = setup
+    engine = _engine(setup, row_budget=12)
+    sizes = np.array([6] * NLIST, dtype=np.int64)
+    engine._live_list_sizes = lambda name, idx: sizes
+
+    # warm the (bucket 4, k 10, nprobe 2) trace so the first chunk's
+    # resolve time is millisecond-scale, far inside its deadline
+    t = engine.submit(Qm[:4], k=10, nprobe=2)
+    engine.flush()
+    t.result(timeout=60.0)
+
+    # fabricate disjoint probe pairs (12 fresh rows per request, the
+    # 12-row budget splits one request per chunk); probes only steer
+    # billing/planning — scoring reprobes in-graph from the queries
+    pairs = iter([[0, 1], [2, 3], [4, 5]])
+    engine._host_probe = lambda name, idx, q, nprobe: np.tile(
+        np.asarray(next(pairs), dtype=np.int32), (q.shape[0], 1)
+    )
+    # chunks run FIFO; stall every chunk after the first so the same
+    # 0.6 s deadline lands differently chunk by chunk
+    real_run = engine._run_batch
+    ran = []
+
+    def staggered(group, chunk, reason, **kw):
+        if ran:
+            time.sleep(1.0)
+        ran.append(len(chunk))
+        return real_run(group, chunk, reason, **kw)
+
+    engine._run_batch = staggered
+
+    engine.driven = True  # queue without flushing
+    t0 = engine.submit(Qm[:4], k=10, nprobe=2, deadline_s=0.6)
+    t1 = engine.submit(Qm[4:8], k=10, nprobe=2, deadline_s=0.6)
+    t2 = engine.submit(Qm[8:12], k=10, nprobe=2, deadline_s=0.0)
+    engine.driven = False
+    before = engine.stats.deadline_missed
+    engine.flush()
+    for tk in (t0, t1, t2):
+        tk.result(timeout=60.0)
+
+    assert ran == [1, 1, 1]  # three budget chunks, one request each
+    # chunk 0 resolved within t0's deadline; chunk 1 resolved past
+    # the SAME deadline value; t2's deadline was already due
+    assert not t0.stats.deadline_missed
+    assert t1.stats.deadline_missed
+    assert t2.stats.deadline_missed
+    assert engine.stats.deadline_missed - before == 2

@@ -72,7 +72,7 @@ def _wait_until(pred, timeout=10.0, interval=0.002):
 # ---------------------------------------------------------------------
 
 EXPECTED_POINTS = {
-    "wal.append", "wal.fsync",
+    "wal.append", "wal.fsync", "wal.rotate",
     "engine.apply", "engine.apply.logged", "engine.apply.applied",
     "ckpt.begin", "ckpt.gc",
     "save.replace", "save.between_replace",

@@ -30,7 +30,13 @@ throughput half additionally requires an accelerator ``platform``
 stamp (not ``cpu``): XLA:CPU lowers both passes to the same-size f32
 BLAS GEMM, so the int8 win only exists where an integer MXU runs the
 coarse scan — CPU rows track qps honestly but are held only to the
-recall half.
+recall half.  Tiered-IVF serving rows (marked by a ``bitwise_cover``
+derived field, e.g. ``serving/tiered_ivf``) are gated structurally on
+every run including quick: a covering hot-set budget must reproduce
+the HBM-resident results bit for bit, the paged configuration must
+have actually paged (``total_bytes > hot_bytes``, cold rows
+transferred), and the cache-gauge rates must be present and well
+formed.
 
 Trajectory diffing (``--baseline DIR``) compares each file against the
 same-named snapshot in DIR row by row:
@@ -48,7 +54,10 @@ same-named snapshot in DIR row by row:
     useless — 0.99 -> 0.97 is a 1.02x "slowdown" but a real quality
     regression.
   * rows present in the baseline but missing from the current file
-    warn (the trajectory would silently truncate otherwise).
+    warn (the trajectory would silently truncate otherwise); so does
+    a diffable metric present on only one side of a surviving row —
+    in either direction — instead of silently dropping out of the
+    comparison.
   * files whose ``quick`` mode differs from the baseline's are skipped
     with a note — quick (CI-smoke) and full-size numbers are not
     comparable.
@@ -221,6 +230,63 @@ def _coarse_serving_problems(
     return problems
 
 
+def _tiered_serving_problems(path: str, rows: "dict[str, dict]") -> list[str]:
+    """Structural gate for tiered-IVF serving rows (keyed on the
+    ``bitwise_cover`` derived field, not row names): a covering hot-set
+    budget must reproduce the HBM-resident results bit for bit
+    (``bitwise_cover == 1`` and a saturated cover-pass hit rate), and
+    the paged configuration must actually have paged — a payload
+    larger than the hot-set budget, cold-pass rows transferred, and
+    the cache gauges present to prove it.  These are correctness
+    claims, not perf bars, so they hold on quick files too."""
+    problems = []
+    for name, r in sorted(rows.items()):
+        der = r.get("derived") or {}
+        bitwise = _num_of(der, "bitwise_cover")
+        if bitwise is None:
+            continue
+        if bitwise != 1:
+            problems.append(
+                f"{path}: {name} bitwise_cover {bitwise:g} != 1 "
+                f"(covering-budget tiered results diverged from the "
+                f"HBM-resident index)"
+            )
+        hot, total = _num_of(der, "hot_bytes"), _num_of(der, "total_bytes")
+        if hot is None or total is None:
+            problems.append(
+                f"{path}: {name} missing hot_bytes/total_bytes cache "
+                f"gauges"
+            )
+        elif total <= hot:
+            problems.append(
+                f"{path}: {name} total_bytes {total:g} <= hot_bytes "
+                f"{hot:g} (paged configuration never exceeded its "
+                f"hot-set budget — nothing was tiered)"
+            )
+        paged = _num_of(der, "paged_rows_cold")
+        if paged is None or paged <= 0:
+            problems.append(
+                f"{path}: {name} paged_rows_cold "
+                f"{'missing' if paged is None else '%g' % paged} "
+                f"(cold pass transferred no rows)"
+            )
+        for key in ("hit_rate_warm", "hit_rate_cover"):
+            v = _num_of(der, key)
+            if v is None or not 0.0 <= v <= 1.0:
+                problems.append(
+                    f"{path}: {name} {key} "
+                    f"{'missing' if v is None else '%g' % v} "
+                    f"(expected a rate in [0, 1])"
+                )
+        cover = _num_of(der, "hit_rate_cover")
+        if cover is not None and cover < 0.99:
+            problems.append(
+                f"{path}: {name} hit_rate_cover {cover:g} < 0.99 "
+                f"(covering budget still missing the cache)"
+            )
+    return problems
+
+
 def check(path: str) -> list[str]:
     """Problems found in one bench JSON file ([] == healthy)."""
     try:
@@ -250,6 +316,7 @@ def check(path: str) -> list[str]:
         else:
             problems.extend(_invariant_problems(path, r))
             healthy[r["name"]] = r
+    problems.extend(_tiered_serving_problems(path, healthy))
     if not doc.get("quick"):
         problems.extend(_ivf_cost_problems(path, healthy))
         problems.extend(_coarse_serving_problems(path, healthy))
@@ -339,6 +406,27 @@ def _row_regressions(name: str, base: dict, cur: dict) -> list[tuple]:
     return out
 
 
+def _diffable_keys(r: dict) -> set[str]:
+    """Derived metric keys the trajectory diff would compare: the
+    throughputs, the latencies and the recall points."""
+    der = r.get("derived") or {}
+    return {
+        k for k in der
+        if k == "qps" or k.endswith("_per_s") or k.endswith("_ms")
+        or k.startswith("recall_at")
+    }
+
+
+def _one_sided_metrics(base: dict, cur: dict) -> list[tuple[str, str]]:
+    """[(metric, side)] for diffable metrics present on only one side
+    of a row comparison.  The ratio loops skip these silently, so a
+    metric that vanishes (or appears) would otherwise drop out of the
+    trajectory without a trace — surface it as a warning instead."""
+    b, c = _diffable_keys(base), _diffable_keys(cur)
+    return ([(k, "baseline") for k in sorted(b - c)]
+            + [(k, "current") for k in sorted(c - b)])
+
+
 def diff(
     path: str, baseline_dir: str, warn_ratio: float, fail_ratio: float
 ) -> tuple[list[str], list[str]]:
@@ -401,6 +489,11 @@ def diff(
                     f"comparable, diff refused"
                 )
                 continue
+            for metric, side in _one_sided_metrics(base_row, cur):
+                warnings.append(
+                    f"{path}: {name} metric {metric} present only in "
+                    f"the {side} row vs {base_path} — not diffed"
+                )
             for metric, drop in _recall_drops(base_row, cur):
                 msg = (
                     f"{path}: {name} {metric} dropped "
